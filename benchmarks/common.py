@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark harness. Each fig*.py module exposes
+run() -> list[(name, value, derived_note)] and prints nothing on its own."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def time_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.monotonic()
+    for _ in range(iters):
+        fn()
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")

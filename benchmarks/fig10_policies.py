@@ -1,0 +1,21 @@
+"""Fig. 10 — scheduling policy ablation: S-EDF vs D-EDF vs naive EDF."""
+from repro.core.metrics import max_goodput
+from repro.sim.policies import simulate
+from repro.traces.qwentrace import TraceConfig, generate
+
+RATES = [0.5, 1, 2, 4, 6, 8, 12, 16]
+
+
+def run():
+    rows = []
+    for name, system in (("s-edf", "flowprefill"),
+                         ("d-edf", "flowprefill-dedf"),
+                         ("edf", "flowprefill-edf")):
+        atts = []
+        for rate in RATES:
+            reqs = generate(TraceConfig(rate=rate, duration=60, seed=3))
+            atts.append(simulate(system, reqs).attainment)
+        rows.append((f"fig10/{name}/goodput_req_s",
+                     round(max_goodput(RATES, atts), 2),
+                     "att=" + "|".join(f"{a:.2f}" for a in atts)))
+    return rows

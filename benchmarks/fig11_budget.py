@@ -1,0 +1,20 @@
+"""Fig. 11 — SLO-aware batching under varying batch token budgets vs no
+batching: attainment (risk grows with budget) and throughput (no batching
+lowest, diminishing returns past 4K)."""
+from repro.sim.policies import simulate
+from repro.traces.qwentrace import TraceConfig, generate
+
+
+def run(rate=40, duration=60, seed=3):
+    rows = []
+    reqs = generate(TraceConfig(rate=rate, duration=duration, seed=seed))
+    for name, system, kw in (
+            ("none", "flowprefill-nobatch", {}),
+            ("2k", "flowprefill", dict(batch_budget=2048)),
+            ("4k", "flowprefill", dict(batch_budget=4096)),
+            ("8k", "flowprefill", dict(batch_budget=8192))):
+        res = simulate(system, reqs, **kw)
+        thr = len(res.requests) / res.makespan
+        rows.append((f"fig11/budget_{name}/throughput_req_s", round(thr, 2),
+                     f"attainment={res.attainment:.3f} rate={rate}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 13 — TTFT prediction accuracy: polynomial offline fit vs realized
+prefill latency on trace-distributed lengths."""
+import numpy as np
+
+from repro.core.predictor import TTFTPredictor
+from repro.sim.costmodel import A800, LLAMA3_8B, PrefillCostModel
+from repro.traces.qwentrace import TraceConfig, generate
+
+
+def run():
+    cost = PrefillCostModel(LLAMA3_8B, A800)
+    pred = TTFTPredictor.from_cost_model(cost.prefill_time, max_tokens=32768)
+    reqs = generate(TraceConfig(rate=10, duration=60, seed=7))
+    errs = []
+    for r in reqs:
+        actual = cost.prefill_time(r.num_tokens)
+        errs.append(abs(pred.predict(r.num_tokens) - actual) / max(actual, 1e-9))
+    return [
+        ("fig13/predictor_mape_pct", round(float(np.mean(errs)) * 100, 2),
+         f"n={len(errs)} p99={np.percentile(errs, 99)*100:.2f}%"),
+    ]

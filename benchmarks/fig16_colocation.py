@@ -1,0 +1,32 @@
+"""Fig. 16 — PD-colocation (simplified model): prefill and decode share the
+device; decode load taxes prefill efficiency. We model colocation as a
+utilization tax on the prefill cost model (decode steals ~35% of compute) and
+compare FlowPrefill vs vLLM-CP2K on TTFT attainment. TBT effects are noted
+qualitatively (EXPERIMENTS.md) — decode optimization is out of the paper's
+scope (§4)."""
+import dataclasses
+
+from repro.core.metrics import max_goodput
+from repro.sim.costmodel import A800
+from repro.sim.policies import simulate
+from repro.traces.qwentrace import TraceConfig, generate
+
+RATES = [0.5, 1, 2, 4, 6, 8]
+COLOCATED = dataclasses.replace(A800, eff_c=A800.eff_c * 0.65,
+                                hbm_bw=A800.hbm_bw * 0.65)
+
+
+def run():
+    rows = []
+    for name, system in (("flowprefill", "flowprefill"),
+                         ("vllm-cp2k", "distserve-cp2k")):
+        atts = []
+        for rate in RATES:
+            # colocated: half the GPUs -> relaxed TTFT SLO (3x, paper §6.5)
+            reqs = generate(TraceConfig(rate=rate, duration=50, seed=3,
+                                        slo_scale=3.0))
+            atts.append(simulate(system, reqs, hw=COLOCATED).attainment)
+        rows.append((f"fig16/{name}/goodput_req_s",
+                     round(max_goodput(RATES, atts), 2),
+                     "att=" + "|".join(f"{a:.2f}" for a in atts)))
+    return rows

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure. Prints
+``name,value,derived`` CSV. ``python -m benchmarks.run [--only fig9] [--real]``.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
+                        fig10_policies, fig11_budget, fig12_blocking,
+                        fig13_predictor, fig14_single_slo,
+                        fig15_chunk_interplay, fig16_colocation, fig17_moe,
+                        roofline)
+
+MODULES = [
+    ("fig3", fig3_chunk_tradeoff),
+    ("fig4", fig4_batching),
+    ("fig9", fig9_goodput),
+    ("fig10", fig10_policies),
+    ("fig11", fig11_budget),
+    ("fig12", fig12_blocking),
+    ("fig13", fig13_predictor),
+    ("fig14", fig14_single_slo),
+    ("fig15", fig15_chunk_interplay),
+    ("fig16", fig16_colocation),
+    ("fig17", fig17_moe),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--real", action="store_true",
+                    help="also run real-executor measurements (fig12)")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.monotonic()
+        try:
+            for row in mod.run():
+                print(f"{row[0]},{row[1]},{row[2]}")
+            print(f"{name}/_elapsed_s,{time.monotonic()-t0:.1f},harness")
+        except Exception as e:  # noqa
+            failures += 1
+            print(f"{name}/_error,1,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        if args.real and hasattr(mod, "run_real"):
+            try:
+                for row in mod.run_real():
+                    print(f"{row[0]},{row[1]},{row[2]}")
+            except Exception as e:  # noqa
+                failures += 1
+                print(f"{name}/_real_error,1,{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.core.events import Event, EventKind, EventMonitor
+from repro.core.metrics import (attainment_by_task, max_goodput, min_slo_scale,
+                                slo_attainment, ttft_stats)
+from repro.core.predictor import TTFTPredictor
+from repro.core.preemption import BlockingStats, PreemptionSignal, SyncCounter
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import (Action, Decision, SchedulerCore,
+                                  slo_aware_batching)

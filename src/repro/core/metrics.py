@@ -1,0 +1,71 @@
+"""SLO attainment and goodput metrics (FlowPrefill §6.1).
+
+Goodput = maximum sustainable request rate at an SLO-attainment goal (90%).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+def slo_attainment(requests: Sequence[Request]) -> float:
+    done = [r for r in requests if r.arrival is not None]
+    if not done:
+        return 1.0
+    return sum(1 for r in done if r.slo_met) / len(done)
+
+
+def attainment_by_task(requests: Sequence[Request]) -> Dict[str, float]:
+    by: Dict[str, List[Request]] = {}
+    for r in requests:
+        by.setdefault(r.task_type, []).append(r)
+    return {t: slo_attainment(rs) for t, rs in by.items()}
+
+
+def ttft_stats(requests: Sequence[Request]) -> Dict[str, float]:
+    ts = [r.ttft for r in requests if r.ttft is not None]
+    if not ts:
+        return {"mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+    a = np.asarray(ts)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)), "max": float(a.max())}
+
+
+def max_goodput(rates: Sequence[float], attainments: Sequence[float],
+                target: float = 0.9) -> float:
+    """Largest rate whose attainment >= target, with linear interpolation to
+    the crossing point (the vertical lines in the paper's Fig. 9)."""
+    rates = np.asarray(rates, dtype=np.float64)
+    att = np.asarray(attainments, dtype=np.float64)
+    order = np.argsort(rates)
+    rates, att = rates[order], att[order]
+    if att[0] < target:
+        return 0.0
+    best = rates[0]
+    for i in range(1, len(rates)):
+        if att[i] >= target:
+            best = rates[i]
+        else:
+            # interpolate crossing between i-1 and i
+            r0, r1, a0, a1 = rates[i - 1], rates[i], att[i - 1], att[i]
+            if a0 != a1:
+                best = r0 + (a0 - target) * (r1 - r0) / (a0 - a1)
+            break
+    return float(best)
+
+
+def min_slo_scale(scales: Sequence[float], attainments: Sequence[float],
+                  target: float = 0.9) -> float:
+    """Smallest SLO scale whose attainment >= target (paper Fig. 9 row 2)."""
+    scales = np.asarray(scales, dtype=np.float64)
+    att = np.asarray(attainments, dtype=np.float64)
+    order = np.argsort(scales)
+    scales, att = scales[order], att[order]
+    for s, a in zip(scales, att):
+        if a >= target:
+            return float(s)
+    return float("inf")

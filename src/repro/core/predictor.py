@@ -1,0 +1,55 @@
+"""Lightweight TTFT predictor (FlowPrefill §6.4, Fig. 13).
+
+A polynomial fitted to offline prefill profiles: x = token count, y = prefill
+latency. Degree 2 captures the linear GEMM term plus the quadratic attention
+term; in the PD-disaggregated setting prefill latency is undisturbed by decode,
+so this simple fit suffices (validated in benchmarks/fig13_predictor.py).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass
+class TTFTPredictor:
+    coeffs: np.ndarray                   # np.polyval order (highest first)
+    floor: float = 0.0                   # minimum latency (dispatch overhead)
+
+    @classmethod
+    def fit(cls, tokens: Sequence[float], latencies: Sequence[float],
+            degree: int = 2) -> "TTFTPredictor":
+        tokens = np.asarray(tokens, dtype=np.float64)
+        latencies = np.asarray(latencies, dtype=np.float64)
+        coeffs = np.polyfit(tokens, latencies, degree)
+        floor = float(max(latencies.min() * 0.5, 0.0))
+        return cls(coeffs=coeffs, floor=floor)
+
+    @classmethod
+    def from_cost_model(cls, cost_fn, max_tokens: int = 65536,
+                        n_points: int = 64, degree: int = 2) -> "TTFTPredictor":
+        """Fit against an analytic cost model (sim calibration path)."""
+        xs = np.linspace(64, max_tokens, n_points)
+        ys = np.array([cost_fn(int(x)) for x in xs])
+        return cls.fit(xs, ys, degree)
+
+    def predict(self, num_tokens: float) -> float:
+        y = float(np.polyval(self.coeffs, max(float(num_tokens), 0.0)))
+        return max(y, self.floor)
+
+    def __call__(self, num_tokens: float) -> float:
+        return self.predict(num_tokens)
+
+    # --- persistence (offline fit shipped with a deployment) ---------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"coeffs": self.coeffs.tolist(), "floor": self.floor}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "TTFTPredictor":
+        with open(path) as f:
+            d = json.load(f)
+        return cls(coeffs=np.asarray(d["coeffs"]), floor=d["floor"])

@@ -1,0 +1,69 @@
+"""Request model shared by the scheduler core, the real serving runtime, and
+the discrete-event simulator."""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_rid_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    DONE = "done"
+    DROPPED = "dropped"
+
+
+@dataclass
+class Request:
+    num_tokens: int                      # prompt length
+    slo: float                           # TTFT SLO (seconds)
+    arrival: float = 0.0
+    task_type: str = "text"
+    rid: int = field(default_factory=lambda: next(_rid_counter))
+    state: RequestState = RequestState.WAITING
+
+    # runtime-owned progress (operator granularity)
+    ops_done: int = 0                    # operators completed so far
+    ops_total: int = 0                   # set when execution plan is known
+    tokens_done: int = 0                 # prefill tokens fully processed (chunking)
+
+    # batching: rids co-executing with this request (paper Alg. 1)
+    batch_members: List[int] = field(default_factory=list)
+    batch_tokens: int = 0                # aggregate token count of the batch
+
+    # outcome
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    def __post_init__(self):
+        if self.batch_tokens == 0:
+            self.batch_tokens = self.num_tokens
+
+    @property
+    def deadline(self) -> float:
+        return self.arrival + self.slo
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    @property
+    def slo_met(self) -> bool:
+        return self.ttft is not None and self.ttft <= self.slo + 1e-9
+
+    def remaining_fraction(self) -> float:
+        """Fraction of prefill work left (1.0 = untouched)."""
+        if self.ops_total <= 0:
+            return 1.0
+        return max(0.0, 1.0 - self.ops_done / self.ops_total)
+
+    def remaining_tokens(self) -> float:
+        """Token-equivalent remaining work, used by the TTFT predictor."""
+        return self.batch_tokens * self.remaining_fraction()

@@ -1,0 +1,197 @@
+"""Event-driven scheduling core (FlowPrefill §5.2) — pure policy logic.
+
+This module is deliberately free of threads and devices: the same functions
+drive BOTH the real serving runtime (repro/serving/prefill_instance.py) and the
+discrete-event simulator (repro/sim/) so the evaluated policy is the deployed
+policy.
+
+Implements, paper-faithfully:
+  * S-EDF priority (Eq. 3):  priority = sgn(slack) / deadline,
+    slack = deadline - now - TTFT_hat
+  * SLO-aware batching (Algorithm 1)
+  * The per-event scheduling round of Algorithm 2 (returns control commands;
+    the Execution Pool carries them out)
+Ablation policies (Fig. 10): naive EDF and D-EDF; plus FCFS for the DistServe
+baseline.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.predictor import TTFTPredictor
+from repro.core.request import Request, RequestState
+
+PriorityFn = Callable[[Request, float, Callable[[float], float]], float]
+
+
+# ---------------------------------------------------------------------------
+# Priority policies
+# ---------------------------------------------------------------------------
+
+
+def _sgn(x: float) -> float:
+    return 1.0 if x >= 0.0 else -1.0
+
+
+def sedf_priority(req: Request, now: float, predict) -> float:
+    """Slack-aware EDF (the paper's policy, Eq. 3)."""
+    slack = req.deadline - now - predict(req.remaining_tokens())
+    return _sgn(slack) / max(req.deadline, 1e-9)
+
+
+def dedf_priority(req: Request, now: float, predict) -> float:
+    """Deadline-aware EDF ablation: numerator sgn(deadline - now)."""
+    return _sgn(req.deadline - now) / max(req.deadline, 1e-9)
+
+
+def edf_priority(req: Request, now: float, predict) -> float:
+    """Naive EDF: earliest deadline first, no feasibility awareness."""
+    return 1.0 / max(req.deadline, 1e-9)
+
+
+def fcfs_priority(req: Request, now: float, predict) -> float:
+    return -req.arrival
+
+
+POLICIES = {
+    "s-edf": sedf_priority,
+    "d-edf": dedf_priority,
+    "edf": edf_priority,
+    "fcfs": fcfs_priority,
+}
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware batching — Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def slo_aware_batching(
+    H: Request,
+    candidates: Sequence[Request],
+    budget: int,
+    now: float,
+    predict: Callable[[float], float],
+) -> Tuple[Request, List[Request]]:
+    """Paper Algorithm 1. Returns (H with updated aggregate tokens, batch list
+    including H). Candidates are admitted while H's remaining time covers the
+    predicted latency of the aggregate batch and the token budget holds."""
+    batch = [H]
+    t_remain = H.deadline - now
+    n = H.num_tokens
+    for r in candidates:
+        if r.rid == H.rid:
+            continue
+        n_new = n + r.num_tokens
+        latency = predict(n_new)
+        if t_remain > latency and n_new < budget:
+            batch.append(r)
+            n = n_new
+    H.batch_tokens = n
+    return H, batch
+
+
+def greedy_batching(
+    H: Request,
+    candidates: Sequence[Request],
+    budget: int,
+) -> Tuple[Request, List[Request]]:
+    """Token-budget-only batching (vLLM/Sarathi continuous-batching semantics,
+    used by the DistServe-CP baselines): pack while under budget, no deadline
+    feasibility check."""
+    batch = [H]
+    n = H.num_tokens
+    for r in candidates:
+        if r.rid == H.rid:
+            continue
+        if n + r.num_tokens < budget:
+            batch.append(r)
+            n += r.num_tokens
+    H.batch_tokens = n
+    return H, batch
+
+
+# ---------------------------------------------------------------------------
+# Scheduling round — Algorithm 2 (one event = one round)
+# ---------------------------------------------------------------------------
+
+
+class Action(enum.Enum):
+    NOOP = "noop"
+    SUBMIT = "submit"          # new batch starts (H was waiting)
+    RESUME = "resume"          # H was preempted
+    # preemption of the running task is orthogonal and recorded separately
+
+
+@dataclass
+class Decision:
+    action: Action
+    batch: List[Request] = field(default_factory=list)    # for SUBMIT
+    target: Optional[Request] = None                      # H (SUBMIT/RESUME)
+    preempt: Optional[Request] = None                     # E to suspend first
+
+    @property
+    def is_noop(self) -> bool:
+        return self.action == Action.NOOP and self.preempt is None
+
+
+@dataclass
+class SchedulerCore:
+    """State-free policy engine. The runtime owns the queues and passes views."""
+    predictor: TTFTPredictor
+    policy: str = "s-edf"
+    batch_budget: int = 4096              # G, tokens (Fig. 11 sweeps this)
+    enable_batching: bool = True
+    batching_mode: str = "slo"            # "slo" (Alg. 1) | "greedy" (baselines)
+    batch_running: bool = False           # paper Alg.2 line 14 admits E into C;
+                                          # default off: re-batching the running
+                                          # task would discard its progress
+
+    def priority(self, req: Request, now: float) -> float:
+        return POLICIES[self.policy](req, now, self.predictor.predict)
+
+    def rank(self, requests: Sequence[Request], now: float) -> List[Request]:
+        """Descending priority; deterministic tie-break (deadline, rid)."""
+        return sorted(requests,
+                      key=lambda r: (-self.priority(r, now), r.deadline, r.rid))
+
+    def schedule_round(
+        self,
+        now: float,
+        waiting: Sequence[Request],
+        preempted: Sequence[Request],
+        running: Optional[Request],
+    ) -> Decision:
+        """One event-triggered round of Algorithm 2 (lines 7–26)."""
+        q_all: List[Request] = list(waiting) + list(preempted)
+        if running is not None:
+            q_all.append(running)
+        if not q_all:
+            return Decision(Action.NOOP)
+
+        ranked = self.rank(q_all, now)
+        H = ranked[0]
+
+        batch = [H]
+        waiting_ids = {r.rid for r in waiting}
+        if H.rid in waiting_ids and self.enable_batching:
+            cands = [r for r in ranked
+                     if r.rid != H.rid and r.rid in waiting_ids]
+            if self.batch_running and running is not None:
+                cands.append(running)
+            if self.batching_mode == "greedy":
+                H, batch = greedy_batching(H, cands, self.batch_budget)
+            else:
+                H, batch = slo_aware_batching(
+                    H, cands, self.batch_budget, now, self.predictor.predict)
+
+        if running is not None and H.rid == running.rid:
+            return Decision(Action.NOOP)                   # already optimal
+
+        preempt = running                                  # may be None
+        if H.rid in waiting_ids:
+            return Decision(Action.SUBMIT, batch=batch, target=H,
+                            preempt=preempt)
+        return Decision(Action.RESUME, target=H, preempt=preempt)

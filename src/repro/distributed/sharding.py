@@ -1,0 +1,178 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code tags tensors with *logical* dimension names via ``logical(x, *dims)``.
+A rule set maps logical dims -> mesh axes. Outside a mesh context the tag is a
+no-op, so the same model code runs on one CPU device and on a 512-chip mesh.
+
+Divisibility guard: if a tensor dim is not divisible by the mapped mesh-axis
+size (e.g. kv_heads=2 on a 16-way model axis), that dim silently falls back to
+replication. This keeps one rule set valid across all 10 assigned architectures
+(kv heads range over {0,1,2,4,8,20}).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+_CTX = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping of logical dim names to mesh axis names."""
+
+    rules: Dict[str, AxisVal] = field(default_factory=dict)
+
+    def get(self, name: str) -> AxisVal:
+        return self.rules.get(name)
+
+    def with_overrides(self, **kw: AxisVal) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return ShardingRules(d)
+
+
+def train_rules(multi_pod: bool = False, fsdp: bool = True) -> ShardingRules:
+    """DP(+pod) over batch, FSDP over d_model param dim, TP over heads/ff/vocab,
+    EP over experts."""
+    batch: AxisVal = ("pod", "data") if multi_pod else "data"
+    return ShardingRules({
+        # --- activations ---
+        "act_batch": batch,
+        "act_seq": None,
+        "act_d": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_vocab": "model",
+        "act_exp": "model",
+        # --- params ---
+        "d_model": "data" if fsdp else None,   # FSDP shard dim (within pod)
+        "heads_x_hd": "model",                  # (H*hd) projection dim
+        "kv_x_hd": None,                        # K/V proj replicated (K < TP)
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "layers": None,
+        "lru": "model",
+        "ssm_inner": "model",
+        # --- caches ---
+        "cache_batch": batch,
+        "cache_seq": None,
+        "cache_kv_heads": "model",
+        # --- optimizer (ZeRO) ---
+        "zero": "data",
+    })
+
+
+def serve_rules(multi_pod: bool = False, decode_seq_shard: bool = True) -> ShardingRules:
+    """Serving: weight-stationary TP over 'model'; batch DP over 'data';
+    decode KV caches sequence-sharded over 'model' (flash-decode style) so GQA
+    kv_heads < TP degree still scales."""
+    batch: AxisVal = ("pod", "data") if multi_pod else "data"
+    return ShardingRules({
+        "act_batch": batch,
+        "act_seq": None,
+        "act_d": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_vocab": "model",
+        "act_exp": "model",
+        "d_model": None,                         # weights not FSDP-sharded when serving
+        "heads_x_hd": "model",
+        "kv_x_hd": None,
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "layers": None,
+        "lru": "model",
+        "ssm_inner": "model",
+        "cache_batch": batch,
+        "cache_seq": "model" if decode_seq_shard else None,
+        "cache_kv_heads": None if decode_seq_shard else "model",
+        "zero": None,
+    })
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+
+@contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def current() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_CTX, "state", None)
+
+
+def _axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def spec_for(shape: Tuple[int, ...], dims: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: ShardingRules) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    assert len(shape) == len(dims), (shape, dims)
+    out = []
+    used: set = set()
+    for size, name in zip(shape, dims):
+        ax = rules.get(name) if name else None
+        if ax is not None:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in axes):
+                ax = None
+            elif size % _axis_size(mesh, ax) != 0:
+                ax = None
+            else:
+                used.update(axes)
+        out.append(ax)
+    return P(*out)
+
+
+def logical(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Tag an activation with logical dims; applies a sharding constraint when a
+    mesh context is active, else identity."""
+    state = current()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(x.shape, dims, mesh, rules)
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_specs(axes_tree, shapes_tree, mesh: Mesh, rules: ShardingRules):
+    """Map a pytree of logical-dim tuples + matching shapes to PartitionSpecs."""
+    return jax.tree.map(
+        lambda dims, shp: spec_for(tuple(shp), tuple(dims), mesh, rules),
+        axes_tree, shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t),
+    )
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules: ShardingRules):
+    specs = tree_specs(axes_tree, shapes_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,68 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+`impl` selects the execution path:
+  "pallas"            — the TPU kernel (real hardware)
+  "pallas_interpret"  — same kernel body, interpreted on CPU (tests)
+  "xla"               — blocked pure-JAX flash (dry-run lowering path)
+  "ref"               — naive oracle (small shapes only)
+On this container (CPU) the default is interpret for small shapes and xla
+otherwise; on a TPU runtime the default is the kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.decode_attn import flash_decode_attention
+from repro.kernels.flash_prefill import flash_prefill_attention
+from repro.models.layers import blocked_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_impl() -> str:
+    return "pallas" if _on_tpu() else "xla"
+
+
+def prefill_attention(q, k, v, *, q_offset=0, kv_len=None, causal=True,
+                      local_window=0, impl: str | None = None,
+                      block_q=128, block_k=128):
+    """q: (B,Sq,H,hd); k/v: (B,T,K,hd) -> (B,Sq,H,hd)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return flash_prefill_attention(
+            q, k, v, q_offset, kv_len, causal=causal, local_window=local_window,
+            block_q=block_q, block_k=block_k)
+    if impl == "pallas_interpret":
+        return flash_prefill_attention(
+            q, k, v, q_offset, kv_len, causal=causal, local_window=local_window,
+            block_q=block_q, block_k=block_k, interpret=True)
+    if impl == "xla":
+        return blocked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                 local_window=local_window, kv_len=kv_len,
+                                 block=min(1024, max(k.shape[1], 1)))
+    if impl == "ref":
+        return ref_mod.chunked_prefill_attention_ref(
+            q, k, v, q_offset=q_offset, kv_len=kv_len, causal=causal,
+            local_window=local_window)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def decode_attention(q, k, v, kv_len, *, impl: str | None = None, block_k=512):
+    """q: (B,H,hd); k/v: (B,T,K,hd) -> (B,H,hd)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return flash_decode_attention(q, k, v, kv_len, block_k=block_k)
+    if impl == "pallas_interpret":
+        return flash_decode_attention(q, k, v, kv_len, block_k=block_k,
+                                      interpret=True)
+    if impl == "xla":
+        out = blocked_attention(q[:, None], k, v, causal=False, kv_len=kv_len,
+                                block=min(1024, max(k.shape[1], 1)))
+        return out[:, 0]
+    if impl == "ref":
+        return ref_mod.decode_attention_ref(q, k, v, kv_len=kv_len)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels. These are the ground truth the
+kernel tests sweep against (shapes x dtypes, interpret mode)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_prefill_attention_ref(
+    q: jax.Array,            # (B, Sq, H, hd) — current prefill chunk
+    k: jax.Array,            # (B, T, K, hd)  — all KV up to chunk end
+    v: jax.Array,            # (B, T, K, hd)
+    *,
+    q_offset: int | jax.Array = 0,   # absolute position of q[0]
+    kv_len: Optional[int | jax.Array] = None,
+    causal: bool = True,
+    local_window: int = 0,
+) -> jax.Array:
+    """Naive reference: materializes the full score matrix in f32."""
+    B, Sq, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    qg = q.reshape(B, Sq, K, H // K, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskqh,btkh->bkqst", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((Sq, T), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if local_window:
+        mask &= k_pos > q_pos - local_window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    # rows that are fully masked produce 0 (matches kernel's guarded division)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m_safe)
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkqst,btkh->bskqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, hd) — single new token
+    k: jax.Array,            # (B, T, K, hd)
+    v: jax.Array,            # (B, T, K, hd)
+    *,
+    kv_len: int | jax.Array,           # number of valid cache entries
+) -> jax.Array:
+    out = chunked_prefill_attention_ref(
+        q[:, None], k, v, q_offset=jnp.asarray(kv_len) - 1, causal=True)
+    return out[:, 0]

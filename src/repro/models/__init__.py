@@ -1,0 +1,12 @@
+from repro.models.model import (
+    cache_axes,
+    cache_shapes,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    model_shapes,
+    param_axes,
+    param_count,
+    prefill,
+)

@@ -1,0 +1,541 @@
+"""Model building blocks: norms, RoPE, GQA attention (full / local / blocked-flash),
+SwiGLU, grouped MoE dispatch, RG-LRU, Mamba2 SSD, depthwise causal conv.
+
+Pure-functional (params are dict pytrees). Everything here is jit- and
+scan-compatible; sharding is applied by callers via NamedSharding on params and
+activation sharding constraints (repro/distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.scan_ctl import scan as _ctl_scan
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed positional embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / (dim // 2)))
+    pe = jnp.zeros((seq, dim), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores_einsum(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,K,Q,hd)  k: (B,T,K,hd) -> scores (B,K,Q,S,T)."""
+    return jnp.einsum("bskqh,btkh->bkqst", q, k, preferred_element_type=jnp.float32)
+
+
+def naive_attention(
+    q: jax.Array,                  # (B, S, H, hd)
+    k: jax.Array,                  # (B, T, K, hd)
+    v: jax.Array,                  # (B, T, K, hd)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,  # absolute position of q[0] relative to k[0]
+    local_window: int = 0,
+    kv_len: Optional[jax.Array] = None,  # valid kv length (for caches)
+    k_positions: Optional[jax.Array] = None,  # (T,) absolute positions (ring buffers)
+) -> jax.Array:
+    """Reference attention: materializes scores. Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    qg = q.reshape(B, S, K, H // K, hd)
+    scores = _gqa_scores_einsum(qg, k) / math.sqrt(hd)     # (B,K,Q,S,T) f32
+
+    q_pos = jnp.arange(S)[:, None] + q_offset              # (S, 1)
+    if k_positions is not None:
+        k_pos = k_positions[None, :]                       # (1, T)
+    else:
+        k_pos = jnp.arange(T)[None, :]                     # (1, T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if k_positions is not None:
+        mask &= k_pos >= 0                                 # unwritten ring slots
+    if causal:
+        mask &= k_pos <= q_pos
+    if local_window:
+        mask &= k_pos > q_pos - local_window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkqst,btkh->bskqh", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def _flash_mask(S, block, start, q_offset, causal, local_window, kv_len):
+    q_pos = jnp.arange(S)[:, None] + q_offset              # (S,1)
+    k_pos = start + jnp.arange(block)[None, :]             # (1,block)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if local_window:
+        mask &= k_pos > q_pos - local_window
+    return mask
+
+
+def _flash_fwd_impl(qg, kb_t, vb_t, q_offset, kv_len, causal, local_window,
+                    block):
+    """qg: (B,S,K,Q,hd) f32 unscaled; kb_t/vb_t: (nb,B,block,K,hd).
+    Returns (out (B,K,Q,S,hd) f32, lse (B,K,Q,S,1))."""
+    B, S, K, Q, hd = qg.shape
+    scale = 1.0 / math.sqrt(hd)
+    nb = kb_t.shape[0]
+    starts = jnp.arange(nb) * block
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, start = inp
+        s = jnp.einsum("bskqh,btkh->bkqst", qg,
+                       kc.astype(jnp.float32)) * scale
+        mask = _flash_mask(S, block, start, q_offset, causal, local_window,
+                           kv_len)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bkqst,btkh->bkqsh", p, vc.astype(jnp.float32))
+        acc_new = acc * alpha + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, Q, S, 1), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, K, Q, S, 1), dtype=jnp.float32)
+    a0 = jnp.zeros((B, K, Q, S, hd), dtype=jnp.float32)
+    (m, l, acc), _ = _ctl_scan(body, (m0, l0, a0), (kb_t, vb_t, starts))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    lse = jnp.where(l == 0.0, jnp.inf, m_safe + jnp.log(jnp.maximum(l, 1e-30)))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash(qg, kb_t, vb_t, q_offset, kv_len, causal, local_window, block):
+    out, _ = _flash_fwd_impl(qg, kb_t, vb_t, q_offset, kv_len, causal,
+                             local_window, block)
+    return out
+
+
+def _flash_fwd(qg, kb_t, vb_t, q_offset, kv_len, causal, local_window, block):
+    out, lse = _flash_fwd_impl(qg, kb_t, vb_t, q_offset, kv_len, causal,
+                               local_window, block)
+    return out, (qg, kb_t, vb_t, out, lse, q_offset, kv_len)
+
+
+def _flash_bwd(causal, local_window, block, res, dout):
+    """Flash-attention backward: recompute p blockwise from (q,k,lse); store
+    no per-block state. Residuals are O(S*hd) — this is what keeps the remat'd
+    training step's peak memory bounded (EXPERIMENTS.md §Perf E3); the Pallas
+    kernel implements the same algorithm in VMEM on TPU."""
+    qg, kb_t, vb_t, out, lse, q_offset, kv_len = res
+    B, S, K, Q, hd = qg.shape
+    scale = 1.0 / math.sqrt(hd)
+    nb = kb_t.shape[0]
+    starts = jnp.arange(nb) * block
+    dout = dout.astype(jnp.float32)                        # (B,K,Q,S,hd)
+    Drow = jnp.sum(dout * out, axis=-1, keepdims=True)     # (B,K,Q,S,1)
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+    def body(dq, inp):
+        kc, vc, start = inp
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        s = jnp.einsum("bskqh,btkh->bkqst", qg, kc32) * scale
+        mask = _flash_mask(S, block, start, q_offset, causal, local_window,
+                           kv_len)
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - lse_safe), 0.0)          # exact probs
+        dv_blk = jnp.einsum("bkqst,bkqsh->btkh", p, dout)
+        dp = jnp.einsum("bkqsh,btkh->bkqst", dout, vc32)
+        ds = p * (dp - Drow)
+        dq = dq + jnp.einsum("bkqst,btkh->bskqh", ds, kc32) * scale
+        dk_blk = jnp.einsum("bkqst,bskqh->btkh", ds, qg) * scale
+        return dq, (dk_blk.astype(kc.dtype), dv_blk.astype(vc.dtype))
+
+    dq0 = jnp.zeros_like(qg)
+    dq, (dk_t, dv_t) = _ctl_scan(body, dq0, (kb_t, vb_t, starts))
+    return dq, dk_t, dv_t, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blocked_attention(
+    q: jax.Array,                  # (B, S, H, hd)
+    k: jax.Array,                  # (B, T, K, hd)
+    v: jax.Array,                  # (B, T, K, hd)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    local_window: int = 0,
+    kv_len: Optional[jax.Array] = None,
+    block: int = 1024,
+) -> jax.Array:
+    """Flash attention in pure JAX with a flash custom-VJP: lax.scan over KV
+    blocks with an online softmax, O(S*block) memory in both forward AND
+    backward (backward recomputes probabilities blockwise from the saved
+    logsumexp). Same math as the Pallas kernel (kernels/flash_prefill.py)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    kv_len = jnp.asarray(T if kv_len is None else kv_len, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    if T % block:
+        pad = block - T % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nblocks = T // block
+    qg = q.reshape(B, S, K, H // K, hd).astype(jnp.float32)
+    kb_t = jnp.moveaxis(k.reshape(B, nblocks, block, K, hd), 1, 0)
+    vb_t = jnp.moveaxis(v.reshape(B, nblocks, block, K, hd), 1, 0)
+    out = _flash(qg, kb_t, vb_t, q_offset, kv_len, causal, local_window,
+                 block)                                    # (B,K,Q,S,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "auto", **kw) -> jax.Array:
+    """Dispatch between implementations. 'pallas' is wired in kernels/ops.py to
+    avoid a circular import; callers that want the kernel use that wrapper."""
+    if impl == "auto":
+        impl = "blocked" if q.shape[1] * k.shape[1] > 1 << 22 else "naive"
+    if impl == "naive":
+        return naive_attention(q, k, v, **kw)
+    if impl == "blocked":
+        kw.setdefault("block", 1024)
+        return blocked_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_in: jax.Array, w_out: jax.Array) -> jax.Array:
+    """w_in: (D, 2, F) gate+up on an explicit axis (shard-aligned split);
+    w_out: (F, D)."""
+    gu = jnp.einsum("bsd,dzf->bszf", x, w_in)
+    gate, up = gu[..., 0, :], gu[..., 1, :]
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, w_out)
+
+
+def gelu_mlp(x: jax.Array, w_in, b_in, w_out, b_out) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_in) + b_in)
+    return jnp.einsum("bsf,fd->bsd", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style grouped dispatch — TPU idiomatic, dense einsums)
+# ---------------------------------------------------------------------------
+
+
+def moe_router(x: jax.Array, w_router: jax.Array, k: int):
+    """x: (B,S,D) -> (weights (B,S,k) f32, indices (B,S,k) i32, logits)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    weights, idx = lax.top_k(logits, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    return weights, idx, logits
+
+
+def moe_apply(
+    x: jax.Array,                  # (B, S, D)
+    weights: jax.Array,            # (B, S, k) routing weights (from moe_router)
+    idx: jax.Array,                # (B, S, k) expert indices
+    w_gate_up: jax.Array,          # (E, D, 2F)
+    w_down: jax.Array,             # (E, F, D)
+    *,
+    k: int,
+    capacity_factor: float = 1.25,
+    min_capacity: int = 4,
+    group_size: int = 0,
+) -> jax.Array:
+    """Expert computation given routing decisions (the paper's `experts`
+    fused operator; `gate` = moe_router). GShard-style capacity dispatch:
+    tokens are processed in groups so dispatch/combine einsum FLOPs stay
+    ~O(tokens * group * D) rather than O(tokens^2 * D). Overflowing tokens are
+    dropped (standard capacity semantics); the residual preserves them."""
+    B, S, D = x.shape
+    E = w_gate_up.shape[0]
+
+    if group_size:
+        g = min(B * S, group_size)
+    else:
+        # dispatch/combine einsum FLOPs scale as 2*2*g*k*cf*D per token while
+        # expert compute is 6*k*D*F — small-F experts need small groups or the
+        # dispatch dominates (EXPERIMENTS.md §Perf E2). Capacity stays >= 128
+        # rows for MXU alignment at these sizes.
+        F = w_gate_up.shape[-1] // 2
+        g = min(B * S, 512 if F < 2048 else 4096)
+    n_groups = (B * S) // g if (B * S) % g == 0 else 0
+    if n_groups == 0:                                     # fall back: one group
+        g, n_groups = B * S, 1
+    xg = x.reshape(n_groups, g, D)
+    wg = weights.reshape(n_groups, g, k)
+    ig = idx.reshape(n_groups, g, k)
+
+    cap = min(max(int(g * k * capacity_factor / E), min_capacity, 1), g)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(ig, E, dtype=jnp.int32)        # (G,g,k,E)
+    flat = onehot.reshape(n_groups, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                     # (G,g*k,E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(n_groups, g, k)
+    keep = pos < cap
+    wg = wg * keep.astype(wg.dtype)
+
+    # dispatch tensor (G, g, E, cap) — boolean product of expert + slot one-hots
+    disp = (
+        jax.nn.one_hot(ig, E, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., None, :-1]
+    ).sum(axis=2)                                          # (G,g,E,cap)
+    # weighted combine tensor: routing weight of token s for slot (e, c)
+    wslot = (
+        jax.nn.one_hot(ig, E, dtype=jnp.float32)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=jnp.float32)[..., None, :-1]
+        * wg[..., None, None]
+    ).sum(axis=2)                                          # (G,g,E,cap) f32
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)            # (G,E,cap,D)
+    gu = jnp.einsum("gecd,edf->gecf", xe, w_gate_up)
+    gate, up = jnp.split(gu, 2, axis=-1)
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, w_down)
+    y = jnp.einsum("gsec,gecd->gsd", wslot.astype(ye.dtype), ye)
+    return y.reshape(B, S, D)
+
+
+def moe_ffn(
+    x: jax.Array,                  # (B, S, D)
+    w_router: jax.Array,           # (D, E)
+    w_gate_up: jax.Array,          # (E, D, 2F)
+    w_down: jax.Array,             # (E, F, D)
+    *,
+    k: int,
+    capacity_factor: float = 1.25,
+    min_capacity: int = 4,
+    group_size: int = 0,
+) -> jax.Array:
+    """Top-k MoE FFN = moe_router (`gate`) + moe_apply (`experts`)."""
+    weights, idx, _ = moe_router(x, w_router, k)
+    return moe_apply(x, weights, idx, w_gate_up, w_down, k=k,
+                     capacity_factor=capacity_factor,
+                     min_capacity=min_capacity, group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (mamba2 / rg-lru)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                  state: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (C, W) depthwise; state: (B, W-1, C) trailing context.
+    Returns (y (B,S,C), new_state (B, W-1, C))."""
+    B, S, C = x.shape
+    W = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), dtype=x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)               # (B, S+W-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(W)[None, :]  # (S, W)
+    windows = xp[:, idx]                                   # (B, S, W, C)
+    y = jnp.einsum("bswc,cw->bsc", windows, w)
+    if b is not None:
+        y = y + b
+    new_state = xp[:, S:]                                  # last W-1 positions
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) — linear recurrence via associative scan
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru(x: jax.Array, a_param: jax.Array, w_rg: jax.Array, w_ig: jax.Array,
+          h0: Optional[jax.Array] = None):
+    """Real-Gated Linear Recurrent Unit.
+        r_t = sigmoid(x_t @ w_rg);  i_t = sigmoid(x_t @ w_ig)
+        log a_t = -c * softplus(a_param) * r_t
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    x: (B, S, C). h0: (B, C). Returns (y (B,S,C), h_last (B,C)).
+    """
+    B, S, C = x.shape
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsc,cd->bsd", x32, w_rg.astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsc,cd->bsd", x32, w_ig.astype(jnp.float32)))
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, C), dtype=jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    aseq = jnp.moveaxis(a, 1, 0)                           # (S, B, C)
+    bseq = jnp.moveaxis(gated, 1, 0)
+    a_cum, b_cum = lax.associative_scan(combine, (aseq, bseq), axis=0)
+    h = a_cum * h0[None] + b_cum                           # (S, B, C)
+    y = jnp.moveaxis(h, 0, 1)
+    return y.astype(x.dtype), h[-1]
+
+
+def rglru_step(x_t: jax.Array, a_param, w_rg, w_ig, h: jax.Array):
+    """Single-token recurrent step. x_t: (B, C); h: (B, C) f32."""
+    x32 = x_t.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ w_rg.astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ w_ig.astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (i * x32)
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)   values
+    dt: jax.Array,       # (B, S, H)      softplus'd step sizes (>0)
+    A: jax.Array,        # (H,)           negative decay rates (A < 0 semantics: a = exp(A*dt))
+    Bm: jax.Array,       # (B, S, N)      input projection (1 group)
+    Cm: jax.Array,       # (B, S, N)      output projection
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,      # (B, H, P, N)
+):
+    """Chunked SSD: y_t = C_t^T h_t,  h_t = exp(A*dt_t) h_{t-1} + dt_t * B_t x_t^T.
+
+    Standard Mamba2 minimal algorithm: intra-chunk quadratic term + inter-chunk
+    recurrence on chunk states. Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]  # (B,nc,L,H) log-decay
+    dA_cs = jnp.cumsum(dA, axis=2)                         # cumulative within chunk
+
+    # intra-chunk: Y_intra[t] = sum_{s<=t} C_t.B_s exp(dA_cs[t]-dA_cs[s]) dt_s x_s
+    # (mask in log-domain: exp of the upper triangle overflows before masking)
+    L = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,nc,L,L,H)
+    seg = jnp.where(L[None, None, :, :, None], seg, -jnp.inf)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)          # (B,nc,L,L)
+    gate = scores[..., None] * jnp.exp(seg)
+    y_intra = jnp.einsum("bclmh,bcmh,bcmhp->bclhp", gate, dtc, xc)
+
+    # chunk states: h_chunk = sum_s exp(dA_cs[last]-dA_cs[s]) dt_s B_s x_s^T
+    decay_last = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclh,bcln,bclhp->bchpn",
+                        decay_last, dtc, Bc, xc)             # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over chunk boundary states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (B,nc,H)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_seq = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,B,H)
+    s_seq = jnp.moveaxis(states, 1, 0)                       # (nc,B,H,P,N)
+    a_cum, s_cum = lax.associative_scan(combine, (a_seq, s_seq), axis=0)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    s_cum = s_cum + a_cum[..., None, None] * h0[None]
+    h_last = s_cum[-1]
+    # state entering each chunk (shift by one)
+    h_in = jnp.concatenate([h0[None], s_cum[:-1]], axis=0)   # (nc,B,H,P,N)
+    h_in = jnp.moveaxis(h_in, 0, 1)                          # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_inter[t] = C_t . (exp(dA_cs[t]) h_in)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc, jnp.exp(dA_cs), h_in)
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, h):
+    """Single-token SSD recurrence.
+    x_t: (B,H,P); dt_t: (B,H); B_t/C_t: (B,N); h: (B,H,P,N) f32.
+    """
+    a = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None])  # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    h_new = h * a[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), h_new)
+    return y.astype(x_t.dtype), h_new

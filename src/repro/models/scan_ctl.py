@@ -1,0 +1,41 @@
+"""Scan control for cost-accounting.
+
+XLA's cost_analysis counts a while-loop body ONCE, not x trip-count, so any
+lax.scan (layer stacks, blocked-attention KV loops) is undercounted. The
+dry-run's shallow cost probes flip `set_unroll(True)` so every scan fully
+unrolls and FLOPs/bytes/collectives are counted exactly; production lowering
+keeps rolled scans (compact HLO, fast compile).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from jax import lax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+@contextmanager
+def unrolled_scans():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(body, carry, xs, **kw):
+    if _UNROLL:
+        kw["unroll"] = True
+    return lax.scan(body, carry, xs, **kw)

@@ -1,0 +1,75 @@
+"""Decode instance (FlowPrefill §4): reuses the framework's default execution
+logic with FCFS scheduling — decoding optimization is explicitly out of the
+paper's scope, so this instance is deliberately plain: a worker thread pops
+finished prefills FCFS and autoregressively decodes `decode_tokens` tokens per
+request using the handed-over KV cache (the PD-disaggregation KV transfer).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.request import Request
+from repro.models.model import decode_step
+
+
+@dataclass
+class DecodeJob:
+    request: Request
+    cache: Dict                     # model.decode_step cache (B=1 slice)
+    first_token: int
+
+
+class DecodeInstance:
+    def __init__(self, params, cfg, *, decode_tokens: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
+        self.params = params
+        self.cfg = cfg
+        self.decode_tokens = decode_tokens
+        self.clock = clock
+        self._q: "queue.Queue[Optional[DecodeJob]]" = queue.Queue()
+        self.finished: List[Request] = []
+        self.tbt_samples: List[float] = []
+        self._step = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c))
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="decode-instance")
+        self._thread.start()
+
+    def submit(self, job: DecodeJob) -> None:
+        self._q.put(job)
+
+    def shutdown(self) -> None:
+        self._q.put(None)
+        self._thread.join(10.0)
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self._q.qsize() == 0:
+                return True
+            time.sleep(0.005)
+        return False
+
+    def _run(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            tok = jnp.asarray([job.first_token], jnp.int32)
+            cache = job.cache
+            last = self.clock()
+            for _ in range(self.decode_tokens):
+                logits, cache = self._step(self.params, tok, cache)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                now = self.clock()
+                self.tbt_samples.append(now - last)
+                last = now
+            job.request.finish_time = self.clock()
+            self.finished.append(job.request)

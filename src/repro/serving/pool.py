@@ -1,0 +1,158 @@
+"""Execution Pool (FlowPrefill §4, §5.1).
+
+Manages execution tasks: runs at most one at a time, safely preserves the
+state of preempted tasks until resumption, and acts ONLY on explicit commands
+(submit / preempt / resume) from the Scheduler — it makes no scheduling
+decisions itself.
+
+The worker thread advances the current task segment-by-segment, performing the
+cooperative preemption check (a flag read) at every operator boundary — the
+exact protocol of paper Fig. 7 including the signal/ACK handshake and the
+completion race (a task finishing while a signal is pending ACKs immediately
+so the scheduler never stalls; the ACK is distinguishable from suspension).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.preemption import BlockingStats, PreemptionSignal
+from repro.core.request import Request
+
+_task_ids = itertools.count()
+
+
+@dataclass
+class ExecTask:
+    """One execution task = one (possibly batched) prefill."""
+    prefill_task: object                      # models.segments.PrefillTask
+    requests: List[Request]                   # batch members (H first)
+    task_id: int = field(default_factory=lambda: next(_task_ids))
+    submit_time: float = 0.0
+    complete_time: Optional[float] = None
+
+    @property
+    def head(self) -> Request:
+        return self.requests[0]
+
+
+class ExecutionPool:
+    def __init__(self, step_fn: Callable[[ExecTask], bool],
+                 on_complete: Callable[[ExecTask], None],
+                 clock: Callable[[], float] = time.monotonic,
+                 dispatch_depth: int = 2):
+        """dispatch_depth bounds how many operator dispatches may be enqueued
+        ahead of device completion. Without this bound JAX's async dispatch
+        would let the host race to the end of the prefill, making the
+        cooperative check vacuous; with it, preemption latency is
+        <= (dispatch_depth + 1) x one operator — the paper's bound."""
+        self._step = step_fn
+        self._on_complete = on_complete
+        self._clock = clock
+        self._dispatch_depth = max(dispatch_depth, 0)
+        self.signal = PreemptionSignal()
+        self.blocking = BlockingStats()
+        self._cv = threading.Condition()
+        self._current: Optional[ExecTask] = None
+        self._preempted: Dict[int, ExecTask] = {}
+        self._shutdown = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="execution-pool")
+        self._thread.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, task: ExecTask) -> None:
+        with self._cv:
+            assert self._current is None, "pool executes at most one task"
+            task.submit_time = self._clock()
+            self._current = task
+            self._cv.notify_all()
+
+    def resume(self, task_id: int) -> ExecTask:
+        with self._cv:
+            task = self._preempted.pop(task_id)
+        self.submit(task)
+        return task
+
+    def preempt_current(self, timeout: float = 10.0) -> Optional[ExecTask]:
+        """Scheduler-side preemption (Fig. 7). Returns the suspended task, or
+        None if nothing was running / the task completed concurrently."""
+        with self._cv:
+            task = self._current
+        if task is None:
+            return None
+        self.signal.request_preemption()
+        acked = self.signal.wait_ack(timeout)
+        with self._cv:
+            if acked and task.task_id in self._preempted:
+                return task
+        # completed before the boundary check could suspend it
+        self.signal.cancel()
+        return None
+
+    def preempted_tasks(self) -> List[ExecTask]:
+        with self._cv:
+            return list(self._preempted.values())
+
+    def current(self) -> Optional[ExecTask]:
+        with self._cv:
+            return self._current
+
+    def idle(self) -> bool:
+        with self._cv:
+            return self._current is None
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    # --------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while self._current is None and not self._shutdown:
+                    self._cv.wait()
+                if self._shutdown:
+                    return
+                task = self._current
+
+            window: List = []                      # dispatched, maybe unfinished
+            while True:
+                # cooperative preemption check at the operator boundary
+                if self.signal.check():
+                    # drain the in-flight operators (bounded by dispatch_depth)
+                    jax.block_until_ready(task.prefill_task.state)
+                    dt = self.signal.consume_and_ack()
+                    self.blocking.record(dt)
+                    with self._cv:
+                        self._preempted[task.task_id] = task
+                        self._current = None
+                    break
+
+                done = self._step(task)
+                # flow control: keep at most dispatch_depth segments in flight
+                tok = task.prefill_task.sync_token
+                if tok is not None:
+                    window.append(tok)
+                    if len(window) > self._dispatch_depth:
+                        jax.block_until_ready(window.pop(0))
+
+                if done:
+                    if task.prefill_task.logits is not None:
+                        jax.block_until_ready(task.prefill_task.logits)
+                    task.complete_time = self._clock()
+                    with self._cv:
+                        self._current = None
+                    # unblock a racing preemption request (scheduler will see
+                    # the task is NOT in the preempted set -> completed)
+                    if self.signal.check():
+                        self.signal.consume_and_ack()
+                    self._on_complete(task)
+                    break

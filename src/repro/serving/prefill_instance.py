@@ -1,0 +1,185 @@
+"""Prefill instance (FlowPrefill §4/§5): Request Queue + Scheduler + Execution
+Pool, wired event-driven. The Scheduler thread blocks on the Event Monitor;
+each ARRIVAL/COMPLETION event triggers exactly one SchedulerCore round whose
+Decision is enacted as submit / preempt / resume commands on the pool.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import Event, EventKind, EventMonitor
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import Action, SchedulerCore
+from repro.models.segments import SegmentedPrefill
+from repro.serving.pool import ExecTask, ExecutionPool
+
+
+class PrefillInstance:
+    def __init__(self, params, cfg, scheduler: SchedulerCore, *, max_seq: int,
+                 granularity: str = "op", chunk_tokens: int = 0,
+                 attn_impl: str = "xla",
+                 clock: Callable[[], float] = time.monotonic,
+                 on_prefill_done: Optional[Callable] = None,
+                 executor: Optional[SegmentedPrefill] = None,
+                 dispatch_depth: int = 2):
+        self.cfg = cfg
+        self.scheduler = scheduler
+        self.clock = clock
+        self.max_seq = max_seq
+        self.on_prefill_done = on_prefill_done
+        # a pre-built (warm-compiled) executor may be shared across instances
+        self.executor = executor or SegmentedPrefill(
+            params, cfg, max_seq=max_seq, granularity=granularity,
+            chunk_tokens=chunk_tokens, attn_impl=attn_impl)
+
+        self.monitor = EventMonitor()
+        self.pool = ExecutionPool(step_fn=self._step, on_complete=self._complete,
+                                  clock=clock, dispatch_depth=dispatch_depth)
+
+        # request bookkeeping (owned by the scheduler thread)
+        self._tokens: Dict[int, np.ndarray] = {}
+        self._waiting: List[Request] = []
+        self._running: Optional[ExecTask] = None
+        self._preempted: Dict[int, ExecTask] = {}   # head rid -> task
+        self.completed: List[Request] = []
+        self.completed_tasks: List[ExecTask] = []
+        self._lock = threading.Lock()
+
+        self._shutdown = False
+        self._thread = threading.Thread(target=self._scheduler_loop,
+                                        daemon=True, name="scheduler")
+        self._thread.start()
+
+    # ------------------------------------------------------------- frontend
+    def submit_request(self, req: Request, tokens: np.ndarray) -> None:
+        with self._lock:
+            self._tokens[req.rid] = np.asarray(tokens)
+        self.monitor.publish(Event(time=self.clock(), kind=EventKind.ARRIVAL,
+                                   payload=req))
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Wait until all submitted requests completed."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                busy = (self._waiting or self._preempted
+                        or self._running is not None
+                        or self.monitor.qsize() > 0)
+            if not busy:
+                return True
+            time.sleep(0.002)
+        return False
+
+    def shutdown(self) -> None:
+        self._shutdown = True
+        self.monitor.publish(Event(time=self.clock(), kind=EventKind.SHUTDOWN))
+        self._thread.join(5.0)
+        self.pool.shutdown()
+
+    # ---------------------------------------------------------------- worker
+    def _step(self, task: ExecTask) -> bool:
+        return self.executor.step(task.prefill_task)
+
+    def _complete(self, task: ExecTask) -> None:
+        now = task.complete_time
+        for r in task.requests:
+            r.first_token_time = now
+            r.state = RequestState.DONE
+            r.ops_done = r.ops_total
+        self.monitor.publish(Event(time=now, kind=EventKind.COMPLETION,
+                                   payload=task))
+
+    # ------------------------------------------------------------- scheduler
+    def _scheduler_loop(self) -> None:
+        while not self._shutdown:
+            ev = self.monitor.next_event(timeout=1.0)
+            if ev is None:
+                continue
+            if ev.kind == EventKind.SHUTDOWN:
+                return
+            with self._lock:
+                self._handle_event(ev)
+                self._round()
+
+    def _handle_event(self, ev: Event) -> None:
+        if ev.kind == EventKind.ARRIVAL:
+            req: Request = ev.payload
+            req.state = RequestState.WAITING
+            self._waiting.append(req)
+        elif ev.kind == EventKind.COMPLETION:
+            task: ExecTask = ev.payload
+            if self._running is not None and task.task_id == self._running.task_id:
+                self._running = None
+            self.completed.extend(task.requests)
+            self.completed_tasks.append(task)
+            if self.on_prefill_done is not None:
+                self.on_prefill_done(task)
+
+    def _round(self) -> None:
+        """One scheduling round (Alg. 2) + command execution."""
+        now = self.clock()
+        running_req = self._running.head if self._running is not None else None
+        preempted_reqs = [t.head for t in self._preempted.values()]
+        decision = self.scheduler.schedule_round(
+            now, self._waiting, preempted_reqs, running_req)
+        if decision.is_noop:
+            return
+
+        if decision.preempt is not None and self._running is not None:
+            suspended = self.pool.preempt_current()
+            if suspended is not None:
+                head = suspended.head
+                for r in suspended.requests:
+                    r.state = RequestState.PREEMPTED
+                head.ops_total = suspended.prefill_task.total_segments
+                head.ops_done = suspended.prefill_task.cursor
+                self._preempted[head.rid] = suspended
+                self._running = None
+            else:
+                # completed concurrently; the COMPLETION event will arrive.
+                self._running = None
+
+        if decision.action == Action.SUBMIT:
+            batch = decision.batch
+            task = self._make_task(batch)
+            for r in batch:
+                r.state = RequestState.RUNNING
+                r.ops_total = task.prefill_task.total_segments
+                r.ops_done = 0
+            waiting_ids = {r.rid for r in batch}
+            self._waiting = [r for r in self._waiting
+                             if r.rid not in waiting_ids]
+            self._running = task
+            self.pool.submit(task)
+        elif decision.action == Action.RESUME:
+            head = decision.target
+            task = self._preempted.pop(head.rid)
+            for r in task.requests:
+                r.state = RequestState.RUNNING
+            self._running = task
+            self.pool.resume(task.task_id)
+
+    def _make_task(self, batch: List[Request]) -> ExecTask:
+        toks = [self._tokens[r.rid] for r in batch]
+        lens = [len(t) for t in toks]
+        S = max(lens)
+        arr = np.zeros((len(batch), S), dtype=np.int32)
+        for i, t in enumerate(toks):
+            arr[i, :len(t)] = t
+        pt = self.executor.start(jnp.asarray(arr), lens=jnp.asarray(lens))
+        return ExecTask(prefill_task=pt, requests=list(batch))
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def blocking_stats(self):
+        return self.pool.blocking
+
+    @property
+    def scheduling_rounds(self) -> int:
+        return self.monitor.rounds

@@ -1,0 +1,80 @@
+"""Proxy (FlowPrefill §4): receives frontend requests, dispatches round-robin
+to prefill instances, hands completed prefills to decode instances (the PD
+KV transfer), and aggregates results. Instance-level load balancing beyond
+round-robin is out of scope (paper §4)."""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
+from repro.core.request import Request
+from repro.serving.decode_instance import DecodeInstance, DecodeJob
+from repro.serving.pool import ExecTask
+from repro.serving.prefill_instance import PrefillInstance
+
+
+class Proxy:
+    def __init__(self, prefill_instances: List[PrefillInstance],
+                 decode_instances: Optional[List[DecodeInstance]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.prefill_instances = prefill_instances
+        self.decode_instances = decode_instances or []
+        self.clock = clock
+        self._rr = itertools.cycle(range(len(prefill_instances)))
+        self._rr_dec = itertools.cycle(range(max(len(self.decode_instances), 1)))
+        self.requests: List[Request] = []
+        # wire prefill completion -> decode handoff
+        for inst in prefill_instances:
+            inst.on_prefill_done = self._prefill_done
+
+    def submit(self, req: Request, tokens: np.ndarray) -> None:
+        self.requests.append(req)
+        inst = self.prefill_instances[next(self._rr)]
+        inst.submit_request(req, tokens)
+
+    def _prefill_done(self, task: ExecTask) -> None:
+        if not self.decode_instances:
+            return
+        dec = self.decode_instances[next(self._rr_dec)]
+        logits = task.prefill_task.logits
+        first = jnp.argmax(logits, -1)
+        st = task.prefill_task.state
+        for i, req in enumerate(task.requests):
+            # slice this request's cache row out of the batched prefill
+            cache = {
+                "k": st["k_cache"][:, i:i + 1],
+                "v": st["v_cache"][:, i:i + 1],
+                "pos": jnp.asarray(int(st["lens"][i]), jnp.int32),
+            }
+            dec.submit(DecodeJob(request=req, cache=cache,
+                                 first_token=int(first[i])))
+
+    def drain(self, timeout: float = 120.0) -> bool:
+        ok = all(inst.drain(timeout) for inst in self.prefill_instances)
+        for dec in self.decode_instances:
+            ok = dec.drain(timeout) and ok
+        return ok
+
+    def shutdown(self) -> None:
+        for inst in self.prefill_instances:
+            inst.shutdown()
+        for dec in self.decode_instances:
+            dec.shutdown()
+
+    # ------------------------------------------------------------- metrics
+    def report(self) -> dict:
+        return {
+            "n_requests": len(self.requests),
+            "slo_attainment": slo_attainment(self.requests),
+            "by_task": attainment_by_task(self.requests),
+            "ttft": ttft_stats(self.requests),
+            "scheduling_rounds": sum(i.scheduling_rounds
+                                     for i in self.prefill_instances),
+            "blocking_mean": float(np.mean(
+                [i.blocking_stats.mean for i in self.prefill_instances])),
+        }

@@ -1,0 +1,151 @@
+"""Analytic prefill cost model for the discrete-event simulator.
+
+Per-operator durations from first principles: t_op = max(compute, memory)
++ launch overhead, with
+  compute = FLOPs / (peak_flops * eff_c)
+  memory  = bytes_touched / (hbm_bw * eff_b)   (weights re-read per chunk,
+                                                KV prefix re-read by attention)
+This reproduces the paper's motivating observations without fitting:
+  * Fig. 3 — small chunks collapse throughput (per-chunk weight re-reads +
+    launch overheads), large chunks recover it;
+  * Fig. 4 — short prefills are memory-bound (batching ~free), long prefills
+    compute-bound (batching inflates latency linearly).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float                  # bf16 FLOP/s
+    hbm_bw: float                      # bytes/s
+    eff_c: float = 0.7                 # achievable compute fraction (saturated)
+    eff_b: float = 0.8                 # achievable bandwidth fraction
+    launch_overhead: float = 20e-6     # per fused-operator dispatch
+    sat_tokens: int = 600              # tokens to reach ~50% of eff_c
+                                       # (kernel tails / wave quantization:
+                                       # small batches underutilize — Fig. 4a)
+
+    def eff_c_at(self, tokens: float) -> float:
+        return self.eff_c * tokens / (tokens + self.sat_tokens)
+
+
+A100 = HardwareSpec("A100-SXM4", peak_flops=312e12, hbm_bw=1.555e12)
+A800 = HardwareSpec("A800-SXM4-80G", peak_flops=312e12, hbm_bw=2.0e12)
+TPU_V5E = HardwareSpec("TPUv5e", peak_flops=197e12, hbm_bw=819e9)
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """The numbers the cost model needs, derived from a ModelConfig."""
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    num_experts: int = 0
+    experts_per_token: int = 0
+    tp: int = 1                         # tensor parallel degree
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, tp: int = 1) -> "ModelSpec":
+        return cls(name=cfg.name, num_layers=cfg.num_layers,
+                   d_model=cfg.d_model, num_heads=cfg.num_heads,
+                   num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.resolved_head_dim, d_ff=cfg.d_ff,
+                   num_experts=cfg.num_experts,
+                   experts_per_token=cfg.experts_per_token, tp=tp)
+
+    @property
+    def op_names(self) -> Tuple[str, ...]:
+        if self.num_experts:
+            return ("qkv_proj", "attn", "o_proj", "gate", "experts")
+        return ("qkv_proj", "attn", "o_proj", "gate_up_proj", "down_proj")
+
+
+# published evaluation models (paper §6.1)
+LLAMA3_8B = ModelSpec("llama3-8b", 32, 4096, 32, 8, 128, 14336)
+QWEN25_14B = ModelSpec("qwen2.5-14b", 48, 5120, 40, 8, 128, 13824)
+LLAMA3_70B = ModelSpec("llama3-70b", 80, 8192, 64, 8, 128, 28672)
+QWEN3_30B_A3B = ModelSpec("qwen3-30b-a3b", 48, 2048, 32, 4, 128, 768,
+                          num_experts=128, experts_per_token=8)
+
+MODEL_SPECS = {m.name: m for m in
+               (LLAMA3_8B, QWEN25_14B, LLAMA3_70B, QWEN3_30B_A3B)}
+MODEL_TP = {"llama3-8b": 1, "qwen2.5-14b": 2, "llama3-70b": 4,
+            "qwen3-30b-a3b": 2}
+
+
+class PrefillCostModel:
+    def __init__(self, model: ModelSpec, hw: HardwareSpec = A800):
+        self.m = model
+        self.hw = hw
+
+    # --- per-operator FLOPs/bytes for a chunk of c tokens at prefix offset o ---
+    def _op_cost(self, name: str, c: int, o: int) -> Tuple[float, float]:
+        m = self.m
+        d, H, K, hd, f = (m.d_model, m.num_heads, m.num_kv_heads,
+                          m.head_dim, m.d_ff)
+        if name == "qkv_proj":
+            fl = 2 * c * d * (H + 2 * K) * hd
+            by = 2 * d * (H + 2 * K) * hd
+        elif name == "attn":
+            fl = 4 * c * (o + c / 2) * H * hd
+            by = 2 * 2 * (o + c) * K * hd + 2 * 2 * c * K * hd
+        elif name == "o_proj":
+            fl = 2 * c * H * hd * d
+            by = 2 * H * hd * d
+        elif name == "gate_up_proj":
+            fl = 4 * c * d * f
+            by = 2 * d * 2 * f
+        elif name == "down_proj":
+            fl = 2 * c * f * d
+            by = 2 * f * d
+        elif name == "gate":
+            fl = 2 * c * d * m.num_experts
+            by = 2 * d * m.num_experts
+        elif name == "experts":
+            k = m.experts_per_token
+            fl = 6 * c * k * d * f
+            touched = min(c * k, m.num_experts)
+            by = 2 * 3 * d * f * touched
+        else:
+            raise ValueError(name)
+        return fl, by
+
+    def op_duration(self, name: str, c: int, o: int) -> float:
+        fl, by = self._op_cost(name, c, o)
+        tp = self.m.tp
+        t = max(fl / tp / (self.hw.peak_flops * self.hw.eff_c_at(c)),
+                by / tp / (self.hw.hbm_bw * self.hw.eff_b))
+        return t + self.hw.launch_overhead
+
+    def op_durations(self, tokens: int, chunk_tokens: int = 0) -> np.ndarray:
+        """Per-operator durations for a full prefill (all layers x all chunks),
+        in execution order. Shape: (n_chunks * L * n_ops,)."""
+        m = self.m
+        chunk = chunk_tokens or tokens
+        out: List[float] = []
+        o = 0
+        while o < tokens:
+            c = min(chunk, tokens - o)
+            per_layer = [self.op_duration(nm, c, o) for nm in m.op_names]
+            out.extend(per_layer * m.num_layers)
+            o += c
+        return np.asarray(out)
+
+    def prefill_time(self, tokens: int, chunk_tokens: int = 0) -> float:
+        return float(self.op_durations(tokens, chunk_tokens).sum())
+
+    def throughput(self, tokens: int, chunk_tokens: int = 0) -> float:
+        return tokens / self.prefill_time(tokens, chunk_tokens)

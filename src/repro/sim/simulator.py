@@ -1,0 +1,259 @@
+"""Discrete-event simulator of one prefill instance (cluster-scale evaluation).
+
+The simulator drives the SAME SchedulerCore as the real runtime — only the
+executor is simulated. The device is a serial processor executing operator
+units whose durations come from the analytic cost model; preemption takes
+effect at the next boundary of the configured granularity (op / layer / chunk /
+whole), exactly like the cooperative protocol. Events are lazily invalidated
+via task epochs, so the event count is O(actions), not O(operators).
+
+Baseline systems are expressed as SimConfig presets (policies.py):
+DistServe (FCFS), DistServe-CP2K/8K (chunk boundaries + EDF), layer-level
+(layer boundaries + per-boundary polling cost), and FlowPrefill.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.predictor import TTFTPredictor
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import Action, SchedulerCore
+from repro.sim.costmodel import PrefillCostModel
+
+
+@dataclass
+class SimTask:
+    requests: List[Request]
+    tokens: int
+    op_ends: np.ndarray                  # cumulative op end offsets (exec secs)
+    boundary_ends: np.ndarray            # preemption boundaries (exec secs)
+    exec_offset: float = 0.0             # completed execution seconds
+    resume_time: float = 0.0             # sim time of last (re)start
+    epoch: int = 0                       # invalidates stale events
+    tid: int = field(default_factory=itertools.count().__next__)
+
+    @property
+    def head(self) -> Request:
+        return self.requests[0]
+
+    @property
+    def total(self) -> float:
+        return float(self.op_ends[-1])
+
+    def position(self, now: float) -> float:
+        return self.exec_offset + (now - self.resume_time)
+
+    def next_boundary(self, now: float) -> float:
+        """Execution offset of the first boundary at/after `now`."""
+        pos = self.position(now)
+        i = int(np.searchsorted(self.boundary_ends, pos - 1e-12))
+        i = min(i, len(self.boundary_ends) - 1)
+        return float(self.boundary_ends[i])
+
+
+@dataclass
+class SimConfig:
+    policy: str = "s-edf"
+    granularity: str = "op"              # op | layer | chunk | whole
+    chunk_tokens: int = 0                # >0: chunked prefill
+    batch_budget: int = 4096
+    enable_batching: bool = True
+    batching_mode: str = "slo"           # "slo" (Alg. 1) | "greedy" (vLLM-like)
+    preempt: bool = True
+    check_overhead: float = 0.0          # per-boundary scheduling cost (layer-
+                                         # level polling baselines)
+    round_overhead: float = 100e-6       # per scheduling round
+    submit_overhead: float = 8e-3        # per execution task (cache alloc,
+                                         # runner setup) — amortized by batching
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    blocking_times: List[float]
+    rounds: int
+    preemptions: int
+    makespan: float
+
+    @property
+    def attainment(self) -> float:
+        done = [r for r in self.requests if r.first_token_time is not None]
+        met = sum(1 for r in self.requests if r.slo_met)
+        return met / max(len(self.requests), 1)
+
+
+class PrefillSim:
+    ARRIVAL, COMPLETION, PREEMPT_AT = 0, 1, 2
+
+    def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig,
+                 predictor: Optional[TTFTPredictor] = None):
+        self.cost = cost
+        self.cfg = sim_cfg
+        chunk = sim_cfg.chunk_tokens
+        self.predictor = predictor or TTFTPredictor.from_cost_model(
+            lambda n: cost.prefill_time(n, chunk), max_tokens=32768)
+        self.core = SchedulerCore(
+            predictor=self.predictor, policy=sim_cfg.policy,
+            batch_budget=sim_cfg.batch_budget,
+            enable_batching=sim_cfg.enable_batching,
+            batching_mode=sim_cfg.batching_mode)
+
+    # ------------------------------------------------------------------ build
+    def _boundaries(self, op_ends: np.ndarray, tokens: int) -> np.ndarray:
+        g = self.cfg.granularity
+        m = self.cost.m
+        n_ops = len(m.op_names)
+        if g == "op":
+            return op_ends
+        if g == "layer":
+            return op_ends[n_ops - 1::n_ops]
+        if g == "chunk":
+            per_chunk = m.num_layers * n_ops
+            return op_ends[per_chunk - 1::per_chunk]
+        if g == "whole":
+            return op_ends[-1:]
+        raise ValueError(g)
+
+    def _make_task(self, batch: List[Request], now: float) -> SimTask:
+        tokens = sum(r.num_tokens for r in batch)
+        op_ends = np.cumsum(self.cost.op_durations(tokens,
+                                                   self.cfg.chunk_tokens))
+        op_ends = op_ends + self.cfg.submit_overhead
+        boundaries = self._boundaries(op_ends, tokens)
+        if self.cfg.check_overhead:
+            # polling cost at every boundary (coupled scheduling baselines)
+            op_ends = op_ends + self.cfg.check_overhead * (
+                1 + np.searchsorted(boundaries, op_ends - 1e-12))
+            boundaries = self._boundaries(op_ends, tokens)
+        t = SimTask(requests=batch, tokens=tokens, op_ends=op_ends,
+                    boundary_ends=boundaries, resume_time=now)
+        for r in batch:
+            r.ops_total = len(op_ends)
+            r.ops_done = 0
+            r.batch_tokens = tokens      # remaining-work basis for S-EDF
+        return t
+
+    # -------------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> SimResult:
+        cfg = self.cfg
+        heap: List[Tuple[float, int, int, object]] = []
+        seq = itertools.count()
+        for r in requests:
+            r.state = RequestState.WAITING
+            r.first_token_time = None
+            r.ops_done = 0
+            r.ops_total = 0
+            r.batch_tokens = r.num_tokens
+            heapq.heappush(heap, (r.arrival, next(seq), self.ARRIVAL, r))
+
+        waiting: List[Request] = []
+        preempted: Dict[int, SimTask] = {}     # head rid -> task
+        running: Optional[SimTask] = None
+        pending_preempt: Optional[Tuple[SimTask, int, object]] = None
+        blocking: List[float] = []
+        rounds = 0
+        preemptions = 0
+        now = 0.0
+
+        def schedule_completion(task: SimTask, t0: float):
+            t_done = t0 + (task.total - task.exec_offset)
+            heapq.heappush(heap, (t_done, next(seq), self.COMPLETION,
+                                  (task, task.epoch)))
+
+        def enact(decision, t0: float):
+            nonlocal running
+            if decision.action == Action.SUBMIT:
+                batch = decision.batch
+                for r in batch:
+                    r.state = RequestState.RUNNING
+                ids = {r.rid for r in batch}
+                waiting[:] = [r for r in waiting if r.rid not in ids]
+                task = self._make_task(batch, t0)
+                running = task
+                schedule_completion(task, t0)
+            elif decision.action == Action.RESUME:
+                rid = decision.target.rid
+                tid = next(t for t, task_ in preempted.items()
+                           if any(r.rid == rid for r in task_.requests))
+                task = preempted.pop(tid)
+                for r in task.requests:
+                    r.state = RequestState.RUNNING
+                task.resume_time = t0
+                task.epoch += 1
+                running = task
+                schedule_completion(task, t0)
+
+        def do_round(t0: float):
+            nonlocal running, pending_preempt, rounds, preemptions
+            rounds += 1
+            if pending_preempt is not None:
+                return                          # round resumes after the ACK
+            running_head = running.head if running is not None else None
+            # each preempted TASK is represented by its highest-priority member
+            # (Alg. 2's Q_all contains requests, not tasks — a batch must not
+            # starve because its head went infeasible)
+            reps = [max(t.requests, key=lambda r: self.core.priority(r, t0))
+                    for t in preempted.values()]
+            decision = self.core.schedule_round(
+                t0 + cfg.round_overhead, waiting, reps, running_head)
+            if decision.is_noop:
+                return
+            if decision.preempt is not None and running is not None:
+                if not cfg.preempt:
+                    return                      # baseline without preemption
+                # effective at the next boundary (cooperative)
+                b = running.next_boundary(t0)
+                t_eff = running.resume_time + (b - running.exec_offset)
+                heapq.heappush(heap, (t_eff, next(seq), self.PREEMPT_AT,
+                                      (running, running.epoch, decision)))
+                pending_preempt = (running, running.epoch, decision)
+                preemptions += 1
+                blocking.append(t_eff - t0)
+                return
+            enact(decision, t0 + cfg.round_overhead)
+
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == self.ARRIVAL:
+                r: Request = payload
+                waiting.append(r)
+                do_round(now)
+            elif kind == self.COMPLETION:
+                task, epoch = payload
+                if running is None or task.tid != running.tid or \
+                        epoch != task.epoch:
+                    continue                    # stale
+                for r in task.requests:
+                    r.first_token_time = now
+                    r.state = RequestState.DONE
+                    r.ops_done = r.ops_total
+                running = None
+                do_round(now)
+            elif kind == self.PREEMPT_AT:
+                task, epoch, decision = payload
+                if running is None or task.tid != running.tid or \
+                        epoch != task.epoch:
+                    pending_preempt = None
+                    continue
+                task.epoch += 1                 # cancels its completion event
+                task.exec_offset = task.next_boundary(now)
+                # boundary index -> ops completed (for S-EDF remaining work)
+                ops_done = int(np.searchsorted(
+                    task.op_ends, task.exec_offset - 1e-12) + 1)
+                for r in task.requests:
+                    r.state = RequestState.PREEMPTED
+                    r.ops_done = ops_done
+                preempted[task.tid] = task
+                running = None
+                pending_preempt = None
+                enact(decision, now)
+
+        makespan = now
+        return SimResult(requests=list(requests), blocking_times=blocking,
+                         rounds=rounds, preemptions=preemptions,
+                         makespan=makespan)

@@ -1,0 +1,120 @@
+"""Training substrate: loss, train_step (used by the dry-run for train_4k),
+and a fault-tolerant training loop (checkpoint/auto-resume, straggler
+watchdog, optional gradient compression).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical
+from repro.models.model import forward
+from repro.training import optimizer as opt
+from repro.training.optimizer import AdamWConfig, AdamWState
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            attn_impl: str = "auto", remat: str = "dots") -> jax.Array:
+    logits = forward(params, cfg, batch, attn_impl=attn_impl, remat=remat)
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    attn_impl: str = "auto", remat: str = "dots",
+                    compress=None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt_state',
+    metrics). This is the function the dry-run lowers for train_4k shapes.
+
+    `compress` (optional): gradient-compression transform applied between
+    backward and optimizer (see training/compression.py)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, attn_impl=attn_impl, remat=remat)
+        )(params)
+        if compress is not None:
+            grads = compress(grads)
+        new_params, new_state, metrics = opt.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    # straggler mitigation: a step slower than watchdog_factor x the rolling
+    # median is logged and counted; at cluster scale the same hook triggers
+    # re-sharding away from the slow host (here: observable metric + callback)
+    watchdog_factor: float = 3.0
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+
+def train_loop(cfg: ModelConfig, params, opt_state, train_step, data_iter,
+               loop: LoopConfig, *, start_step: int = 0,
+               log: Callable[[str], None] = print) -> Tuple[Any, Any, Dict]:
+    """Runs steps [start_step, total_steps). Checkpoints atomically; on
+    restart, `checkpoint.latest_step` + `restore` resume bit-identically
+    (tested in tests/test_training.py)."""
+    from repro.training import checkpoint as ckpt
+
+    step_times = []
+    stragglers = 0
+    metrics = {}
+    t_compile = None
+    for step in range(start_step, loop.total_steps):
+        batch = next(data_iter)
+        t0 = time.monotonic()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.monotonic() - t0
+        if t_compile is None:
+            t_compile = dt                     # first step includes compile
+        else:
+            step_times.append(dt)
+            if len(step_times) >= 5:
+                med = sorted(step_times)[len(step_times) // 2]
+                if dt > loop.watchdog_factor * med:
+                    stragglers += 1
+                    log(f"[watchdog] step {step} took {dt:.3f}s "
+                        f"(median {med:.3f}s) — straggler")
+                    if loop.on_straggler is not None:
+                        loop.on_straggler(step, dt, med)
+        if step % loop.log_every == 0:
+            log(f"step {step}: loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} dt={dt*1e3:.0f}ms")
+        if (step + 1) % loop.checkpoint_every == 0 or \
+                step + 1 == loop.total_steps:
+            ckpt.save(loop.checkpoint_dir, step + 1,
+                      {"params": params, "opt_state": opt_state},
+                      keep=loop.keep)
+    info = {"stragglers": stragglers,
+            "median_step_time": (sorted(step_times)[len(step_times) // 2]
+                                 if step_times else 0.0),
+            "final_loss": float(metrics.get("loss", float("nan")))}
+    return params, opt_state, info

@@ -1,0 +1,135 @@
+"""Hypothesis property tests on system invariants: S-EDF ordering, SLO-aware
+batching budget/deadline safety, predictor monotonicity-ish sanity, paged KV
+cache allocator conservation, and goodput-metric monotonicity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Request, SchedulerCore, TTFTPredictor, max_goodput
+from repro.core.scheduler import slo_aware_batching
+from repro.serving.kvcache import PagedKVCache
+
+PRED = TTFTPredictor(coeffs=np.array([2e-4, 0.0]), floor=0.0)
+
+
+def reqs_strategy(n_max=12):
+    one = st.builds(
+        Request,
+        num_tokens=st.integers(1, 40000),
+        slo=st.floats(0.01, 30.0, allow_nan=False),
+        arrival=st.floats(0.0, 100.0, allow_nan=False),
+    )
+    return st.lists(one, min_size=1, max_size=n_max)
+
+
+# --- priority / ranking ------------------------------------------------------
+
+@given(reqs_strategy(), st.floats(0.0, 120.0))
+@settings(max_examples=60, deadline=None)
+def test_rank_is_total_order_feasible_first(requests, now):
+    core = SchedulerCore(predictor=PRED)
+    ranked = core.rank(requests, now)
+    assert len(ranked) == len(requests)
+    assert {r.rid for r in ranked} == {r.rid for r in requests}
+    prios = [core.priority(r, now) for r in ranked]
+    assert all(a >= b - 1e-12 for a, b in zip(prios, prios[1:]))
+    # every feasible (positive-slack) request ranks above every doomed one
+    feas = [p >= 0 for p in prios]
+    if True in feas and False in feas:
+        assert feas.index(False) > max(i for i, f in enumerate(feas) if f)
+
+
+# --- batching ---------------------------------------------------------------
+
+@given(reqs_strategy(), st.integers(64, 100000), st.floats(0.0, 50.0))
+@settings(max_examples=60, deadline=None)
+def test_batching_invariants(requests, budget, now):
+    H, cands = requests[0], requests[1:]
+    h_tokens = H.num_tokens
+    Hb, batch = slo_aware_batching(H, cands, budget, now, PRED.predict)
+    total = sum(r.num_tokens for r in batch)
+    # budget respected whenever anything was admitted beyond H
+    if len(batch) > 1:
+        assert total < budget
+        # H's remaining time covers the predicted aggregate latency
+        assert H.deadline - now > PRED.predict(total)
+    assert batch[0].rid == H.rid
+    assert Hb.batch_tokens == total
+    assert len({r.rid for r in batch}) == len(batch)   # no duplicates
+    assert total >= h_tokens
+
+
+# --- predictor ----------------------------------------------------------------
+
+@given(st.lists(st.integers(64, 32768), min_size=4, max_size=20, unique=True))
+@settings(max_examples=30, deadline=None)
+def test_predictor_fit_nonnegative(tokens):
+    tokens = sorted(tokens)
+    lat = [1e-6 * t + 1e-10 * t * t for t in tokens]
+    p = TTFTPredictor.fit(tokens, lat, degree=2)
+    for t in tokens:
+        assert p.predict(t) >= 0.0
+    # interpolation error small on the fitted (noise-free quadratic) profile
+    mid = tokens[len(tokens) // 2]
+    assert abs(p.predict(mid) - (1e-6 * mid + 1e-10 * mid * mid)) < 1e-3
+
+
+# --- paged KV cache ------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(1, 300), st.booleans()),
+                min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_kvcache_allocator_conservation(ops):
+    cache = PagedKVCache(num_layers=2, num_blocks=64, block_size=16,
+                         num_kv_heads=2, head_dim=8)
+    total = cache.num_blocks
+    live = {}
+    sid = 0
+    for tokens, do_free in ops:
+        need = cache.blocks_needed(tokens)
+        if need <= cache.free_blocks:
+            t = cache.allocate(sid, tokens)
+            live[sid] = t
+            sid += 1
+        if do_free and live:
+            k = next(iter(live))
+            cache.free(k)
+            del live[k]
+        # conservation: free + live == total, and no block in two tables
+        used = [b for t in live.values() for b in t.blocks]
+        assert len(used) == len(set(used))
+        assert cache.free_blocks + len(used) == total
+
+
+def test_kvcache_data_roundtrip():
+    import jax.numpy as jnp
+    cache = PagedKVCache(num_layers=2, num_blocks=8, block_size=4,
+                         num_kv_heads=2, head_dim=4)
+    cache.allocate(0, 10)
+    k = jnp.arange(2 * 10 * 2 * 4, dtype=jnp.float32).reshape(2, 10, 2, 4)
+    v = k + 1000
+    cache.write_prompt(0, k, v)
+    kg, vg, length = cache.gather(0)
+    assert length == 10
+    np.testing.assert_array_equal(np.asarray(kg[:, :10]), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(vg[:, :10]), np.asarray(v))
+    # single-token append at position 10
+    cache.extend(0, 1)
+    k1 = jnp.full((2, 2, 4), 7.0)
+    cache.write(0, 10, k1, k1 * 2)
+    kg, vg, length = cache.gather(0)
+    assert length == 11
+    np.testing.assert_array_equal(np.asarray(kg[:, 10]), np.asarray(k1))
+
+
+# --- goodput metric -------------------------------------------------------------
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=3, max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_max_goodput_bounds(atts):
+    rates = list(np.linspace(1, 10, len(atts)))
+    g = max_goodput(rates, atts, target=0.9)
+    assert 0.0 <= g <= 10.0
+    # if all attainments pass, goodput is the max rate
+    if min(atts) >= 0.9:
+        assert g == pytest.approx(10.0)

@@ -1,0 +1,140 @@
+"""Unit tests for the scheduler core: S-EDF priority (Eq. 3), SLO-aware
+batching (Alg. 1), and the event-triggered round of Alg. 2."""
+import numpy as np
+import pytest
+
+from repro.core import (Action, Request, SchedulerCore, TTFTPredictor,
+                        slo_aware_batching)
+
+# a predictor with latency = 1e-4 * tokens (linear, easy arithmetic)
+PRED = TTFTPredictor(coeffs=np.array([1e-4, 0.0]), floor=0.0)
+
+
+def mk(tokens, slo, arrival=0.0, task="text"):
+    return Request(num_tokens=tokens, slo=slo, arrival=arrival, task_type=task)
+
+
+def core(**kw):
+    kw.setdefault("predictor", PRED)
+    return SchedulerCore(**kw)
+
+
+# --- S-EDF priority ----------------------------------------------------------
+
+def test_sedf_prefers_earliest_feasible_deadline():
+    c = core()
+    a = mk(100, slo=1.0)      # deadline 1.0, feasible (exec 0.01)
+    b = mk(100, slo=2.0)      # deadline 2.0, feasible
+    assert c.priority(a, 0.0) > c.priority(b, 0.0)
+
+
+def test_sedf_deprioritizes_doomed_requests():
+    c = core()
+    doomed = mk(100000, slo=0.001)   # exec 10s >> slo
+    ok = mk(100, slo=5.0)
+    assert c.priority(ok, 0.0) > c.priority(doomed, 0.0)
+    # doomed priority is negative (sgn(slack) = -1)
+    assert c.priority(doomed, 0.0) < 0
+
+
+def test_dedf_vs_sedf_distinction():
+    """D-EDF only notices a miss after the deadline passes; S-EDF notices as
+    soon as the predicted finish overshoots (foresight, §6.3)."""
+    doomed = mk(100000, slo=0.5)     # exec 10s, deadline 0.5 not yet passed
+    s = core(policy="s-edf")
+    d = core(policy="d-edf")
+    assert s.priority(doomed, now=0.0) < 0        # S-EDF: already infeasible
+    assert d.priority(doomed, now=0.0) > 0        # D-EDF: still positive
+    assert d.priority(doomed, now=1.0) < 0        # ... until time passes
+
+
+# --- SLO-aware batching (Alg. 1) ----------------------------------------------
+
+def test_batching_respects_token_budget():
+    H = mk(1000, slo=10.0)
+    cands = [mk(1000, slo=10.0) for _ in range(10)]
+    H, batch = slo_aware_batching(H, cands, budget=3500, now=0.0,
+                                  predict=PRED.predict)
+    total = sum(r.num_tokens for r in batch)
+    assert total < 3500
+    assert H.batch_tokens == total
+    assert len(batch) == 3          # 1000 + 1000 + 1000 (< 3500), next hits 4000
+
+
+def test_batching_respects_deadline():
+    H = mk(1000, slo=0.15)          # t_remain 0.15; own exec 0.1
+    cands = [mk(1000, slo=10.0) for _ in range(5)]
+    # adding one candidate -> 2000 tokens -> 0.2s > 0.15 remaining: reject all
+    H, batch = slo_aware_batching(H, cands, budget=100000, now=0.0,
+                                  predict=PRED.predict)
+    assert batch == [H]
+
+
+def test_batching_skips_then_admits_smaller():
+    H = mk(1000, slo=0.25)          # t_remain 0.25
+    big = mk(2000, slo=10.0)        # 3000 tok -> 0.3s: reject
+    small = mk(400, slo=10.0)       # 1400 tok -> 0.14s: admit
+    H, batch = slo_aware_batching(H, [big, small], budget=100000, now=0.0,
+                                  predict=PRED.predict)
+    assert small in batch and big not in batch
+
+
+# --- Algorithm 2 rounds --------------------------------------------------------
+
+def test_round_submits_when_idle():
+    c = core()
+    r = mk(100, slo=1.0)
+    d = c.schedule_round(0.0, waiting=[r], preempted=[], running=None)
+    assert d.action == Action.SUBMIT and d.target.rid == r.rid
+    assert d.preempt is None
+
+
+def test_round_preempts_lower_priority_running():
+    c = core()
+    low = mk(20000, slo=6.0, task="file")      # long, relaxed SLO
+    high = mk(200, slo=0.25, task="text")      # short, strict SLO
+    d = c.schedule_round(0.1, waiting=[high], preempted=[], running=low)
+    assert d.action == Action.SUBMIT
+    assert d.preempt is not None and d.preempt.rid == low.rid
+    assert d.target.rid == high.rid
+
+
+def test_round_resumes_preempted_after_completion():
+    c = core()
+    pre = mk(20000, slo=6.0)
+    d = c.schedule_round(0.5, waiting=[], preempted=[pre], running=None)
+    assert d.action == Action.RESUME and d.target.rid == pre.rid
+    assert d.preempt is None
+
+
+def test_round_noop_when_running_is_best():
+    c = core()
+    run = mk(200, slo=0.25)
+    wait = mk(20000, slo=6.0)
+    d = c.schedule_round(0.0, waiting=[wait], preempted=[], running=run)
+    assert d.is_noop
+
+
+def test_round_noop_when_empty():
+    c = core()
+    assert c.schedule_round(0.0, [], [], None).is_noop
+
+
+def test_round_batches_compatible_waiting_requests():
+    c = core(batch_budget=10000)
+    h = mk(500, slo=1.0)
+    w1 = mk(500, slo=2.0)
+    w2 = mk(500, slo=3.0)
+    d = c.schedule_round(0.0, waiting=[h, w1, w2], preempted=[], running=None)
+    assert d.action == Action.SUBMIT
+    assert {r.rid for r in d.batch} == {h.rid, w1.rid, w2.rid}
+
+
+def test_preempted_requests_never_rebatch():
+    """Alg. 2: C excludes Q_p — preempted tasks hold partial state."""
+    c = core(batch_budget=10**9)
+    h = mk(100, slo=1.0)
+    pre = mk(100, slo=5.0)
+    d = c.schedule_round(0.0, waiting=[h], preempted=[pre], running=None)
+    assert d.action == Action.SUBMIT
+    assert all(r.rid != pre.rid for r in d.batch)

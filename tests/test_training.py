@@ -1,0 +1,165 @@
+"""Training substrate tests: loss goes down, checkpoint restart equivalence,
+elastic re-mesh restore, straggler watchdog, gradient compression."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_tiny_config
+from repro.models import init_params
+from repro.training import checkpoint as ckpt
+from repro.training.compression import (ErrorFeedbackCompressor,
+                                        dequantize_int8, quantize_int8)
+from repro.training.data import DataConfig, data_iterator, make_batch
+from repro.training.optimizer import AdamWConfig, init_state
+from repro.training.train import LoopConfig, make_train_step, train_loop
+
+CFG = get_tiny_config("llama3_2_1b")
+OPT = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=40, weight_decay=0.0)
+DATA = DataConfig(seq_len=32, global_batch=4, vocab_size=CFG.vocab_size, seed=0)
+
+
+def setup(tmpdir):
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    opt_state = init_state(params)
+    step = jax.jit(make_train_step(CFG, OPT, remat="none"))
+    return params, opt_state, step
+
+
+def test_loss_decreases(tmp_path):
+    params, opt_state, step = setup(tmp_path)
+    it = data_iterator(DATA)
+    first = last = None
+    for i in range(20):
+        params, opt_state, m = step(params, opt_state, next(it))
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_restart_equivalence(tmp_path):
+    """Crash/restart must reproduce the uninterrupted run bit-for-bit."""
+    d = str(tmp_path / "ck")
+    params, opt_state, step = setup(tmp_path)
+    loop = LoopConfig(total_steps=12, checkpoint_every=6, checkpoint_dir=d,
+                      log_every=100)
+    p_full, s_full, _ = train_loop(
+        CFG, params, opt_state, step, data_iterator(DATA), loop,
+        log=lambda *_: None)
+
+    # "crash" after step 6: restore from the step-6 checkpoint and continue
+    params2, opt_state2, _ = setup(tmp_path)
+    last = ckpt.latest_step(d)
+    assert last == 12
+    mid = ckpt.restore(d, 6, {"params": params2, "opt_state": opt_state2})
+    p_res, s_res, _ = train_loop(
+        CFG, mid["params"], mid["opt_state"], step,
+        data_iterator(DATA, start_step=6), loop, start_step=6,
+        log=lambda *_: None)
+
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_keep(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.arange(10), "nested": {"y": jnp.ones((3, 3))}}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, tree, keep=2)
+    assert ckpt.list_steps(d) == [4, 5]
+    back = ckpt.restore(d, 5, tree)
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.arange(10))
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """Save unsharded, restore onto an explicit sharding (1-device mesh here;
+    the dry-run exercises the 512-device path)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(d, 1, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    back = ckpt.restore(d, 1, tree, shardings=sh)
+    assert back["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.arange(16.0).reshape(4, 4))
+
+
+def test_data_determinism_and_host_sharding():
+    b1 = make_batch(DATA, step=7)
+    b2 = make_batch(DATA, step=7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # two-host split covers the same global batch
+    h0 = make_batch(DataConfig(**{**DATA.__dict__, "num_hosts": 2,
+                                  "host_id": 0}), step=7)
+    h1 = make_batch(DataConfig(**{**DATA.__dict__, "num_hosts": 2,
+                                  "host_id": 1}), step=7)
+    full = np.asarray(b1["tokens"])
+    np.testing.assert_array_equal(np.asarray(h0["tokens"]), full[:2])
+    np.testing.assert_array_equal(np.asarray(h1["tokens"]), full[2:])
+
+
+def test_straggler_watchdog(tmp_path):
+    import time as _time
+    params, opt_state, step = setup(tmp_path)
+    seen = []
+
+    def slow_step(p, s, b):
+        out = step(p, s, b)
+        if len(seen_steps) == 8:            # one artificially slow step
+            _time.sleep(0.5)
+        seen_steps.append(1)
+        return out
+
+    seen_steps = []
+    loop = LoopConfig(total_steps=12, checkpoint_every=100,
+                      checkpoint_dir=str(tmp_path / "ck"), log_every=100,
+                      watchdog_factor=3.0,
+                      on_straggler=lambda st, dt, med: seen.append(st))
+    _, _, info = train_loop(CFG, params, opt_state, slow_step,
+                            data_iterator(DATA), loop, log=lambda *_: None)
+    assert info["stragglers"] >= 1
+    assert seen
+
+
+def test_int8_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, s = quantize_int8(x, block=128)
+    back = dequantize_int8(q, s, x.shape, x.size)
+    err = float(jnp.max(jnp.abs(back - x)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_compressed_training_still_converges(tmp_path):
+    params, opt_state, _ = setup(tmp_path)
+    comp = ErrorFeedbackCompressor(block=128)
+    grads_like = params
+    residual = comp.init(grads_like)
+    state = {"residual": residual}
+
+    base_step = make_train_step(CFG, OPT, remat="none")
+
+    def compressed_step(p, s, batch):
+        # recompute grads with compression inline (purely for the test loop)
+        from repro.training.train import loss_fn
+        loss, grads = jax.value_and_grad(
+            lambda q: loss_fn(q, CFG, batch, remat="none"))(p)
+        cg, state["residual"] = comp.transform(grads, state["residual"])
+        from repro.training.optimizer import apply_updates
+        p2, s2, m = apply_updates(OPT, p, cg, s)
+        return p2, s2, dict(m, loss=loss)
+
+    it = data_iterator(DATA)
+    first = last = None
+    for i in range(15):
+        params, opt_state, m = compressed_step(params, opt_state, next(it))
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.1, (first, last)
