@@ -1,7 +1,11 @@
 """Benchmark harness — one module per paper table/figure. Prints
-``name,value,derived`` CSV. ``python -m benchmarks.run [--only fig9] [--real]``.
+``name,value,derived`` CSV. ``python -m benchmarks.run [--only fig9] [--real]
+[--json-out DIR]`` (``--json-out`` also writes one ``BENCH_<fig>.json`` per
+module — the CI perf-trajectory artifact).
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -10,7 +14,7 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig10_policies, fig11_budget, fig12_blocking,
                         fig13_predictor, fig14_single_slo,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
-                        roofline)
+                        fig18_cluster, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -24,27 +28,45 @@ MODULES = [
     ("fig15", fig15_chunk_interplay),
     ("fig16", fig16_colocation),
     ("fig17", fig17_moe),
+    ("fig18", fig18_cluster),
     ("roofline", roofline),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. fig9,fig18)")
     ap.add_argument("--real", action="store_true",
                     help="also run real-executor measurements (fig12)")
+    ap.add_argument("--json-out", default=None, metavar="DIR",
+                    help="write BENCH_<fig>.json per module into DIR")
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
 
     print("name,value,derived")
     failures = 0
     for name, mod in MODULES:
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         t0 = time.monotonic()
         try:
-            for row in mod.run():
+            rows = list(mod.run())
+            for row in rows:
                 print(f"{row[0]},{row[1]},{row[2]}")
-            print(f"{name}/_elapsed_s,{time.monotonic()-t0:.1f},harness")
+            elapsed = time.monotonic() - t0
+            print(f"{name}/_elapsed_s,{elapsed:.1f},harness")
+            if args.json_out:
+                os.makedirs(args.json_out, exist_ok=True)
+                payload = {
+                    "bench": name,
+                    "elapsed_s": round(elapsed, 2),
+                    "metrics": {r[0]: r[1] for r in rows},
+                    "notes": {r[0]: r[2] for r in rows},
+                }
+                path = os.path.join(args.json_out, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
         except Exception as e:  # noqa
             failures += 1
             print(f"{name}/_error,1,{type(e).__name__}: {e}")

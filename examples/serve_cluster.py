@@ -1,0 +1,124 @@
+"""Cluster-scale serving walkthrough: N prefill instances behind SLO-aware
+dispatch, with decode-phase TPOT/TBT accounting — the multi-instance scenario
+behind the paper's cluster-scale goodput claims.
+
+Two modes share the SAME dispatch policy objects (repro.core.dispatch):
+
+  default — calibrated discrete-event ClusterSim (fast, no model needed):
+      PYTHONPATH=src python examples/serve_cluster.py [--instances 4]
+          [--rate 24] [--burstiness 3] [--policy all]
+
+  --real  — a tiny REAL model on CPU: Proxy + N threaded PrefillInstances +
+            a DecodeInstance, load-aware dispatch against live backlog:
+      PYTHONPATH=src python examples/serve_cluster.py --real [--requests 10]
+"""
+import argparse
+
+from repro.sim.cluster import simulate_cluster
+from repro.traces.qwentrace import TraceConfig, generate
+
+POLICIES = ["round-robin", "least-loaded", "deflection"]
+
+
+def run_sim(args):
+    print(f"== ClusterSim: {args.instances} prefill + {args.instances} decode "
+          f"instances, rate={args.rate} req/s, burstiness={args.burstiness} ==")
+    reqs = generate(TraceConfig(rate=args.rate, duration=args.duration,
+                                seed=args.seed, burstiness=args.burstiness,
+                                output_mean=200))
+    print(f"{len(reqs)} requests "
+          f"({sum(r.num_tokens for r in reqs)} prefill tokens)")
+    policies = POLICIES if args.policy == "all" else [args.policy]
+    print(f"{'dispatch':>14s} | {'TTFT att':>8s} {'e2e att':>8s} "
+          f"{'imbalance':>9s} {'preempts':>8s} | per-instance dispatched")
+    for policy in policies:
+        res = simulate_cluster("flowprefill", reqs,
+                               num_instances=args.instances, dispatch=policy,
+                               decode_instances=args.instances)
+        print(f"{policy:>14s} | {res.attainment:8.3f} "
+              f"{res.e2e_attainment:8.3f} {res.imbalance:9.2f} "
+              f"{res.preemptions:8d} | {res.dispatched}")
+
+
+def run_real(args):
+    import dataclasses
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_tiny_config
+    from repro.core import Request, SchedulerCore, TTFTPredictor
+    from repro.models import init_params
+    from repro.models.segments import SegmentedPrefill
+    from repro.serving.decode_instance import DecodeInstance
+    from repro.serving.prefill_instance import PrefillInstance
+    from repro.serving.proxy import Proxy
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    max_seq = 2048
+    print(f"== real mode: {args.instances} PrefillInstances (tiny model, "
+          f"CPU threads), dispatch={args.policy} ==")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ex = SegmentedPrefill(params, cfg, max_seq=max_seq, granularity="op",
+                          chunk_tokens=512)
+    xs, ys = [], []
+    for n in (256, 1024, 2048):               # offline TTFT profile + warmup
+        toks = jnp.zeros((1, n), jnp.int32)
+        ex.run_all(ex.start(toks))
+        t0 = time.monotonic()
+        ex.run_all(ex.start(toks))
+        xs.append(n)
+        ys.append(time.monotonic() - t0)
+    pred = TTFTPredictor.fit(xs, ys)
+
+    policy = args.policy if args.policy != "all" else "least-loaded"
+    insts = [PrefillInstance(
+        params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
+        max_seq=max_seq, executor=ex) for _ in range(args.instances)]
+    dec = DecodeInstance(params, cfg, decode_tokens=2)
+    proxy = Proxy(insts, [dec], dispatch=policy)
+    rng = np.random.default_rng(args.seed)
+    try:
+        for i in range(args.requests):
+            n = int(rng.choice([256, 256, 1024, 2048]))
+            req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
+                          arrival=time.monotonic())
+            proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
+            time.sleep(float(rng.exponential(0.15)))
+        assert proxy.drain(300.0)
+        time.sleep(0.5)
+        rep = proxy.report()
+        print(f"  requests={rep['n_requests']} "
+              f"dispatched={rep['dispatched_by_instance']}")
+        print(f"  SLO attainment={rep['slo_attainment']:.2f} "
+              f"TTFT mean={rep['ttft']['mean']:.3f}s "
+              f"p99={rep['ttft']['p99']:.3f}s")
+        print(f"  decoded={len(dec.finished)}")
+    finally:
+        proxy.shutdown()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=24.0)
+    ap.add_argument("--duration", type=float, default=40.0)
+    ap.add_argument("--burstiness", type=float, default=3.0)
+    ap.add_argument("--policy", default="all",
+                    choices=["all"] + POLICIES)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--requests", type=int, default=10,
+                    help="request count in --real mode")
+    args = ap.parse_args()
+    if args.real:
+        run_real(args)
+    else:
+        run_sim(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs.base import get_tiny_config
 from repro.core import Request, SchedulerCore, TTFTPredictor
-from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
+from repro.core.metrics import attainment_by_task, slo_attainment
 from repro.models import init_params
 from repro.models.segments import SegmentedPrefill
 from repro.serving.decode_instance import DecodeInstance

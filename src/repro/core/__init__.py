@@ -1,3 +1,5 @@
+from repro.core.dispatch import (DISPATCH_POLICIES, DispatchPolicy,
+                                 InstanceLoad, make_dispatch)
 from repro.core.events import Event, EventKind, EventMonitor
 from repro.core.metrics import (attainment_by_task, max_goodput, min_slo_scale,
                                 slo_attainment, ttft_stats)

@@ -1,0 +1,174 @@
+"""Instance-level dispatch policies (cluster layer).
+
+Pure policy logic, shared — like SchedulerCore — between the real runtime
+(repro/serving/proxy.py) and the discrete-event cluster simulator
+(repro/sim/cluster.py), so the dispatch policy evaluated in simulation is the
+one deployed.
+
+A policy sees a per-instance load snapshot (`InstanceLoad`) taken *relative to
+the arriving request* and picks the instance for it:
+
+  * ``round-robin``  — the paper's §4 proxy baseline (blind cycling).
+  * ``least-loaded`` — join-shortest-predicted-queue: pick the instance whose
+    predicted TTFT for the newcomer (TTFTPredictor over the instance's
+    outstanding competing tokens plus the newcomer's) is smallest.  Follows
+    the load-aware direction of arXiv 2605.02329 (SLO-aware scheduling for
+    disaggregated inference).
+  * ``deflection``   — slack-aware deflection (arXiv 2607.02043): keep the
+    round-robin default target, but when the target's backlog (its running
+    head plus queue) would eat too much of the newcomer's slack, deflect to a
+    feasible instance; with none feasible, take the least predicted TTFT.
+
+The load measure matters: under S-EDF with cheap operator-level preemption,
+a long or already-doomed (negative-slack) request in an instance's queue does
+NOT delay a short strict-SLO newcomer — it gets preempted or ranked below.
+`competing_tokens` therefore counts only work that would actually run before
+the newcomer: outstanding items with an earlier deadline that are themselves
+still feasible.  (Raw aggregate tokens make join-shortest-queue *worse* than
+round-robin here: doomed long requests repel traffic from instances that
+would serve it instantly.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
+
+from repro.core.predictor import TTFTPredictor
+from repro.core.request import Request
+
+
+@dataclass(frozen=True)
+class InstanceLoad:
+    """Snapshot of one prefill instance's backlog, relative to a candidate
+    request (see `competing_tokens`). Built fresh per dispatch decision by the
+    owner (Proxy / ClusterSim); policies never mutate it."""
+    instance_id: int
+    queued_tokens: float = 0.0           # competing waiting+preempted tokens
+    running_tokens: float = 0.0          # competing in-flight tokens
+    n_outstanding: int = 0
+
+    @property
+    def outstanding_tokens(self) -> float:
+        return self.queued_tokens + self.running_tokens
+
+
+def competing_tokens(items: Iterable[Tuple[float, float]],
+                     candidate: Request, now: float,
+                     predict: Optional[Callable[[float], float]]) -> float:
+    """Backlog that would run BEFORE `candidate` under S-EDF: the sum of
+    remaining tokens over `items` (pairs of (remaining_tokens, deadline))
+    whose deadline is earlier than the candidate's and which are still
+    feasible (positive slack) — infeasible work ranks below any feasible
+    newcomer and preemptable work yields within one operator."""
+    n = 0.0
+    for rem, deadline in items:
+        if deadline > candidate.deadline:
+            continue
+        lat = predict(rem) if predict is not None else 0.0
+        if deadline - now - lat > 0:
+            n += rem
+    return n
+
+
+def predicted_ttft(req: Request, load: InstanceLoad,
+                   predictor: Optional[TTFTPredictor]) -> float:
+    """Predicted TTFT were `req` dispatched to `load`'s instance now: the
+    predictor evaluated over the instance's competing tokens plus the
+    newcomer's (a serial-drain estimate; with no predictor, raw tokens act as
+    the time proxy — monotone, which is all least-loaded needs)."""
+    n = load.outstanding_tokens + req.num_tokens
+    if predictor is None:
+        return float(n)
+    return predictor.predict(n)
+
+
+class DispatchPolicy:
+    """Picks an instance id for one request given per-instance load."""
+    name = "base"
+    needs_loads = True        # False: owner may pass zeroed load snapshots
+
+    def __init__(self, predictor: Optional[TTFTPredictor] = None):
+        self.predictor = predictor
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinDispatch(DispatchPolicy):
+    name = "round-robin"
+    needs_loads = False       # blind cycling: only len(loads) matters
+
+    def __init__(self, predictor: Optional[TTFTPredictor] = None):
+        super().__init__(predictor)
+        self._next = 0
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        i = self._next % len(loads)
+        self._next += 1
+        return loads[i].instance_id
+
+
+class LeastLoadedDispatch(DispatchPolicy):
+    name = "least-loaded"
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        return min(loads, key=lambda ld: (predicted_ttft(req, ld,
+                                                         self.predictor),
+                                          ld.instance_id)).instance_id
+
+
+class DeflectionDispatch(DispatchPolicy):
+    """Slack-aware deflection: round-robin default target, deflected when the
+    newcomer's predicted TTFT there would consume more than `slack_margin` of
+    its slack. The small default margin deflects *early*: by the time the
+    predicted TTFT reaches the full slack it is too late to recover under
+    bursty arrivals (headroom is what absorbs the burst)."""
+    name = "deflection"
+
+    def __init__(self, predictor: Optional[TTFTPredictor] = None,
+                 slack_margin: float = 0.25):
+        super().__init__(predictor)
+        self._next = 0
+        self.slack_margin = slack_margin    # fraction of slack we may consume
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        i = self._next % len(loads)
+        self._next += 1
+        budget = (req.deadline - now) * self.slack_margin
+        primary = loads[i]
+        if predicted_ttft(req, primary, self.predictor) <= budget:
+            return primary.instance_id
+        feasible = [ld for ld in loads
+                    if predicted_ttft(req, ld, self.predictor) <= budget]
+        pool = feasible or list(loads)
+        return min(pool, key=lambda ld: (predicted_ttft(req, ld,
+                                                        self.predictor),
+                                         ld.instance_id)).instance_id
+
+
+DISPATCH_POLICIES = {
+    p.name: p for p in
+    (RoundRobinDispatch, LeastLoadedDispatch, DeflectionDispatch)
+}
+
+
+def make_dispatch(policy: Union[str, DispatchPolicy],
+                  predictor: Optional[TTFTPredictor] = None,
+                  **kwargs) -> DispatchPolicy:
+    """`policy` may also be a ready-made DispatchPolicy (passed through,
+    adopting `predictor` if it has none)."""
+    if isinstance(policy, DispatchPolicy):
+        if policy.predictor is None:
+            policy.predictor = predictor
+        return policy
+    try:
+        cls = DISPATCH_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown dispatch policy {policy!r}; "
+            f"known: {sorted(DISPATCH_POLICIES)}") from None
+    return cls(predictor=predictor, **kwargs)

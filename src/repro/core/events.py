@@ -10,7 +10,6 @@ from __future__ import annotations
 import enum
 import itertools
 import queue
-import threading
 from dataclasses import dataclass, field
 from typing import Any, Optional
 

@@ -4,7 +4,6 @@ Goodput = maximum sustainable request rate at an SLO-attainment goal (90%).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
 import numpy as np

@@ -36,9 +36,14 @@ class Request:
     batch_members: List[int] = field(default_factory=list)
     batch_tokens: int = 0                # aggregate token count of the batch
 
+    # decode phase (cluster-level end-to-end accounting; 0 = prefill-only)
+    output_tokens: int = 0               # tokens to decode after prefill
+    tbt_slo: float = float("inf")        # per-token TBT/TPOT SLO (seconds)
+
     # outcome
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    mean_tpot: Optional[float] = None    # observed mean time-per-output-token
 
     def __post_init__(self):
         if self.batch_tokens == 0:
@@ -57,6 +62,20 @@ class Request:
     @property
     def slo_met(self) -> bool:
         return self.ttft is not None and self.ttft <= self.slo + 1e-9
+
+    @property
+    def tbt_met(self) -> bool:
+        """Decode-phase SLO: mean time-per-output-token within the TBT SLO
+        (vacuously true for prefill-only requests)."""
+        if self.output_tokens <= 0:
+            return True
+        return self.mean_tpot is not None and \
+            self.mean_tpot <= self.tbt_slo + 1e-9
+
+    @property
+    def e2e_met(self) -> bool:
+        """End-to-end goodness: TTFT SLO and decode TBT SLO both attained."""
+        return self.slo_met and self.tbt_met
 
     def remaining_fraction(self) -> float:
         """Fraction of prefill work left (1.0 = untouched)."""

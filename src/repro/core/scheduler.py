@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.predictor import TTFTPredictor
-from repro.core.request import Request, RequestState
+from repro.core.request import Request
 
 PriorityFn = Callable[[Request, float, Callable[[float], float]], float]
 

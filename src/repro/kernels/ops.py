@@ -11,7 +11,6 @@ otherwise; on a TPU runtime the default is the kernel.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attn import flash_decode_attention

@@ -15,7 +15,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -183,11 +183,20 @@ def _layer_unit(cfg: ModelConfig) -> int:
     return 1
 
 
+def cost_dict(compiled) -> Dict:
+    """Normalize Compiled.cost_analysis(): newer jaxlib returns a per-device
+    list of dicts, older a single dict (or None)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _cell_costs(cfg, shape, mesh, rules):
     """lower+compile and return (flops, bytes, coll_dict, hlo_len)."""
     lowered = lower_cell(cfg, shape, mesh, rules)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     hlo = compiled.as_text()
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -258,7 +267,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             hlo = compiled.as_text()
             raw_coll = collective_bytes(hlo)
             # 2) shallow-extrapolated costs (scan bodies counted x trip count)

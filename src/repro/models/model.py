@@ -15,7 +15,6 @@ stacked layer params (compile time independent of depth — required for the
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -728,7 +727,6 @@ def _prefill_audio(params, cfg, batch, *, max_seq, attn_impl, cache_dtype):
     cache["pos"] = jnp.asarray(0, jnp.int32)
 
     # first decoder token logits from BOS
-    bos = batch.get("tokens")
     logits = jnp.zeros((B, cfg.vocab_size), frames.dtype)
     return logits, cache
 

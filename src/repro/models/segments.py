@@ -20,9 +20,7 @@ kernel's kv_len/q_offset scalars.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax

@@ -12,7 +12,6 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp

@@ -1,17 +1,26 @@
-"""Proxy (FlowPrefill §4): receives frontend requests, dispatches round-robin
-to prefill instances, hands completed prefills to decode instances (the PD
-KV transfer), and aggregates results. Instance-level load balancing beyond
-round-robin is out of scope (paper §4)."""
+"""Proxy (FlowPrefill §4): receives frontend requests, dispatches them across
+prefill instances via a pluggable instance-level policy (repro.core.dispatch —
+the SAME policy objects the cluster simulator evaluates), hands completed
+prefills to decode instances (the PD KV transfer), and aggregates results.
+
+The proxy owns per-instance load accounting (`InstanceLoad`): outstanding
+tokens are added at dispatch and retired when the instance reports the prefill
+done, so load-aware policies (least-loaded / slack-aware deflection) see live
+backlog without polling instance internals across threads.
+"""
 from __future__ import annotations
 
-import itertools
+import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import (DispatchPolicy, InstanceLoad,
+                                 competing_tokens, make_dispatch)
 from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
+from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
 from repro.serving.decode_instance import DecodeInstance, DecodeJob
 from repro.serving.pool import ExecTask
@@ -21,26 +30,70 @@ from repro.serving.prefill_instance import PrefillInstance
 class Proxy:
     def __init__(self, prefill_instances: List[PrefillInstance],
                  decode_instances: Optional[List[DecodeInstance]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 dispatch: Union[str, DispatchPolicy] = "round-robin",
+                 predictor: Optional[TTFTPredictor] = None):
         self.prefill_instances = prefill_instances
         self.decode_instances = decode_instances or []
         self.clock = clock
-        self._rr = itertools.cycle(range(len(prefill_instances)))
-        self._rr_dec = itertools.cycle(range(max(len(self.decode_instances), 1)))
+        if predictor is None:
+            # load-aware policies price backlog with the instances' own
+            # TTFT predictor when available
+            sched = getattr(prefill_instances[0], "scheduler", None)
+            predictor = getattr(sched, "predictor", None)
+        self.dispatch = make_dispatch(dispatch, predictor)
+        self._outstanding: List[dict] = [{} for _ in prefill_instances]
+        self._load_lock = threading.Lock()
+        self._rr_dec = 0
         self.requests: List[Request] = []
-        # wire prefill completion -> decode handoff
-        for inst in prefill_instances:
-            inst.on_prefill_done = self._prefill_done
+        self.dispatched: List[int] = [0] * len(prefill_instances)
+        # wire prefill completion -> load retirement + decode handoff
+        for i, inst in enumerate(prefill_instances):
+            inst.on_prefill_done = self._make_done_cb(i)
+
+    # ------------------------------------------------------------- dispatch
+    def _snapshot_loads(self, req: Request, now: float) -> List[InstanceLoad]:
+        """Per-instance competing-work snapshots for one dispatch decision
+        (see repro.core.dispatch). Remaining tokens come from the requests'
+        own progress counters, which the instances update as ops complete."""
+        if not self.dispatch.needs_loads:
+            return [InstanceLoad(instance_id=i)
+                    for i in range(len(self._outstanding))]
+        predict = getattr(self.dispatch.predictor, "predict", None)
+        loads = []
+        for i, outstanding in enumerate(self._outstanding):
+            items = [(max(r.remaining_tokens(), 0.0), r.deadline)
+                     for r in outstanding.values()]
+            loads.append(InstanceLoad(
+                instance_id=i,
+                queued_tokens=competing_tokens(items, req, now, predict),
+                n_outstanding=len(outstanding)))
+        return loads
 
     def submit(self, req: Request, tokens: np.ndarray) -> None:
-        self.requests.append(req)
-        inst = self.prefill_instances[next(self._rr)]
-        inst.submit_request(req, tokens)
+        with self._load_lock:
+            self.requests.append(req)
+            idx = self.dispatch.select(req, self._snapshot_loads(
+                req, self.clock()), self.clock())
+            self._outstanding[idx][req.rid] = req
+            self.dispatched[idx] += 1
+        self.prefill_instances[idx].submit_request(req, tokens)
+
+    def _make_done_cb(self, idx: int) -> Callable[[ExecTask], None]:
+        def cb(task: ExecTask) -> None:
+            with self._load_lock:
+                for r in task.requests:
+                    self._outstanding[idx].pop(r.rid, None)
+            self._prefill_done(task)
+        return cb
 
     def _prefill_done(self, task: ExecTask) -> None:
         if not self.decode_instances:
             return
-        dec = self.decode_instances[next(self._rr_dec)]
+        with self._load_lock:           # called from every instance's thread
+            dec = self.decode_instances[
+                self._rr_dec % len(self.decode_instances)]
+            self._rr_dec += 1
         logits = task.prefill_task.logits
         first = jnp.argmax(logits, -1)
         st = task.prefill_task.state
@@ -68,8 +121,12 @@ class Proxy:
 
     # ------------------------------------------------------------- metrics
     def report(self) -> dict:
+        with self._load_lock:
+            dispatched = list(self.dispatched)
         return {
             "n_requests": len(self.requests),
+            "dispatch_policy": self.dispatch.name,
+            "dispatched_by_instance": dispatched,
             "slo_attainment": slo_attainment(self.requests),
             "by_task": attainment_by_task(self.requests),
             "ttft": ttft_stats(self.requests),

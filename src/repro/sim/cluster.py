@@ -1,0 +1,215 @@
+"""Cluster-scale discrete-event simulator: N prefill instances + dispatch +
+a decode-phase cost model, on ONE shared event heap.
+
+Each prefill instance is an `InstanceEngine` (the exact state machine behind
+`PrefillSim` — a 1-instance round-robin cluster reproduces the single-instance
+simulator event-for-event). Arrivals are routed by a pluggable dispatch policy
+from `repro.core.dispatch` — the same policy objects the real `Proxy` uses —
+and completed prefills hand over to decode instances modeled as
+continuous-batching processor sharing with TPOT/TBT SLO accounting
+(`DecodeCostModel`), so the cluster reports *end-to-end* goodput.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.dispatch import DispatchPolicy, InstanceLoad, make_dispatch
+from repro.core.predictor import TTFTPredictor
+from repro.core.request import Request
+from repro.sim.costmodel import DecodeCostModel, PrefillCostModel
+from repro.sim.simulator import (ARRIVAL, DECODE_DONE, InstanceEngine,
+                                 SimConfig, handle_event, reset_requests)
+
+
+@dataclass
+class _DecodeJob:
+    request: Request
+    joined: float
+    done: float = 0.0                     # tokens decoded (fractional)
+
+
+class DecodeSim:
+    """One decode instance: a continuous batch in which all resident requests
+    advance together at 1/t_step(B, mean_context) tokens/sec (processor
+    sharing). Batch changes re-rate everyone; stale completion events are
+    invalidated by an epoch counter, so events are O(joins + leaves)."""
+
+    def __init__(self, cost: DecodeCostModel, heap: List, seq,
+                 instance_id: int = 0):
+        self.cost = cost
+        self.heap = heap
+        self.seq = seq
+        self.instance_id = instance_id
+        self.jobs: Dict[int, _DecodeJob] = {}
+        self.epoch = 0
+        self.last_update = 0.0
+        self.finished: List[Request] = []
+
+    def _step_time(self) -> float:
+        if not self.jobs:
+            return 0.0
+        ctx = sum(j.request.num_tokens + j.done for j in self.jobs.values())
+        return self.cost.step_time(len(self.jobs), ctx / len(self.jobs))
+
+    def _advance(self, now: float) -> None:
+        dt = now - self.last_update
+        self.last_update = now
+        if dt <= 0 or not self.jobs:
+            return
+        t_step = self._step_time()
+        gained = dt / t_step if t_step > 0 else float("inf")
+        for j in self.jobs.values():
+            j.done = min(j.done + gained, float(j.request.output_tokens))
+
+    def _reschedule(self, now: float) -> None:
+        self.epoch += 1
+        if not self.jobs:
+            return
+        t_step = self._step_time()
+        t_next = min((j.request.output_tokens - j.done) * t_step
+                     for j in self.jobs.values())
+        heapq.heappush(self.heap, (now + max(t_next, 0.0), next(self.seq),
+                                   DECODE_DONE, (self, self.epoch)))
+
+    def join(self, req: Request, now: float) -> None:
+        self._advance(now)
+        self.jobs[req.rid] = _DecodeJob(request=req, joined=now)
+        self._reschedule(now)
+
+    def on_decode_done(self, payload, now: float) -> List[Request]:
+        _, epoch = payload
+        if epoch != self.epoch:
+            return []                                  # stale
+        self._advance(now)
+        done = [j for j in self.jobs.values()
+                if j.done >= j.request.output_tokens - 1e-6]
+        for j in done:
+            r = j.request
+            r.finish_time = now
+            r.mean_tpot = (now - j.joined) / max(r.output_tokens, 1)
+            del self.jobs[r.rid]
+            self.finished.append(r)
+        self._reschedule(now)
+        return [j.request for j in done]
+
+
+@dataclass
+class ClusterResult:
+    requests: List[Request]
+    blocking_times: List[float]
+    rounds: int
+    preemptions: int
+    makespan: float
+    dispatched: List[int]                 # requests routed per prefill instance
+    decoded: int = 0
+
+    @property
+    def attainment(self) -> float:
+        """TTFT-SLO attainment (comparable with single-instance SimResult)."""
+        met = sum(1 for r in self.requests if r.slo_met)
+        return met / max(len(self.requests), 1)
+
+    @property
+    def e2e_attainment(self) -> float:
+        """End-to-end goodness: TTFT and decode-TBT SLOs both attained."""
+        met = sum(1 for r in self.requests if r.e2e_met)
+        return met / max(len(self.requests), 1)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean dispatched requests across instances (1.0 = perfect)."""
+        mean = sum(self.dispatched) / max(len(self.dispatched), 1)
+        return max(self.dispatched) / max(mean, 1e-9)
+
+
+class ClusterSim:
+    """N-instance prefill cluster + dispatch + decode phase, one event heap."""
+
+    def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig, *,
+                 num_instances: int = 2,
+                 dispatch: str = "round-robin",
+                 predictor: Optional[TTFTPredictor] = None,
+                 decode_instances: int = 0,
+                 decode_cost: Optional[DecodeCostModel] = None):
+        if num_instances < 1:
+            raise ValueError("num_instances must be >= 1")
+        self.cost = cost
+        self.cfg = sim_cfg
+        chunk = sim_cfg.chunk_tokens
+        self.predictor = predictor or TTFTPredictor.from_cost_model(
+            lambda n: cost.prefill_time(n, chunk), max_tokens=32768)
+        self.num_instances = num_instances
+        self.policy: DispatchPolicy = make_dispatch(dispatch, self.predictor)
+        self.num_decode = decode_instances
+        self.decode_cost = decode_cost or DecodeCostModel(cost.m, cost.hw)
+
+    def run(self, requests: Sequence[Request]) -> ClusterResult:
+        heap: List[Tuple[float, int, int, object]] = []
+        seq = itertools.count()
+        engines = [InstanceEngine(self.cost, self.cfg, self.predictor,
+                                  heap, seq, instance_id=i)
+                   for i in range(self.num_instances)]
+        decodes = [DecodeSim(self.decode_cost, heap, seq, instance_id=i)
+                   for i in range(self.num_decode)]
+        reset_requests(requests)
+        for r in requests:
+            heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
+        # load-oblivious policies (round-robin) skip snapshot building
+        idle_loads = [InstanceLoad(instance_id=e.instance_id)
+                      for e in engines]
+
+        now = 0.0
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == ARRIVAL:
+                req: Request = payload
+                if self.policy.needs_loads:
+                    loads = [e.snapshot_load(req, now) for e in engines]
+                else:
+                    loads = idle_loads
+                engines[self.policy.select(req, loads, now)].on_arrival(
+                    req, now)
+            elif kind == DECODE_DONE:
+                payload[0].on_decode_done(payload, now)
+            else:
+                for r in handle_event(kind, payload, now):
+                    if decodes and r.output_tokens > 0:
+                        # join the decode instance with the smallest batch
+                        dec = min(decodes, key=lambda d: (len(d.jobs),
+                                                          d.instance_id))
+                        dec.join(r, now)
+
+        return ClusterResult(
+            requests=list(requests),
+            blocking_times=[b for e in engines for b in e.blocking],
+            rounds=sum(e.rounds for e in engines),
+            preemptions=sum(e.preemptions for e in engines),
+            makespan=now,
+            dispatched=[e.n_dispatched for e in engines],
+            decoded=sum(len(d.finished) for d in decodes),
+        )
+
+
+def simulate_cluster(system: str, requests: Sequence[Request], *,
+                     model: str = "llama3-8b",
+                     num_instances: int = 2,
+                     dispatch: str = "round-robin",
+                     decode_instances: int = 0,
+                     hw=None, **overrides) -> ClusterResult:
+    """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
+    presets, same fresh-copy semantics, plus instance count and dispatch."""
+    import copy
+    from dataclasses import replace
+
+    from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
+    from repro.sim.policies import preset
+
+    spec = replace(MODEL_SPECS[model], tp=MODEL_TP.get(model, 1))
+    cost = PrefillCostModel(spec, hw or A800)
+    sim = ClusterSim(cost, preset(system, **overrides),
+                     num_instances=num_instances, dispatch=dispatch,
+                     decode_instances=decode_instances)
+    return sim.run([copy.copy(r) for r in requests])

@@ -13,9 +13,8 @@ This reproduces the paper's motivating observations without fitting:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -149,3 +148,50 @@ class PrefillCostModel:
 
     def throughput(self, tokens: int, chunk_tokens: int = 0) -> float:
         return tokens / self.prefill_time(tokens, chunk_tokens)
+
+
+class DecodeCostModel:
+    """Analytic decode-step latency for the cluster simulator's decode phase.
+
+    Decode is memory-bound: every step streams the full weight set once
+    (continuous batching amortizes it over the batch) plus each request's KV
+    prefix. Step latency for a batch of B requests with mean context C:
+
+        t_step = (W_bytes + B * C * kv_bytes_per_token) / (tp * bw * eff_b)
+                 + L * n_ops * launch_overhead
+
+    which yields the familiar shape: near-flat latency at small B (weights
+    dominate), linear growth once aggregate KV reads take over — i.e. TBT
+    degrades as a decode instance's batch grows, which is exactly the signal
+    the cluster-level TPOT/TBT SLO accounting needs.
+    """
+
+    def __init__(self, model: ModelSpec, hw: HardwareSpec = A800):
+        self.m = model
+        self.hw = hw
+
+    @property
+    def weight_bytes(self) -> float:
+        m = self.m
+        attn = m.d_model * (m.num_heads + 2 * m.num_kv_heads) * m.head_dim \
+            + m.num_heads * m.head_dim * m.d_model
+        if m.num_experts:
+            ffn = m.d_model * m.num_experts \
+                + 3 * m.d_model * m.d_ff * m.experts_per_token
+        else:
+            ffn = 3 * m.d_model * m.d_ff
+        return 2.0 * m.num_layers * (attn + ffn)       # bf16
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        return 2.0 * 2 * self.m.num_layers * self.m.num_kv_heads \
+            * self.m.head_dim                          # bf16 K and V
+
+    def step_time(self, batch_size: int, mean_context: float) -> float:
+        if batch_size <= 0:
+            return 0.0
+        by = self.weight_bytes + batch_size * mean_context \
+            * self.kv_bytes_per_token
+        t = by / self.m.tp / (self.hw.hbm_bw * self.hw.eff_b)
+        return t + self.m.num_layers * len(self.m.op_names) \
+            * self.hw.launch_overhead

@@ -1,11 +1,11 @@
 """Baseline system presets for the simulator (paper §6.1 Baselines)."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Sequence
 
 from repro.core.request import Request
 from repro.sim.costmodel import (MODEL_SPECS, MODEL_TP, A800, HardwareSpec,
-                                 ModelSpec, PrefillCostModel)
+                                 PrefillCostModel)
 from repro.sim.simulator import PrefillSim, SimConfig, SimResult
 
 

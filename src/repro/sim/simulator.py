@@ -1,11 +1,18 @@
-"""Discrete-event simulator of one prefill instance (cluster-scale evaluation).
+"""Discrete-event simulator of prefill instances (cluster-scale evaluation).
 
 The simulator drives the SAME SchedulerCore as the real runtime — only the
-executor is simulated. The device is a serial processor executing operator
+executor is simulated. Each device is a serial processor executing operator
 units whose durations come from the analytic cost model; preemption takes
 effect at the next boundary of the configured granularity (op / layer / chunk /
 whole), exactly like the cooperative protocol. Events are lazily invalidated
 via task epochs, so the event count is O(actions), not O(operators).
+
+The per-instance state machine lives in `InstanceEngine`, which pushes its
+events into a caller-owned heap: `PrefillSim` runs ONE engine on a private
+heap (the single-device study), while `repro.sim.cluster.ClusterSim` runs N
+engines plus dispatch and a decode-phase model on one shared heap — both paths
+execute identical engine code, so a 1-instance cluster reproduces `PrefillSim`
+event-for-event.
 
 Baseline systems are expressed as SimConfig presets (policies.py):
 DistServe (FCFS), DistServe-CP2K/8K (chunk boundaries + EDF), layer-level
@@ -16,14 +23,18 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.dispatch import InstanceLoad, competing_tokens
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import Action, SchedulerCore
 from repro.sim.costmodel import PrefillCostModel
+
+# event kinds (shared heap: (time, seq, kind, payload))
+ARRIVAL, COMPLETION, PREEMPT_AT, DECODE_DONE = 0, 1, 2, 3
 
 
 @dataclass
@@ -47,6 +58,10 @@ class SimTask:
 
     def position(self, now: float) -> float:
         return self.exec_offset + (now - self.resume_time)
+
+    def remaining_fraction(self, now: float, running: bool) -> float:
+        pos = self.position(now) if running else self.exec_offset
+        return max(0.0, 1.0 - pos / max(self.total, 1e-12))
 
     def next_boundary(self, now: float) -> float:
         """Execution offset of the first boundary at/after `now`."""
@@ -82,28 +97,76 @@ class SimResult:
 
     @property
     def attainment(self) -> float:
-        done = [r for r in self.requests if r.first_token_time is not None]
         met = sum(1 for r in self.requests if r.slo_met)
         return met / max(len(self.requests), 1)
 
 
-class PrefillSim:
-    ARRIVAL, COMPLETION, PREEMPT_AT = 0, 1, 2
+class InstanceEngine:
+    """One prefill instance's scheduling + execution state machine.
 
-    def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig,
-                 predictor: Optional[TTFTPredictor] = None):
+    Pushes COMPLETION / PREEMPT_AT events (tagged with itself) into the
+    owner's heap; the owner pops events and routes them back via the
+    ``on_*`` handlers. The owner also decides which engine receives each
+    ARRIVAL (that is the cluster dispatch decision).
+    """
+
+    def __init__(self, cost: PrefillCostModel, cfg: SimConfig,
+                 predictor: TTFTPredictor, heap: List, seq: Iterator[int],
+                 instance_id: int = 0):
         self.cost = cost
-        self.cfg = sim_cfg
-        chunk = sim_cfg.chunk_tokens
-        self.predictor = predictor or TTFTPredictor.from_cost_model(
-            lambda n: cost.prefill_time(n, chunk), max_tokens=32768)
+        self.cfg = cfg
+        self.predictor = predictor
+        self.heap = heap
+        self.seq = seq
+        self.instance_id = instance_id
         self.core = SchedulerCore(
-            predictor=self.predictor, policy=sim_cfg.policy,
-            batch_budget=sim_cfg.batch_budget,
-            enable_batching=sim_cfg.enable_batching,
-            batching_mode=sim_cfg.batching_mode)
+            predictor=predictor, policy=cfg.policy,
+            batch_budget=cfg.batch_budget,
+            enable_batching=cfg.enable_batching,
+            batching_mode=cfg.batching_mode)
+        self.waiting: List[Request] = []
+        self.preempted: Dict[int, SimTask] = {}      # tid -> task
+        self.running: Optional[SimTask] = None
+        self.pending_preempt: Optional[Tuple] = None
+        self.blocking: List[float] = []
+        self.rounds = 0
+        self.preemptions = 0
+        self.n_dispatched = 0
 
-    # ------------------------------------------------------------------ build
+    # ---------------------------------------------------------------- load
+    def outstanding_tokens(self, now: float) -> float:
+        """Raw token-equivalent backlog (waiting + preempted + running)."""
+        n = float(sum(r.num_tokens for r in self.waiting))
+        for t in self.preempted.values():
+            n += t.tokens * t.remaining_fraction(now, running=False)
+        if self.running is not None:
+            n += self.running.tokens * self.running.remaining_fraction(
+                now, running=True)
+        return n
+
+    def snapshot_load(self, candidate: Request, now: float) -> InstanceLoad:
+        """InstanceLoad snapshot relative to `candidate`, counting only
+        competing work (repro.core.dispatch.competing_tokens): queued items
+        filtered by deadline + feasibility; the running task included when its
+        batch deadline is earlier (it finishes first — otherwise it yields
+        within one boundary)."""
+        items = [(float(r.num_tokens), r.deadline) for r in self.waiting]
+        items += [(t.tokens * t.remaining_fraction(now, running=False),
+                   min(r.deadline for r in t.requests))
+                  for t in self.preempted.values()]
+        queued = competing_tokens(items, candidate, now, self.predictor.predict)
+        running = 0.0
+        if self.running is not None:
+            t = self.running
+            if min(r.deadline for r in t.requests) <= candidate.deadline:
+                running = t.tokens * t.remaining_fraction(now, running=True)
+        return InstanceLoad(
+            instance_id=self.instance_id, queued_tokens=queued,
+            running_tokens=running,
+            n_outstanding=len(self.waiting) + len(self.preempted)
+            + (self.running is not None))
+
+    # --------------------------------------------------------------- build
     def _boundaries(self, op_ends: np.ndarray, tokens: int) -> np.ndarray:
         g = self.cfg.granularity
         m = self.cost.m
@@ -138,122 +201,158 @@ class PrefillSim:
             r.batch_tokens = tokens      # remaining-work basis for S-EDF
         return t
 
-    # -------------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request]) -> SimResult:
+    # ------------------------------------------------------------ execution
+    def _schedule_completion(self, task: SimTask, t0: float) -> None:
+        t_done = t0 + (task.total - task.exec_offset)
+        heapq.heappush(self.heap, (t_done, next(self.seq), COMPLETION,
+                                   (self, task, task.epoch)))
+
+    def _enact(self, decision, t0: float) -> None:
+        if decision.action == Action.SUBMIT:
+            batch = decision.batch
+            for r in batch:
+                r.state = RequestState.RUNNING
+            ids = {r.rid for r in batch}
+            self.waiting[:] = [r for r in self.waiting if r.rid not in ids]
+            task = self._make_task(batch, t0)
+            self.running = task
+            self._schedule_completion(task, t0)
+        elif decision.action == Action.RESUME:
+            rid = decision.target.rid
+            tid = next(t for t, task_ in self.preempted.items()
+                       if any(r.rid == rid for r in task_.requests))
+            task = self.preempted.pop(tid)
+            for r in task.requests:
+                r.state = RequestState.RUNNING
+            task.resume_time = t0
+            task.epoch += 1
+            self.running = task
+            self._schedule_completion(task, t0)
+
+    def _round(self, t0: float) -> None:
         cfg = self.cfg
+        self.rounds += 1
+        if self.pending_preempt is not None:
+            return                          # round resumes after the ACK
+        running = self.running
+        running_head = running.head if running is not None else None
+        # each preempted TASK is represented by its highest-priority member
+        # (Alg. 2's Q_all contains requests, not tasks — a batch must not
+        # starve because its head went infeasible)
+        reps = [max(t.requests, key=lambda r: self.core.priority(r, t0))
+                for t in self.preempted.values()]
+        decision = self.core.schedule_round(
+            t0 + cfg.round_overhead, self.waiting, reps, running_head)
+        if decision.is_noop:
+            return
+        if decision.preempt is not None and running is not None:
+            if not cfg.preempt:
+                return                      # baseline without preemption
+            # effective at the next boundary (cooperative)
+            b = running.next_boundary(t0)
+            t_eff = running.resume_time + (b - running.exec_offset)
+            heapq.heappush(self.heap, (t_eff, next(self.seq), PREEMPT_AT,
+                                       (self, running, running.epoch,
+                                        decision)))
+            self.pending_preempt = (running, running.epoch, decision)
+            self.preemptions += 1
+            self.blocking.append(t_eff - t0)
+            return
+        self._enact(decision, t0 + cfg.round_overhead)
+
+    # -------------------------------------------------------- event handlers
+    def on_arrival(self, req: Request, now: float) -> None:
+        self.n_dispatched += 1
+        self.waiting.append(req)
+        self._round(now)
+
+    def on_completion(self, payload, now: float) -> List[Request]:
+        """Returns the completed requests ([] if the event was stale)."""
+        _, task, epoch = payload
+        if self.running is None or task.tid != self.running.tid or \
+                epoch != task.epoch:
+            return []                       # stale
+        for r in task.requests:
+            r.first_token_time = now
+            r.state = RequestState.DONE
+            r.ops_done = r.ops_total
+        self.running = None
+        self._round(now)
+        return list(task.requests)
+
+    def on_preempt_at(self, payload, now: float) -> None:
+        _, task, epoch, decision = payload
+        if self.running is None or task.tid != self.running.tid or \
+                epoch != task.epoch:
+            self.pending_preempt = None
+            return
+        task.epoch += 1                 # cancels its completion event
+        task.exec_offset = task.next_boundary(now)
+        # boundary index -> ops completed (for S-EDF remaining work)
+        ops_done = int(np.searchsorted(
+            task.op_ends, task.exec_offset - 1e-12) + 1)
+        for r in task.requests:
+            r.state = RequestState.PREEMPTED
+            r.ops_done = ops_done
+        self.preempted[task.tid] = task
+        self.running = None
+        self.pending_preempt = None
+        self._enact(decision, now)
+
+
+def handle_event(kind: int, payload, now: float) -> List[Request]:
+    """Route one popped engine event (COMPLETION / PREEMPT_AT) to its engine.
+    Returns requests whose prefill completed at this event."""
+    engine: InstanceEngine = payload[0]
+    if kind == COMPLETION:
+        return engine.on_completion(payload, now)
+    if kind == PREEMPT_AT:
+        engine.on_preempt_at(payload, now)
+        return []
+    raise ValueError(kind)
+
+
+def reset_requests(requests: Sequence[Request]) -> None:
+    for r in requests:
+        r.state = RequestState.WAITING
+        r.first_token_time = None
+        r.finish_time = None
+        r.mean_tpot = None
+        r.ops_done = 0
+        r.ops_total = 0
+        r.batch_tokens = r.num_tokens
+
+
+class PrefillSim:
+    """Single-instance simulator (the paper's per-device study)."""
+
+    def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig,
+                 predictor: Optional[TTFTPredictor] = None):
+        self.cost = cost
+        self.cfg = sim_cfg
+        chunk = sim_cfg.chunk_tokens
+        self.predictor = predictor or TTFTPredictor.from_cost_model(
+            lambda n: cost.prefill_time(n, chunk), max_tokens=32768)
+
+    def run(self, requests: Sequence[Request]) -> SimResult:
         heap: List[Tuple[float, int, int, object]] = []
         seq = itertools.count()
+        engine = InstanceEngine(self.cost, self.cfg, self.predictor,
+                                heap, seq)
+        reset_requests(requests)
         for r in requests:
-            r.state = RequestState.WAITING
-            r.first_token_time = None
-            r.ops_done = 0
-            r.ops_total = 0
-            r.batch_tokens = r.num_tokens
-            heapq.heappush(heap, (r.arrival, next(seq), self.ARRIVAL, r))
+            heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
 
-        waiting: List[Request] = []
-        preempted: Dict[int, SimTask] = {}     # head rid -> task
-        running: Optional[SimTask] = None
-        pending_preempt: Optional[Tuple[SimTask, int, object]] = None
-        blocking: List[float] = []
-        rounds = 0
-        preemptions = 0
         now = 0.0
-
-        def schedule_completion(task: SimTask, t0: float):
-            t_done = t0 + (task.total - task.exec_offset)
-            heapq.heappush(heap, (t_done, next(seq), self.COMPLETION,
-                                  (task, task.epoch)))
-
-        def enact(decision, t0: float):
-            nonlocal running
-            if decision.action == Action.SUBMIT:
-                batch = decision.batch
-                for r in batch:
-                    r.state = RequestState.RUNNING
-                ids = {r.rid for r in batch}
-                waiting[:] = [r for r in waiting if r.rid not in ids]
-                task = self._make_task(batch, t0)
-                running = task
-                schedule_completion(task, t0)
-            elif decision.action == Action.RESUME:
-                rid = decision.target.rid
-                tid = next(t for t, task_ in preempted.items()
-                           if any(r.rid == rid for r in task_.requests))
-                task = preempted.pop(tid)
-                for r in task.requests:
-                    r.state = RequestState.RUNNING
-                task.resume_time = t0
-                task.epoch += 1
-                running = task
-                schedule_completion(task, t0)
-
-        def do_round(t0: float):
-            nonlocal running, pending_preempt, rounds, preemptions
-            rounds += 1
-            if pending_preempt is not None:
-                return                          # round resumes after the ACK
-            running_head = running.head if running is not None else None
-            # each preempted TASK is represented by its highest-priority member
-            # (Alg. 2's Q_all contains requests, not tasks — a batch must not
-            # starve because its head went infeasible)
-            reps = [max(t.requests, key=lambda r: self.core.priority(r, t0))
-                    for t in preempted.values()]
-            decision = self.core.schedule_round(
-                t0 + cfg.round_overhead, waiting, reps, running_head)
-            if decision.is_noop:
-                return
-            if decision.preempt is not None and running is not None:
-                if not cfg.preempt:
-                    return                      # baseline without preemption
-                # effective at the next boundary (cooperative)
-                b = running.next_boundary(t0)
-                t_eff = running.resume_time + (b - running.exec_offset)
-                heapq.heappush(heap, (t_eff, next(seq), self.PREEMPT_AT,
-                                      (running, running.epoch, decision)))
-                pending_preempt = (running, running.epoch, decision)
-                preemptions += 1
-                blocking.append(t_eff - t0)
-                return
-            enact(decision, t0 + cfg.round_overhead)
-
         while heap:
             now, _, kind, payload = heapq.heappop(heap)
-            if kind == self.ARRIVAL:
-                r: Request = payload
-                waiting.append(r)
-                do_round(now)
-            elif kind == self.COMPLETION:
-                task, epoch = payload
-                if running is None or task.tid != running.tid or \
-                        epoch != task.epoch:
-                    continue                    # stale
-                for r in task.requests:
-                    r.first_token_time = now
-                    r.state = RequestState.DONE
-                    r.ops_done = r.ops_total
-                running = None
-                do_round(now)
-            elif kind == self.PREEMPT_AT:
-                task, epoch, decision = payload
-                if running is None or task.tid != running.tid or \
-                        epoch != task.epoch:
-                    pending_preempt = None
-                    continue
-                task.epoch += 1                 # cancels its completion event
-                task.exec_offset = task.next_boundary(now)
-                # boundary index -> ops completed (for S-EDF remaining work)
-                ops_done = int(np.searchsorted(
-                    task.op_ends, task.exec_offset - 1e-12) + 1)
-                for r in task.requests:
-                    r.state = RequestState.PREEMPTED
-                    r.ops_done = ops_done
-                preempted[task.tid] = task
-                running = None
-                pending_preempt = None
-                enact(decision, now)
+            if kind == ARRIVAL:
+                engine.on_arrival(payload, now)
+            else:
+                handle_event(kind, payload, now)
 
-        makespan = now
-        return SimResult(requests=list(requests), blocking_times=blocking,
-                         rounds=rounds, preemptions=preemptions,
-                         makespan=makespan)
+        return SimResult(requests=list(requests),
+                         blocking_times=engine.blocking,
+                         rounds=engine.rounds,
+                         preemptions=engine.preemptions,
+                         makespan=now)

@@ -10,8 +10,8 @@ generated token IDs of the specified lengths, so content is immaterial.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -60,6 +60,10 @@ class TraceConfig:
     seed: int = 0
     task_ratios: Optional[Dict[str, float]] = None
     max_len: int = 32768
+    # decode phase (cluster end-to-end accounting); 0 = prefill-only trace
+    output_mean: float = 0.0          # mean output length (lognormal)
+    output_std: float = 0.0           # 0 -> defaults to output_mean
+    tbt_slo: float = 0.1              # per-token TBT SLO when decoding
 
 
 def generate(cfg: TraceConfig) -> List[Request]:
@@ -84,11 +88,18 @@ def generate(cfg: TraceConfig) -> List[Request]:
         if t >= cfg.duration:
             break
         task = tasks[int(rng.choice(len(tasks), p=probs))]
+        out_tokens = 0
+        if cfg.output_mean > 0:
+            mu, sigma = _lognormal_params(cfg.output_mean,
+                                          cfg.output_std or cfg.output_mean)
+            out_tokens = int(np.clip(int(rng.lognormal(mu, sigma)), 1, 8192))
         out.append(Request(
             num_tokens=sample_length(task, rng, max_len=cfg.max_len),
             slo=slos[task] * cfg.slo_scale,
             arrival=t,
             task_type=task,
+            output_tokens=out_tokens,
+            tbt_slo=cfg.tbt_slo if out_tokens else float("inf"),
         ))
     return out
 

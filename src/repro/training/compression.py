@@ -10,7 +10,6 @@ pure and composes with make_train_step(compress=...).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Any, Optional, Tuple
 
 import jax

@@ -5,14 +5,13 @@ watchdog, optional gradient compression).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import logical
 from repro.models.model import forward
 from repro.training import optimizer as opt
 from repro.training.optimizer import AdamWConfig, AdamWState

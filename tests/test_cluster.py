@@ -1,0 +1,147 @@
+"""Cluster simulator validation: single-instance parity with PrefillSim,
+goodput scaling with instance count, load-aware dispatch beating round-robin
+under bursty arrivals, and decode-phase TPOT/TBT accounting."""
+import numpy as np
+
+from repro.core.metrics import max_goodput
+from repro.sim.cluster import ClusterSim, simulate_cluster
+from repro.sim.costmodel import (A800, LLAMA3_8B, DecodeCostModel,
+                                 PrefillCostModel)
+from repro.sim.policies import simulate
+from repro.sim.simulator import SimConfig
+from repro.traces.qwentrace import TraceConfig, generate
+
+
+def test_cluster_single_instance_parity_with_prefill_sim():
+    """ClusterSim(num_instances=1, round-robin) must reproduce PrefillSim
+    exactly — same engine, same event ordering — on the same trace+seed."""
+    reqs = generate(TraceConfig(rate=4, duration=40, seed=0))
+    single = simulate("flowprefill", reqs)
+    cluster = simulate_cluster("flowprefill", reqs, num_instances=1,
+                               dispatch="round-robin")
+    assert cluster.attainment == single.attainment
+    assert cluster.rounds == single.rounds
+    assert cluster.preemptions == single.preemptions
+    assert cluster.makespan == single.makespan
+    t_single = sorted(r.ttft for r in single.requests)
+    t_cluster = sorted(r.ttft for r in cluster.requests)
+    np.testing.assert_allclose(t_cluster, t_single, rtol=0, atol=0)
+
+
+def test_every_request_dispatched_exactly_once():
+    reqs = generate(TraceConfig(rate=8, duration=30, seed=1))
+    res = simulate_cluster("flowprefill", reqs, num_instances=3,
+                           dispatch="least-loaded")
+    assert sum(res.dispatched) == len(reqs)
+    assert all(r.first_token_time is not None for r in res.requests)
+    assert all(r.first_token_time >= r.arrival for r in res.requests)
+
+
+def cluster_goodput(num_instances, policy, burstiness=1.0, seed=3):
+    rates = [2 * num_instances, 4 * num_instances, 6 * num_instances,
+             8 * num_instances, 12 * num_instances]
+    atts = []
+    for rate in rates:
+        reqs = generate(TraceConfig(rate=rate, duration=30, seed=seed,
+                                    burstiness=burstiness))
+        atts.append(simulate_cluster(
+            "flowprefill", reqs, num_instances=num_instances,
+            dispatch=policy).attainment)
+    return max_goodput(rates, atts)
+
+
+def test_goodput_scales_with_instance_count():
+    g = {n: cluster_goodput(n, "least-loaded") for n in (1, 2, 4)}
+    assert g[1] < g[2] < g[4]
+    assert g[2] >= 1.6 * g[1]           # near-linear scaling
+    assert g[4] >= 1.6 * g[2]
+
+
+def test_bursty_load_aware_beats_round_robin():
+    """The fig18 acceptance claim: under bursty arrivals, least-loaded and
+    slack-aware deflection both beat blind round-robin at cluster scale."""
+    rate = 32
+    reqs = generate(TraceConfig(rate=rate, duration=40, seed=3,
+                                burstiness=3.0))
+    att = {pol: simulate_cluster("flowprefill", reqs, num_instances=4,
+                                 dispatch=pol).attainment
+           for pol in ("round-robin", "least-loaded", "deflection")}
+    assert att["least-loaded"] > att["round-robin"] + 0.01
+    assert att["deflection"] > att["round-robin"] + 0.01
+
+
+def test_decode_phase_tpot_accounting():
+    reqs = generate(TraceConfig(rate=6, duration=30, seed=2,
+                                output_mean=128, tbt_slo=0.05))
+    res = simulate_cluster("flowprefill", reqs, num_instances=2,
+                           dispatch="least-loaded", decode_instances=2)
+    assert res.decoded == len(reqs)
+    for r in res.requests:
+        assert r.mean_tpot is not None and r.mean_tpot > 0
+        assert r.finish_time is not None
+        assert r.finish_time >= r.first_token_time
+        # can't decode faster than the unbatched analytic step time
+        dec = DecodeCostModel(LLAMA3_8B, A800)
+        assert r.mean_tpot >= dec.step_time(1, r.num_tokens) * 0.5
+    # e2e attainment accounts for the TBT SLO on top of TTFT
+    assert res.e2e_attainment <= res.attainment
+
+
+def test_decode_tbt_slo_binds_under_decode_pressure():
+    """With one decode instance absorbing a whole cluster's prefills, decode
+    batches grow and TPOT degrades; an aggressive TBT SLO must then fail
+    requests that met their TTFT SLO (e2e < TTFT attainment)."""
+    reqs = generate(TraceConfig(rate=16, duration=30, seed=5,
+                                output_mean=256, tbt_slo=0.011))
+    res = simulate_cluster("flowprefill", reqs, num_instances=4,
+                           dispatch="least-loaded", decode_instances=1)
+    assert res.decoded == len(reqs)
+    assert res.e2e_attainment < res.attainment
+
+
+def test_request_reuse_clears_decode_outcomes():
+    """Re-running the same Request objects must not leak the previous run's
+    decode outcomes (mean_tpot/finish_time) into e2e accounting: a passing
+    first run followed by a decode-less rerun must read as NOT decoded."""
+    from dataclasses import replace
+
+    from repro.sim.costmodel import MODEL_TP
+    from repro.sim.policies import preset
+
+    reqs = generate(TraceConfig(rate=4, duration=10, seed=7,
+                                output_mean=64, tbt_slo=10.0))  # all TBT-pass
+    first = simulate_cluster("flowprefill", reqs, num_instances=1,
+                             dispatch="round-robin", decode_instances=1)
+    assert first.decoded == len(reqs)
+    assert first.e2e_attainment == first.attainment > 0
+    # same Request list, no decode instances: outcomes must be cleared, and
+    # requests that wanted decode but never got it are not e2e-met
+    spec = replace(LLAMA3_8B, tp=MODEL_TP["llama3-8b"])
+    sim = ClusterSim(PrefillCostModel(spec, A800), preset("flowprefill"),
+                     num_instances=1, decode_instances=0)
+    second = sim.run(reqs)
+    assert all(r.mean_tpot is None and r.finish_time is None
+               for r in second.requests)
+    assert second.e2e_attainment == 0.0 < second.attainment
+
+
+def test_decode_cost_model_monotone():
+    dec = DecodeCostModel(LLAMA3_8B, A800)
+    # llama3-8b bf16 weights ~16 GB
+    assert 10e9 <= dec.weight_bytes <= 20e9
+    assert dec.step_time(0, 0) == 0.0
+    t1 = dec.step_time(1, 1024)
+    t8 = dec.step_time(8, 1024)
+    t8_long = dec.step_time(8, 8192)
+    assert 0 < t1 <= t8 <= t8_long
+    # weights dominate small batches: near-flat from B=1 to B=8
+    assert t8 < 1.5 * t1
+
+
+def test_cluster_rejects_zero_instances():
+    try:
+        ClusterSim(PrefillCostModel(LLAMA3_8B, A800), SimConfig(),
+                   num_instances=0)
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass

@@ -1,0 +1,162 @@
+"""Dispatch-policy unit tests + the no-duplicated-policy-logic contract:
+`Proxy` (real runtime) and `ClusterSim` (simulator) consume the same policy
+objects from repro.core.dispatch."""
+import numpy as np
+
+from repro.core.dispatch import (DISPATCH_POLICIES, DeflectionDispatch,
+                                 InstanceLoad, LeastLoadedDispatch,
+                                 RoundRobinDispatch, competing_tokens,
+                                 make_dispatch, predicted_ttft)
+from repro.core.predictor import TTFTPredictor
+from repro.core.request import Request
+
+PRED = TTFTPredictor(coeffs=np.array([1e-4, 0.0]), floor=0.0)  # 0.1ms/token
+
+
+def loads(*queued):
+    return [InstanceLoad(instance_id=i, queued_tokens=q)
+            for i, q in enumerate(queued)]
+
+
+def req(tokens=100, slo=1.0, arrival=0.0):
+    return Request(num_tokens=tokens, slo=slo, arrival=arrival)
+
+
+def test_round_robin_cycles():
+    pol = RoundRobinDispatch()
+    picks = [pol.select(req(), loads(0, 0, 0), 0.0) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_picks_min_predicted_queue():
+    pol = LeastLoadedDispatch(PRED)
+    assert pol.select(req(), loads(5000, 100, 9000), 0.0) == 1
+    # ties break deterministically on instance id
+    assert pol.select(req(), loads(500, 500, 500), 0.0) == 0
+
+
+def test_least_loaded_without_predictor_uses_tokens():
+    pol = LeastLoadedDispatch(predictor=None)
+    assert pol.select(req(), loads(300, 200, 250), 0.0) == 1
+
+
+def test_predicted_ttft_includes_newcomer():
+    ld = InstanceLoad(instance_id=0, queued_tokens=900)
+    assert predicted_ttft(req(tokens=100), ld, PRED) == PRED.predict(1000)
+
+
+def test_competing_tokens_filters_later_deadlines_and_doomed():
+    cand = req(tokens=100, slo=1.0)                    # deadline 1.0
+    items = [
+        (200.0, 0.5),       # earlier deadline, feasible -> counts
+        (300.0, 2.0),       # later deadline -> S-EDF runs it after us
+        (5000.0, 0.4),      # earlier deadline but doomed (0.5s predicted
+                            # latency > 0.4s slack) -> ranks below any
+                            # feasible request
+    ]
+    assert competing_tokens(items, cand, 0.0, PRED.predict) == 200.0
+    # without a predictor only the deadline filter applies
+    assert competing_tokens(items, cand, 0.0, None) == 5200.0
+
+
+def test_deflection_keeps_feasible_primary():
+    pol = DeflectionDispatch(PRED, slack_margin=1.0)
+    # primary (instance 0) predicted TTFT 0.02s << 1s slack: stays put even
+    # though instance 1 is emptier
+    assert pol.select(req(tokens=100, slo=1.0), loads(100, 0), 0.0) == 0
+
+
+def test_deflection_deflects_overloaded_primary():
+    pol = DeflectionDispatch(PRED, slack_margin=1.0)
+    # primary would blow the newcomer's 0.5s slack (predicted ~1s), deflect
+    # to the feasible instance
+    assert pol.select(req(tokens=100, slo=0.5), loads(10000, 100), 0.0) == 1
+
+
+def test_deflection_falls_back_to_least_predicted():
+    pol = DeflectionDispatch(PRED, slack_margin=1.0)
+    # nobody feasible: take the least predicted TTFT
+    assert pol.select(req(tokens=100, slo=0.1), loads(9000, 6000, 8000),
+                      0.0) == 1
+
+
+def test_make_dispatch_registry_and_passthrough():
+    assert set(DISPATCH_POLICIES) == {"round-robin", "least-loaded",
+                                      "deflection"}
+    for name in DISPATCH_POLICIES:
+        pol = make_dispatch(name, PRED)
+        assert pol.name == name and pol.predictor is PRED
+    ready = LeastLoadedDispatch()
+    assert make_dispatch(ready, PRED) is ready
+    assert ready.predictor is PRED                      # adopted
+    try:
+        make_dispatch("nope")
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+
+
+# --- shared-policy contract --------------------------------------------------
+
+class _StubStats:
+    mean = 0.0
+
+
+class _StubInstance:
+    """Duck-typed PrefillInstance: records submissions, never executes."""
+
+    def __init__(self):
+        self.submitted = []
+        self.on_prefill_done = None
+        self.scheduling_rounds = 0
+        self.blocking_stats = _StubStats()
+
+    def submit_request(self, request, tokens):
+        self.submitted.append(request)
+
+    def drain(self, timeout=0.0):
+        return True
+
+    def shutdown(self):
+        pass
+
+
+def test_proxy_consumes_shared_policy_object():
+    from repro.serving.proxy import Proxy
+
+    policy = LeastLoadedDispatch(PRED)
+    stubs = [_StubInstance() for _ in range(3)]
+    proxy = Proxy(stubs, dispatch=policy)
+    assert proxy.dispatch is policy                    # the very same object
+    # all outstanding work piles on the chosen instance (stubs never finish),
+    # so JSQ spreads strict same-deadline requests across instances
+    t0 = proxy.clock()
+    for i in range(6):
+        proxy.submit(Request(num_tokens=500, slo=1e9, arrival=t0),
+                     np.zeros(4, np.int32))
+    assert sorted(len(s.submitted) for s in stubs) == [2, 2, 2]
+    assert proxy.report()["dispatch_policy"] == "least-loaded"
+    assert proxy.report()["dispatched_by_instance"] == \
+        [len(s.submitted) for s in stubs]
+
+
+def test_cluster_sim_consumes_shared_policy_object():
+    from repro.sim.cluster import ClusterSim
+    from repro.sim.costmodel import A800, LLAMA3_8B, PrefillCostModel
+    from repro.sim.simulator import SimConfig
+
+    policy = DeflectionDispatch()
+    sim = ClusterSim(PrefillCostModel(LLAMA3_8B, A800), SimConfig(),
+                     num_instances=2, dispatch=policy)
+    assert sim.policy is policy
+    assert policy.predictor is sim.predictor            # adopted on wiring
+
+
+def test_proxy_round_robin_default_unchanged():
+    from repro.serving.proxy import Proxy
+
+    stubs = [_StubInstance() for _ in range(2)]
+    proxy = Proxy(stubs)
+    for i in range(4):
+        proxy.submit(Request(num_tokens=8, slo=1.0), np.zeros(4, np.int32))
+    assert [len(s.submitted) for s in stubs] == [2, 2]

@@ -21,7 +21,7 @@ SCRIPT = textwrap.dedent("""
     import jax
     from repro.configs.base import SHAPES, get_tiny_config, shape_applicable
     from repro.distributed import sharding as shd
-    from repro.launch.dryrun import lower_cell
+    from repro.launch.dryrun import cost_dict, lower_cell
     import dataclasses
 
     arch, shape_name, multi_pod = sys.argv[1], sys.argv[2], sys.argv[3] == "1"
@@ -42,7 +42,7 @@ SCRIPT = textwrap.dedent("""
     with mesh, shd.use_sharding(mesh, rules):
         lowered = lower_cell(cfg, shape, mesh, rules)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_dict(compiled)
         hlo_len = len(compiled.as_text())
     print(json.dumps({"status": "ok", "flops": float(cost.get("flops", 0)),
                       "hlo_len": hlo_len}))
@@ -50,6 +50,10 @@ SCRIPT = textwrap.dedent("""
 
 FAMILY_REPS = ["llama3_2_1b", "qwen3_30b_a3b", "mamba2_370m",
                "recurrentgemma_9b", "whisper_large_v3", "internvl2_76b"]
+
+# lower+compile in subprocesses: minutes of XLA work — kept out of the CI
+# fast job (run with `-m slow`; test_collective_parser below stays fast)
+slow = pytest.mark.slow
 
 
 def run_cell(arch, shape, multi_pod):
@@ -62,12 +66,14 @@ def run_cell(arch, shape, multi_pod):
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@slow
 @pytest.mark.parametrize("arch", FAMILY_REPS)
 def test_train_cell_lowers_small_mesh(arch):
     r = run_cell(arch, "train_4k", multi_pod=False)
     assert r["status"] == "ok" and r["flops"] > 0
 
 
+@slow
 @pytest.mark.parametrize("shape", ["prefill_32k", "decode_32k", "long_500k"])
 def test_serve_cells_lower_small_mesh(shape):
     for arch in ("llama3_2_1b", "mamba2_370m"):
@@ -78,6 +84,7 @@ def test_serve_cells_lower_small_mesh(shape):
             assert r["status"] == "ok"
 
 
+@slow
 def test_multi_pod_axis_shards():
     r = run_cell("llama3_2_1b", "train_4k", multi_pod=True)
     assert r["status"] == "ok"

@@ -3,7 +3,10 @@ batching budget/deadline safety, predictor monotonicity-ish sanity, paged KV
 cache allocator conservation, and goodput-metric monotonicity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Request, SchedulerCore, TTFTPredictor, max_goodput
 from repro.core.scheduler import slo_aware_batching

@@ -1,7 +1,6 @@
 """Unit tests for the scheduler core: S-EDF priority (Eq. 3), SLO-aware
 batching (Alg. 1), and the event-triggered round of Alg. 2."""
 import numpy as np
-import pytest
 
 from repro.core import (Action, Request, SchedulerCore, TTFTPredictor,
                         slo_aware_batching)

@@ -2,13 +2,10 @@
 claims (goodput ordering/ratios, policy ablation, batching ablation, blocking
 times, MoE generality)."""
 import numpy as np
-import pytest
 
 from repro.core.metrics import max_goodput
-from repro.sim.costmodel import (A800, LLAMA3_8B, QWEN3_30B_A3B,
-                                 PrefillCostModel)
-from repro.sim.policies import preset, simulate
-from repro.sim.simulator import PrefillSim, SimConfig
+from repro.sim.costmodel import A800, LLAMA3_8B, PrefillCostModel
+from repro.sim.policies import simulate
 from repro.traces.qwentrace import TABLE1, TraceConfig, generate
 
 RATES = [0.25, 0.5, 1, 2, 4, 6, 8, 12]
@@ -52,7 +49,6 @@ def test_sim_blocking_bounded_by_granularity():
     durs = cost.op_durations(32768)
     assert max(res_op.blocking_times) <= durs.max() + 1e-6
     if res_layer.blocking_times:
-        layer_dur = durs[:len(LLAMA3_8B.op_names)].sum()  # cheapest layer
         assert max(res_layer.blocking_times) >= max(res_op.blocking_times)
 
 

@@ -1,12 +1,9 @@
 """Training substrate tests: loss goes down, checkpoint restart equivalence,
 elastic re-mesh restore, straggler watchdog, gradient compression."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_tiny_config
 from repro.models import init_params
