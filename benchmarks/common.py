@@ -3,9 +3,22 @@ run() -> list[(name, value, derived_note)] and prints nothing on its own."""
 from __future__ import annotations
 
 import time
+from functools import lru_cache
 from typing import Callable, List, Tuple
 
 Row = Tuple[str, float, str]
+
+
+@lru_cache(maxsize=None)
+def cached_trace(*, rate, duration, seed, model="llama3-8b", burstiness=1.0,
+                 output_mean=0.0, tbt_slo=0.1):
+    """Memoized qwentrace generation: policy sweeps replay the SAME trace
+    (same seed/rate), and `simulate_cluster`/`simulate` copy requests before
+    running, so the cached list is never mutated."""
+    from repro.traces.qwentrace import TraceConfig, generate
+    return generate(TraceConfig(rate=rate, duration=duration, seed=seed,
+                                model=model, burstiness=burstiness,
+                                output_mean=output_mean, tbt_slo=tbt_slo))
 
 
 def time_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:

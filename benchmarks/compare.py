@@ -1,0 +1,125 @@
+"""CI benchmark-regression gate.
+
+Diffs a fresh ``--json-out`` bench run against the committed reference
+results in ``benchmarks/baselines/`` and exits nonzero when a gated metric
+regresses beyond tolerance — so the perf trajectory is *enforced* on every
+push, not just uploaded as an artifact someone might read.
+
+Gated metrics are the higher-is-better SLO outcomes (name contains
+``goodput``, ``attainment``, ``_vs_`` ratios, or ``share``); wall-clock and
+harness bookkeeping rows are ignored (they vary with runner speed — the
+simulator metrics themselves are deterministic, seeded discrete-event
+results, so cross-machine values match exactly and the tolerance only
+absorbs intentional drift).
+
+    python -m benchmarks.compare --baseline benchmarks/baselines \
+        --fresh bench-artifacts [--tolerance 0.10]
+
+Refreshing baselines after an intentional perf change:
+
+    PYTHONPATH=src python -m benchmarks.run --only fig9,fig18,fig19 \
+        --json-out benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# substrings of metric names that are gated (higher is better)
+GATED = ("goodput", "attainment", "_vs_", "share")
+# metric-name substrings never gated (runner-speed or error bookkeeping)
+SKIPPED = ("_elapsed_s", "/_error", "/_real_error", "rel_err")
+
+
+def is_gated(name: str) -> bool:
+    if any(s in name for s in SKIPPED):
+        return False
+    return any(s in name for s in GATED)
+
+
+def load_dir(path: str) -> Dict[str, Dict[str, float]]:
+    """{bench name: {metric: value}} for every BENCH_*.json in `path`."""
+    out: Dict[str, Dict[str, float]] = {}
+    for f in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        name = d.get("bench") or os.path.basename(f)[6:-5]
+        out[name] = {k: v for k, v in d.get("metrics", {}).items()
+                     if isinstance(v, (int, float))}
+    return out
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            fresh: Dict[str, Dict[str, float]],
+            tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (report lines, regression lines)."""
+    lines: List[str] = []
+    regressions: List[str] = []
+    for bench, base_metrics in sorted(baseline.items()):
+        if bench not in fresh:
+            regressions.append(
+                f"{bench}: no fresh BENCH_{bench}.json (bench vanished "
+                f"or failed — its _error row is not a metric)")
+            continue
+        fresh_metrics = fresh[bench]
+        for name, base in sorted(base_metrics.items()):
+            if not is_gated(name):
+                continue
+            if name not in fresh_metrics:
+                regressions.append(f"{name}: gated metric missing from "
+                                   f"fresh run (baseline={base})")
+                continue
+            new = fresh_metrics[name]
+            floor = base * (1.0 - tolerance)
+            if base > 0 and new < floor:
+                regressions.append(
+                    f"{name}: {base} -> {new} "
+                    f"({(new / base - 1.0) * 100:+.1f}%, floor {floor:.3g})")
+            else:
+                delta = f"{(new / base - 1.0) * 100:+.1f}%" if base else "n/a"
+                lines.append(f"  ok {name}: {base} -> {new} ({delta})")
+    for bench in sorted(set(fresh) - set(baseline)):
+        lines.append(f"  new bench (no baseline, not gated): {bench}")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) when a gated benchmark metric regresses "
+                    "vs the committed baselines")
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory with reference BENCH_*.json files")
+    ap.add_argument("--fresh", required=True,
+                    help="directory with the fresh run's BENCH_*.json files")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative drop for gated metrics "
+                    "(default 0.10 = -10%%)")
+    args = ap.parse_args(argv)
+
+    baseline = load_dir(args.baseline)
+    if not baseline:
+        print(f"error: no BENCH_*.json baselines in {args.baseline!r}",
+              file=sys.stderr)
+        return 2
+    fresh = load_dir(args.fresh)
+    lines, regressions = compare(baseline, fresh, args.tolerance)
+
+    print(f"benchmark gate: {len(baseline)} baseline bench(es), "
+          f"tolerance -{args.tolerance:.0%}")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"\nREGRESSIONS ({len(regressions)}):", file=sys.stderr)
+        for r in regressions:
+            print(f"  FAIL {r}", file=sys.stderr)
+        return 1
+    print("benchmark gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,9 +7,9 @@ Expected shape: goodput scales with instance count, and the load-aware
 policies (least-loaded JSQ, slack-aware deflection) beat blind round-robin —
 most visibly under bursty arrivals, where blind cycling piles bursts onto
 already-loaded instances."""
+from benchmarks.common import cached_trace
 from repro.core.metrics import max_goodput
 from repro.sim.cluster import simulate_cluster
-from repro.traces.qwentrace import TraceConfig, generate
 
 POLICIES = ("round-robin", "least-loaded", "deflection")
 PER_INSTANCE_RATES = [2, 4, 6, 8, 12]
@@ -21,9 +21,9 @@ def cluster_goodput(num_instances, policy, burstiness=1.0, *,
     rates = [r * num_instances for r in PER_INSTANCE_RATES]
     atts = []
     for rate in rates:
-        reqs = generate(TraceConfig(rate=rate, duration=duration, seed=seed,
-                                    model=model, burstiness=burstiness,
-                                    output_mean=output_mean))
+        reqs = cached_trace(rate=rate, duration=duration, seed=seed,
+                            model=model, burstiness=burstiness,
+                            output_mean=output_mean)
         res = simulate_cluster("flowprefill", reqs,
                                num_instances=num_instances, dispatch=policy,
                                decode_instances=num_instances, model=model)

@@ -14,7 +14,7 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig10_policies, fig11_budget, fig12_blocking,
                         fig13_predictor, fig14_single_slo,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
-                        fig18_cluster, roofline)
+                        fig18_cluster, fig19_hetero, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -29,11 +29,12 @@ MODULES = [
     ("fig16", fig16_colocation),
     ("fig17", fig17_moe),
     ("fig18", fig18_cluster),
+    ("fig19", fig19_hetero),
     ("roofline", roofline),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. fig9,fig18)")
@@ -41,8 +42,16 @@ def main() -> None:
                     help="also run real-executor measurements (fig12)")
     ap.add_argument("--json-out", default=None, metavar="DIR",
                     help="write BENCH_<fig>.json per module into DIR")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        known = {name for name, _ in MODULES}
+        unknown = sorted(only - known)
+        if unknown:
+            # a typo here used to silently run NOTHING and exit green —
+            # catastrophic for a CI gate selecting --only fig9,fig18
+            ap.error(f"unknown figure name(s): {', '.join(unknown)} "
+                     f"(known: {', '.join(sorted(known))})")
 
     print("name,value,derived")
     failures = 0

@@ -7,6 +7,7 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
   default — calibrated discrete-event ClusterSim (fast, no model needed):
       PYTHONPATH=src python examples/serve_cluster.py [--instances 4]
           [--rate 24] [--burstiness 3] [--policy all]
+          [--hetero a800,a800,a100,a100]   # mixed-hardware pool
 
   --real  — a tiny REAL model on CPU: Proxy + N threaded PrefillInstances +
             a DecodeInstance, load-aware dispatch against live backlog:
@@ -17,25 +18,30 @@ import argparse
 from repro.sim.cluster import simulate_cluster
 from repro.traces.qwentrace import TraceConfig, generate
 
-POLICIES = ["round-robin", "least-loaded", "deflection"]
+POLICIES = ["round-robin", "least-loaded", "deflection",
+            "capacity-weighted", "decode-aware"]
 
 
 def run_sim(args):
-    print(f"== ClusterSim: {args.instances} prefill + {args.instances} decode "
-          f"instances, rate={args.rate} req/s, burstiness={args.burstiness} ==")
+    hardware = args.hetero.split(",") if args.hetero else None
+    n = len(hardware) if hardware else args.instances
+    pool = " hetero[" + args.hetero + "]" if hardware else ""
+    print(f"== ClusterSim: {n} prefill + {n} decode instances{pool}, "
+          f"rate={args.rate} req/s, burstiness={args.burstiness} ==")
     reqs = generate(TraceConfig(rate=args.rate, duration=args.duration,
                                 seed=args.seed, burstiness=args.burstiness,
-                                output_mean=200))
+                                output_mean=200, tbt_slo=args.tbt_slo))
     print(f"{len(reqs)} requests "
           f"({sum(r.num_tokens for r in reqs)} prefill tokens)")
     policies = POLICIES if args.policy == "all" else [args.policy]
-    print(f"{'dispatch':>14s} | {'TTFT att':>8s} {'e2e att':>8s} "
+    print(f"{'dispatch':>17s} | {'TTFT att':>8s} {'e2e att':>8s} "
           f"{'imbalance':>9s} {'preempts':>8s} | per-instance dispatched")
     for policy in policies:
         res = simulate_cluster("flowprefill", reqs,
-                               num_instances=args.instances, dispatch=policy,
-                               decode_instances=args.instances)
-        print(f"{policy:>14s} | {res.attainment:8.3f} "
+                               num_instances=n, dispatch=policy,
+                               decode_instances=n, hardware=hardware,
+                               decode_hardware=hardware)
+        print(f"{policy:>17s} | {res.attainment:8.3f} "
               f"{res.e2e_attainment:8.3f} {res.imbalance:9.2f} "
               f"{res.preemptions:8d} | {res.dispatched}")
 
@@ -79,13 +85,23 @@ def run_real(args):
         params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
         max_seq=max_seq, executor=ex) for _ in range(args.instances)]
     dec = DecodeInstance(params, cfg, decode_tokens=2)
-    proxy = Proxy(insts, [dec], dispatch=policy)
+    # wire the hetero-pool signals so capacity-weighted / decode-aware run
+    # against real measurements, not silent 1.0/0.0 defaults: capacity from
+    # the measured profile (identical executors -> identical capacities),
+    # decode pressure priced by the analytic decode model for this config
+    from repro.sim.costmodel import A800, DecodeCostModel, ModelSpec
+    cap = xs[-1] / ys[-1]                  # measured prefill tokens/s
+    proxy = Proxy(insts, [dec], dispatch=policy,
+                  capacities=[cap] * args.instances,
+                  decode_cost=DecodeCostModel(ModelSpec.from_config(cfg),
+                                              A800))
     rng = np.random.default_rng(args.seed)
     try:
         for i in range(args.requests):
             n = int(rng.choice([256, 256, 1024, 2048]))
             req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
-                          arrival=time.monotonic())
+                          arrival=time.monotonic(), output_tokens=2,
+                          tbt_slo=2.0)
             proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
             time.sleep(float(rng.exponential(0.15)))
         assert proxy.drain(300.0)
@@ -109,6 +125,12 @@ def main():
     ap.add_argument("--burstiness", type=float, default=3.0)
     ap.add_argument("--policy", default="all",
                     choices=["all"] + POLICIES)
+    ap.add_argument("--hetero", default=None, metavar="HW,HW,...",
+                    help="comma-separated per-instance hardware "
+                    "(a800 / a100 / tpu-v5e); overrides --instances")
+    ap.add_argument("--tbt-slo", type=float, default=0.02,
+                    help="decode TBT SLO (s/token); tight values make the "
+                    "decode-aware policy visible on mixed pools")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--requests", type=int, default=10,

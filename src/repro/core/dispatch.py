@@ -18,6 +18,17 @@ the arriving request* and picks the instance for it:
     round-robin default target, but when the target's backlog (its running
     head plus queue) would eat too much of the newcomer's slack, deflect to a
     feasible instance; with none feasible, take the least predicted TTFT.
+  * ``capacity-weighted`` — heterogeneous-pool JSQ: rank instances by
+    *drain time* = outstanding tokens normalized by the instance's peak
+    prefill throughput (`InstanceLoad.capacity`), so a mixed A800/A100/TPU
+    pool routes proportionally more work to faster hardware instead of
+    equalizing raw token backlogs.
+  * ``decode-aware`` — capacity-weighted drain time, inflated when the
+    instance's downstream decode stage is near its TBT-SLO knee
+    (`InstanceLoad.decode_pressure`, fed from `DecodeCostModel.step_time`):
+    prefills are deflected away from instances whose decode batch would blow
+    the token-by-token SLO right after handoff (the load-aware prefill
+    deflection direction of arXiv 2607.02043 applied to downstream pressure).
 
 The load measure matters: under S-EDF with cheap operator-level preemption,
 a long or already-doomed (negative-slack) request in an instance's queue does
@@ -33,6 +44,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
 
@@ -46,6 +59,12 @@ class InstanceLoad:
     queued_tokens: float = 0.0           # competing waiting+preempted tokens
     running_tokens: float = 0.0          # competing in-flight tokens
     n_outstanding: int = 0
+    # heterogeneous pools: instance peak prefill throughput (tokens/s).
+    # 1.0 = unknown/uniform — capacity-weighted then degrades to raw-token JSQ.
+    capacity: float = 1.0
+    # downstream decode TBT pressure were this request's decode to join now:
+    # predicted step time / TBT SLO (1.0 = exactly at the SLO knee)
+    decode_pressure: float = 0.0
 
     @property
     def outstanding_tokens(self) -> float:
@@ -59,7 +78,23 @@ def competing_tokens(items: Iterable[Tuple[float, float]],
     remaining tokens over `items` (pairs of (remaining_tokens, deadline))
     whose deadline is earlier than the candidate's and which are still
     feasible (positive slack) — infeasible work ranks below any feasible
-    newcomer and preemptable work yields within one operator."""
+    newcomer and preemptable work yields within one operator.
+
+    Built per dispatch decision for EVERY instance, so large backlogs batch
+    the predictions through the predictor's `predict_many` (bit-identical:
+    same elementwise Horner, same sequential accumulation order)."""
+    items = list(items)
+    if predict is not None and len(items) >= 8:
+        pm = getattr(getattr(predict, "__self__", None), "predict_many", None)
+        if pm is not None:
+            k = len(items)
+            rems = np.fromiter((it[0] for it in items), np.float64, k)
+            dls = np.fromiter((it[1] for it in items), np.float64, k)
+            keep = (dls <= candidate.deadline) & (dls - now - pm(rems) > 0)
+            n = 0.0
+            for v in rems[keep].tolist():
+                n += v
+            return n
     n = 0.0
     for rem, deadline in items:
         if deadline > candidate.deadline:
@@ -68,6 +103,15 @@ def competing_tokens(items: Iterable[Tuple[float, float]],
         if deadline - now - lat > 0:
             n += rem
     return n
+
+
+def drain_time(req: Request, load: InstanceLoad) -> float:
+    """Capacity-normalized backlog: seconds for `load`'s instance to drain its
+    competing work plus the newcomer at peak throughput. With the default
+    capacity of 1.0 this is just raw tokens (monotone, so homogeneous pools
+    behave like token-JSQ)."""
+    return (load.outstanding_tokens + req.num_tokens) / max(load.capacity,
+                                                            1e-9)
 
 
 def predicted_ttft(req: Request, load: InstanceLoad,
@@ -86,6 +130,8 @@ class DispatchPolicy:
     """Picks an instance id for one request given per-instance load."""
     name = "base"
     needs_loads = True        # False: owner may pass zeroed load snapshots
+    needs_decode_pressure = False  # True: owner attaches decode_pressure
+                                   # (and pairs prefill->decode instances)
 
     def __init__(self, predictor: Optional[TTFTPredictor] = None):
         self.predictor = predictor
@@ -150,9 +196,58 @@ class DeflectionDispatch(DispatchPolicy):
                                          ld.instance_id)).instance_id
 
 
+class CapacityWeightedDispatch(DispatchPolicy):
+    """Capacity-weighted JSQ for heterogeneous pools: join the instance whose
+    backlog drains fastest AT ITS OWN SPEED. Raw-token JSQ equalizes token
+    backlogs, which on mixed hardware means the slow instance's equal-sized
+    queue takes longer to clear — its requests burn SLO slack in line. Peak
+    throughput as the normalizer is deliberately workload-independent: it
+    needs one offline number per hardware generation, not a per-request
+    latency model."""
+    name = "capacity-weighted"
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        return min(loads, key=lambda ld: (drain_time(req, ld),
+                                          ld.instance_id)).instance_id
+
+
+class DecodeAwareDispatch(DispatchPolicy):
+    """Capacity-weighted drain time, inflated by downstream decode pressure.
+
+    An instance whose paired decode stage sits near its TBT-SLO knee will
+    violate the token-by-token SLO for any prefill handed to it — routing by
+    prefill backlog alone green-lights requests into a decode stage that
+    dooms them. The score multiplies drain time by (1 + penalty * excess),
+    excess = max(0, decode_pressure - knee): below the knee decode is free
+    capacity and the policy IS capacity-weighted JSQ; above it the instance
+    is repelled in proportion to how deep into the knee its decode sits.
+    Multiplicative (not additive) so the penalty needs no absolute scale —
+    drain time already carries the units, and the newcomer's own tokens keep
+    it nonzero even on an idle pool."""
+    name = "decode-aware"
+    needs_decode_pressure = True
+
+    def __init__(self, predictor: Optional[TTFTPredictor] = None,
+                 knee: float = 0.85, penalty: float = 8.0):
+        super().__init__(predictor)
+        self.knee = knee                 # pressure fraction where TBT binds
+        self.penalty = penalty           # repulsion strength past the knee
+
+    def _score(self, req: Request, ld: InstanceLoad) -> float:
+        excess = max(0.0, ld.decode_pressure - self.knee)
+        return drain_time(req, ld) * (1.0 + self.penalty * excess)
+
+    def select(self, req: Request, loads: Sequence[InstanceLoad],
+               now: float) -> int:
+        return min(loads, key=lambda ld: (self._score(req, ld),
+                                          ld.instance_id)).instance_id
+
+
 DISPATCH_POLICIES = {
     p.name: p for p in
-    (RoundRobinDispatch, LeastLoadedDispatch, DeflectionDispatch)
+    (RoundRobinDispatch, LeastLoadedDispatch, DeflectionDispatch,
+     CapacityWeightedDispatch, DecodeAwareDispatch)
 }
 
 

@@ -4,12 +4,25 @@ A polynomial fitted to offline prefill profiles: x = token count, y = prefill
 latency. Degree 2 captures the linear GEMM term plus the quadratic attention
 term; in the PD-disaggregated setting prefill latency is undisturbed by decode,
 so this simple fit suffices (validated in benchmarks/fig13_predictor.py).
+
+`predict` is THE scheduler/dispatch hot path (hundreds of calls per arrival at
+cluster scale: S-EDF feasibility + competing-work pricing), so it evaluates
+the polynomial with an inline Horner loop over cached float coefficients —
+the exact IEEE operation sequence of np.polyval, ~20x faster on scalars.
+
+`OnlineTTFTPredictor` adds predictor feedback (ROADMAP dispatch extension):
+it starts from an offline prior and refits the polynomial from a sliding
+window of observed (tokens, latency) pairs, so a mis-calibrated prior — e.g.
+a predictor fitted on one hardware generation deployed on another in a
+heterogeneous pool — converges to the instance's true cost curve.
 """
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
-from typing import Sequence
+import threading
+import warnings
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -18,6 +31,11 @@ import numpy as np
 class TTFTPredictor:
     coeffs: np.ndarray                   # np.polyval order (highest first)
     floor: float = 0.0                   # minimum latency (dispatch overhead)
+
+    # Horner cache: (source array, coefficients as python floats). Rebuilt
+    # whenever `coeffs` is rebound (online refit), checked by identity.
+    _horner: Optional[Tuple[np.ndarray, Tuple[float, ...]]] = \
+        field(default=None, repr=False, compare=False)
 
     @classmethod
     def fit(cls, tokens: Sequence[float], latencies: Sequence[float],
@@ -36,9 +54,28 @@ class TTFTPredictor:
         ys = np.array([cost_fn(int(x)) for x in xs])
         return cls.fit(xs, ys, degree)
 
+    def _coeff_tuple(self) -> Tuple[float, ...]:
+        cached = self._horner
+        if cached is None or cached[0] is not self.coeffs:
+            cached = (self.coeffs, tuple(float(c) for c in self.coeffs))
+            self._horner = cached
+        return cached[1]
+
     def predict(self, num_tokens: float) -> float:
-        y = float(np.polyval(self.coeffs, max(float(num_tokens), 0.0)))
+        x = max(float(num_tokens), 0.0)
+        y = 0.0
+        for c in self._coeff_tuple():    # Horner — np.polyval's op sequence
+            y = y * x + c
         return max(y, self.floor)
+
+    def predict_many(self, num_tokens: np.ndarray) -> np.ndarray:
+        """Vectorized predict over an array of token counts (elementwise
+        identical to `predict`: same Horner recurrence, same floor clamp)."""
+        x = np.maximum(np.asarray(num_tokens, dtype=np.float64), 0.0)
+        y = np.zeros_like(x)
+        for c in self._coeff_tuple():
+            y = y * x + c
+        return np.maximum(y, self.floor)
 
     def __call__(self, num_tokens: float) -> float:
         return self.predict(num_tokens)
@@ -53,3 +90,68 @@ class TTFTPredictor:
         with open(path) as f:
             d = json.load(f)
         return cls(coeffs=np.asarray(d["coeffs"]), floor=d["floor"])
+
+
+@dataclass
+class OnlineTTFTPredictor(TTFTPredictor):
+    """TTFT predictor with online refit from observed prefill latencies.
+
+    Serves predictions from the prior until `min_points` observations arrive,
+    then refits the polynomial over a sliding window every `refit_every`
+    observations. The refit degree is capped by the number of distinct token
+    counts seen, so early refits with clustered observations stay
+    well-conditioned instead of extrapolating a wild quadratic.
+
+    `observe` is thread-safe: the real Proxy feeds it from every prefill
+    instance's scheduler thread. `predict` stays lock-free — it reads one
+    rebound `coeffs` reference, which is atomic.
+    """
+    window: int = 256                    # observations kept for refitting
+    min_points: int = 8                  # observations before the first refit
+    refit_every: int = 8                 # refit cadence (in observations)
+    degree: int = 2
+
+    _obs_x: List[float] = field(default_factory=list, repr=False,
+                                compare=False)
+    _obs_y: List[float] = field(default_factory=list, repr=False,
+                                compare=False)
+    _obs_lock: threading.Lock = field(default_factory=threading.Lock,
+                                      repr=False, compare=False)
+    _since_refit: int = field(default=0, repr=False, compare=False)
+    n_observed: int = field(default=0, repr=False, compare=False)
+    n_refits: int = field(default=0, repr=False, compare=False)
+
+    @classmethod
+    def from_predictor(cls, base: TTFTPredictor,
+                       **kwargs) -> "OnlineTTFTPredictor":
+        return cls(coeffs=np.array(base.coeffs, copy=True), floor=base.floor,
+                   **kwargs)
+
+    def observe(self, num_tokens: float, latency: float) -> None:
+        """Feed one observed (tokens, prefill latency) pair; refits lazily."""
+        if num_tokens <= 0 or latency <= 0:
+            return
+        with self._obs_lock:
+            self._obs_x.append(float(num_tokens))
+            self._obs_y.append(float(latency))
+            if len(self._obs_x) > self.window:
+                del self._obs_x[0], self._obs_y[0]
+            self.n_observed += 1
+            self._since_refit += 1
+            if len(self._obs_x) >= self.min_points and \
+                    self._since_refit >= self.refit_every:
+                self._refit()
+
+    def _refit(self) -> None:
+        # caller holds _obs_lock
+        self._since_refit = 0
+        deg = min(self.degree, len(set(self._obs_x)) - 1)
+        if deg < 1:
+            return                       # degenerate window (one token count)
+        xs = np.asarray(self._obs_x)
+        ys = np.asarray(self._obs_y)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # poorly conditioned early fits
+            self.coeffs = np.polyfit(xs, ys, deg)
+        self.floor = float(max(ys.min() * 0.5, 0.0))
+        self.n_refits += 1

@@ -84,5 +84,11 @@ class Request:
         return max(0.0, 1.0 - self.ops_done / self.ops_total)
 
     def remaining_tokens(self) -> float:
-        """Token-equivalent remaining work, used by the TTFT predictor."""
-        return self.batch_tokens * self.remaining_fraction()
+        """Token-equivalent remaining work, used by the TTFT predictor.
+        (Inlined remaining_fraction — this runs once per queued request per
+        scheduling round, the simulator's hottest per-element path.)"""
+        ot = self.ops_total
+        if ot <= 0:
+            return self.batch_tokens * 1.0
+        frac = 1.0 - self.ops_done / ot
+        return self.batch_tokens * frac if frac > 0.0 else 0.0

@@ -45,6 +45,11 @@ class DecodeInstance:
     def submit(self, job: DecodeJob) -> None:
         self._q.put(job)
 
+    def pending(self) -> int:
+        """Decode jobs waiting in this instance's queue (the backlog signal
+        decode-aware dispatch prices via DecodeCostModel.step_time)."""
+        return self._q.qsize()
+
     def shutdown(self) -> None:
         self._q.put(None)
         self._thread.join(10.0)

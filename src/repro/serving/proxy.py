@@ -7,12 +7,19 @@ The proxy owns per-instance load accounting (`InstanceLoad`): outstanding
 tokens are added at dispatch and retired when the instance reports the prefill
 done, so load-aware policies (least-loaded / slack-aware deflection) see live
 backlog without polling instance internals across threads.
+
+Heterogeneous pools: pass `capacities` (peak prefill tokens/s per instance)
+to feed capacity-weighted dispatch, and `decode_cost` (an analytic
+DecodeCostModel) to derive downstream decode pressure for decode-aware
+dispatch from each decode instance's live backlog. When the wired predictor
+exposes `observe()` (OnlineTTFTPredictor), the proxy feeds measured prefill
+latencies back on every completion — online refit against real hardware.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, List, Optional, Union
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,7 +39,9 @@ class Proxy:
                  decode_instances: Optional[List[DecodeInstance]] = None,
                  clock: Callable[[], float] = time.monotonic,
                  dispatch: Union[str, DispatchPolicy] = "round-robin",
-                 predictor: Optional[TTFTPredictor] = None):
+                 predictor: Optional[TTFTPredictor] = None,
+                 capacities: Optional[Sequence[float]] = None,
+                 decode_cost=None):
         self.prefill_instances = prefill_instances
         self.decode_instances = decode_instances or []
         self.clock = clock
@@ -42,6 +51,13 @@ class Proxy:
             sched = getattr(prefill_instances[0], "scheduler", None)
             predictor = getattr(sched, "predictor", None)
         self.dispatch = make_dispatch(dispatch, predictor)
+        if capacities is not None and len(capacities) != \
+                len(prefill_instances):
+            raise ValueError("capacities length must match prefill_instances")
+        self.capacities = list(capacities) if capacities is not None \
+            else [1.0] * len(prefill_instances)
+        self.decode_cost = decode_cost        # analytic DecodeCostModel
+        self._observe = getattr(self.dispatch.predictor, "observe", None)
         self._outstanding: List[dict] = [{} for _ in prefill_instances]
         self._load_lock = threading.Lock()
         self._rr_dec = 0
@@ -52,6 +68,19 @@ class Proxy:
             inst.on_prefill_done = self._make_done_cb(i)
 
     # ------------------------------------------------------------- dispatch
+    def _decode_pressure(self, prefill_idx: int, req: Request) -> float:
+        """Downstream TBT pressure for the decode instance paired with
+        `prefill_idx` (i mod D): predicted step time at backlog+1 over the
+        candidate's TBT SLO. 0.0 without decode instances or a cost model."""
+        if not self.decode_instances or self.decode_cost is None:
+            return 0.0
+        if req.tbt_slo <= 0 or req.tbt_slo == float("inf"):
+            return 0.0
+        dec = self.decode_instances[prefill_idx % len(self.decode_instances)]
+        b = dec.pending() + 1
+        return self.decode_cost.step_time(b, float(req.num_tokens)) \
+            / req.tbt_slo
+
     def _snapshot_loads(self, req: Request, now: float) -> List[InstanceLoad]:
         """Per-instance competing-work snapshots for one dispatch decision
         (see repro.core.dispatch). Remaining tokens come from the requests'
@@ -60,6 +89,7 @@ class Proxy:
             return [InstanceLoad(instance_id=i)
                     for i in range(len(self._outstanding))]
         predict = getattr(self.dispatch.predictor, "predict", None)
+        want_pressure = self.dispatch.needs_decode_pressure
         loads = []
         for i, outstanding in enumerate(self._outstanding):
             items = [(max(r.remaining_tokens(), 0.0), r.deadline)
@@ -67,7 +97,10 @@ class Proxy:
             loads.append(InstanceLoad(
                 instance_id=i,
                 queued_tokens=competing_tokens(items, req, now, predict),
-                n_outstanding=len(outstanding)))
+                n_outstanding=len(outstanding),
+                capacity=self.capacities[i],
+                decode_pressure=self._decode_pressure(i, req)
+                if want_pressure else 0.0))
         return loads
 
     def submit(self, req: Request, tokens: np.ndarray) -> None:
@@ -84,16 +117,29 @@ class Proxy:
             with self._load_lock:
                 for r in task.requests:
                     self._outstanding[idx].pop(r.rid, None)
-            self._prefill_done(task)
+            if self._observe is not None and task.complete_time is not None:
+                # online refit: measured service time of the batched prefill.
+                # complete_time is only ever set by the pool, which stamped
+                # submit_time first (possibly a legitimate 0.0 under an
+                # injected zero-based clock); observe() drops non-positive
+                # latencies itself.
+                self._observe(sum(r.num_tokens for r in task.requests),
+                              task.complete_time - task.submit_time)
+            self._prefill_done(task, idx)
         return cb
 
-    def _prefill_done(self, task: ExecTask) -> None:
+    def _prefill_done(self, task: ExecTask, idx: int) -> None:
         if not self.decode_instances:
             return
         with self._load_lock:           # called from every instance's thread
-            dec = self.decode_instances[
-                self._rr_dec % len(self.decode_instances)]
-            self._rr_dec += 1
+            if self.dispatch.needs_decode_pressure:
+                # paired handoff (prefill i -> decode i mod D): keeps the
+                # pressure signal attributable to the dispatch decision
+                dec = self.decode_instances[idx % len(self.decode_instances)]
+            else:
+                dec = self.decode_instances[
+                    self._rr_dec % len(self.decode_instances)]
+                self._rr_dec += 1
         logits = task.prefill_task.logits
         first = jnp.argmax(logits, -1)
         st = task.prefill_task.state

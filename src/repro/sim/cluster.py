@@ -13,15 +13,22 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.dispatch import DispatchPolicy, InstanceLoad, make_dispatch
-from repro.core.predictor import TTFTPredictor
+from repro.core.predictor import OnlineTTFTPredictor, TTFTPredictor
 from repro.core.request import Request
-from repro.sim.costmodel import DecodeCostModel, PrefillCostModel
+from repro.sim.costmodel import (DecodeCostModel, HardwareSpec,
+                                 PrefillCostModel, resolve_hardware)
 from repro.sim.simulator import (ARRIVAL, DECODE_DONE, InstanceEngine,
                                  SimConfig, handle_event, reset_requests)
+
+# token count at which per-instance peak prefill throughput (the
+# capacity-weighted dispatch normalizer) is probed: long enough to saturate
+# compute on every supported hardware generation
+CAPACITY_PROBE_TOKENS = 8192
 
 
 @dataclass
@@ -73,6 +80,18 @@ class DecodeSim:
                      for j in self.jobs.values())
         heapq.heappush(self.heap, (now + max(t_next, 0.0), next(self.seq),
                                    DECODE_DONE, (self, self.epoch)))
+
+    def pressure(self, req: Request, now: float) -> float:
+        """Predicted TBT pressure were `req`'s decode to join this instance
+        now: the analytic step time at batch B+1 over the candidate's TBT SLO
+        (1.0 = exactly at the SLO knee). Read-only — uses the jobs' last
+        materialized progress, which only perturbs the mean context."""
+        if req.tbt_slo <= 0 or not math.isfinite(req.tbt_slo):
+            return 0.0
+        b = len(self.jobs) + 1
+        ctx = sum(j.request.num_tokens + j.done for j in self.jobs.values()) \
+            + req.num_tokens
+        return self.cost.step_time(b, ctx / b) / req.tbt_slo
 
     def join(self, req: Request, now: float) -> None:
         self._advance(now)
@@ -126,14 +145,42 @@ class ClusterResult:
 
 
 class ClusterSim:
-    """N-instance prefill cluster + dispatch + decode phase, one event heap."""
+    """N-instance prefill cluster + dispatch + decode phase, one event heap.
+
+    Heterogeneous pools: pass ``hardware`` (one HardwareSpec per prefill
+    instance — ``num_instances`` is then taken from its length). Each instance
+    gets its own cost model, its own TTFT predictor fitted to its hardware
+    (shared across same-spec instances), and a capacity (peak prefill
+    throughput) surfaced to dispatch via ``InstanceLoad.capacity``. The
+    dispatch-level predictor stays the reference one — load-blind JSQ on a
+    mixed pool prices every instance's backlog at the same speed, which is
+    exactly the failure mode capacity-weighted dispatch fixes.
+
+    ``online_refit=True`` replaces each instance's predictor with an
+    `OnlineTTFTPredictor` seeded from the reference fit: engines feed observed
+    batch latencies back, so per-instance feasibility pricing converges to the
+    instance's true speed even when the prior was fitted elsewhere.
+
+    Decode stage: with ``decode-aware`` dispatch (or ``decode_affinity=True``)
+    completed prefills hand over to the PAIRED decode instance (prefill i ->
+    decode i mod D, the disaggregated-pool wiring that makes downstream
+    pressure attributable); otherwise they join the least-loaded decode batch
+    as before. ``decode_hardware`` heterogenizes the decode pool the same way.
+    """
 
     def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig, *,
                  num_instances: int = 2,
                  dispatch: str = "round-robin",
                  predictor: Optional[TTFTPredictor] = None,
                  decode_instances: int = 0,
-                 decode_cost: Optional[DecodeCostModel] = None):
+                 decode_cost: Optional[DecodeCostModel] = None,
+                 hardware: Optional[Sequence[HardwareSpec]] = None,
+                 decode_hardware: Optional[Sequence[HardwareSpec]] = None,
+                 online_refit: bool = False,
+                 decode_affinity: Optional[bool] = None):
+        if hardware is not None:
+            hardware = [resolve_hardware(hw) for hw in hardware]
+            num_instances = len(hardware)
         if num_instances < 1:
             raise ValueError("num_instances must be >= 1")
         self.cost = cost
@@ -143,23 +190,64 @@ class ClusterSim:
             lambda n: cost.prefill_time(n, chunk), max_tokens=32768)
         self.num_instances = num_instances
         self.policy: DispatchPolicy = make_dispatch(dispatch, self.predictor)
+        self.online_refit = online_refit
+
+        # per-instance cost models + predictors (predictors cached per
+        # hardware spec so a 4x-same-card pool fits once)
+        if hardware is not None:
+            self.instance_costs = [PrefillCostModel(cost.m, hw)
+                                   for hw in hardware]
+        else:
+            self.instance_costs = [cost] * num_instances
+        fits: Dict[str, TTFTPredictor] = {cost.hw.name: self.predictor}
+        self.instance_predictors: List[TTFTPredictor] = []
+        for c in self.instance_costs:
+            if c.hw.name not in fits:
+                fits[c.hw.name] = TTFTPredictor.from_cost_model(
+                    lambda n, c=c: c.prefill_time(n, chunk), max_tokens=32768)
+            self.instance_predictors.append(fits[c.hw.name])
+        self.capacities = [c.throughput(CAPACITY_PROBE_TOKENS, chunk)
+                           for c in self.instance_costs]
+
         self.num_decode = decode_instances
-        self.decode_cost = decode_cost or DecodeCostModel(cost.m, cost.hw)
+        if decode_hardware is not None:
+            decode_hardware = [resolve_hardware(hw) for hw in decode_hardware]
+            if decode_instances and len(decode_hardware) != decode_instances:
+                raise ValueError("decode_hardware length must match "
+                                 "decode_instances")
+            self.num_decode = len(decode_hardware)
+            self.decode_costs = [DecodeCostModel(cost.m, hw)
+                                 for hw in decode_hardware]
+        else:
+            self.decode_costs = [decode_cost
+                                 or DecodeCostModel(cost.m, cost.hw)] \
+                * self.num_decode
+        if decode_affinity is None:
+            decode_affinity = self.policy.needs_decode_pressure
+        self.decode_affinity = decode_affinity and self.num_decode > 0
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
         seq = itertools.count()
-        engines = [InstanceEngine(self.cost, self.cfg, self.predictor,
-                                  heap, seq, instance_id=i)
+        predictors = self.instance_predictors
+        if self.online_refit:
+            predictors = [OnlineTTFTPredictor.from_predictor(p)
+                          for p in predictors]
+        self.run_predictors = predictors      # exposed for refit inspection
+        engines = [InstanceEngine(self.instance_costs[i], self.cfg,
+                                  predictors[i], heap, seq, instance_id=i,
+                                  capacity=self.capacities[i])
                    for i in range(self.num_instances)]
-        decodes = [DecodeSim(self.decode_cost, heap, seq, instance_id=i)
+        decodes = [DecodeSim(self.decode_costs[i], heap, seq, instance_id=i)
                    for i in range(self.num_decode)]
         reset_requests(requests)
         for r in requests:
             heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
         # load-oblivious policies (round-robin) skip snapshot building
-        idle_loads = [InstanceLoad(instance_id=e.instance_id)
+        idle_loads = [InstanceLoad(instance_id=e.instance_id,
+                                   capacity=e.capacity)
                       for e in engines]
+        with_pressure = self.policy.needs_decode_pressure and decodes
 
         now = 0.0
         while heap:
@@ -170,16 +258,26 @@ class ClusterSim:
                     loads = [e.snapshot_load(req, now) for e in engines]
                 else:
                     loads = idle_loads
+                if with_pressure:
+                    loads = [replace(
+                        ld, decode_pressure=decodes[
+                            i % len(decodes)].pressure(req, now))
+                        for i, ld in enumerate(loads)]
                 engines[self.policy.select(req, loads, now)].on_arrival(
                     req, now)
             elif kind == DECODE_DONE:
                 payload[0].on_decode_done(payload, now)
             else:
+                engine: InstanceEngine = payload[0]
                 for r in handle_event(kind, payload, now):
                     if decodes and r.output_tokens > 0:
-                        # join the decode instance with the smallest batch
-                        dec = min(decodes, key=lambda d: (len(d.jobs),
-                                                          d.instance_id))
+                        if self.decode_affinity:
+                            # paired handoff: prefill i -> decode i mod D
+                            dec = decodes[engine.instance_id % len(decodes)]
+                        else:
+                            # join the decode instance with the smallest batch
+                            dec = min(decodes, key=lambda d: (len(d.jobs),
+                                                              d.instance_id))
                         dec.join(r, now)
 
         return ClusterResult(
@@ -198,18 +296,25 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      num_instances: int = 2,
                      dispatch: str = "round-robin",
                      decode_instances: int = 0,
-                     hw=None, **overrides) -> ClusterResult:
+                     hw=None, hardware=None, decode_hardware=None,
+                     online_refit: bool = False,
+                     decode_affinity: Optional[bool] = None,
+                     **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
-    presets, same fresh-copy semantics, plus instance count and dispatch."""
+    presets, same fresh-copy semantics, plus instance count, dispatch, and
+    heterogeneous pool layout (`hardware` / `decode_hardware` accept
+    HardwareSpecs or names like "a800")."""
     import copy
-    from dataclasses import replace
 
     from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
     from repro.sim.policies import preset
 
     spec = replace(MODEL_SPECS[model], tp=MODEL_TP.get(model, 1))
-    cost = PrefillCostModel(spec, hw or A800)
+    cost = PrefillCostModel(spec, resolve_hardware(hw) if hw else A800)
     sim = ClusterSim(cost, preset(system, **overrides),
                      num_instances=num_instances, dispatch=dispatch,
-                     decode_instances=decode_instances)
+                     decode_instances=decode_instances,
+                     hardware=hardware, decode_hardware=decode_hardware,
+                     online_refit=online_refit,
+                     decode_affinity=decode_affinity)
     return sim.run([copy.copy(r) for r in requests])

@@ -41,6 +41,26 @@ A100 = HardwareSpec("A100-SXM4", peak_flops=312e12, hbm_bw=1.555e12)
 A800 = HardwareSpec("A800-SXM4-80G", peak_flops=312e12, hbm_bw=2.0e12)
 TPU_V5E = HardwareSpec("TPUv5e", peak_flops=197e12, hbm_bw=819e9)
 
+# name -> spec lookup for CLI flags / hetero pool configs
+HARDWARE_SPECS = {hw.name: hw for hw in (A100, A800, TPU_V5E)}
+HARDWARE_ALIASES = {"a100": A100, "a800": A800, "tpu-v5e": TPU_V5E,
+                    "tpu_v5e": TPU_V5E}
+
+
+def resolve_hardware(hw) -> HardwareSpec:
+    """Accept a HardwareSpec or a name/alias string ("a800", "A100-SXM4")."""
+    if isinstance(hw, HardwareSpec):
+        return hw
+    key = str(hw)
+    if key in HARDWARE_SPECS:
+        return HARDWARE_SPECS[key]
+    try:
+        return HARDWARE_ALIASES[key.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown hardware {hw!r}; known: "
+            f"{sorted(HARDWARE_SPECS) + sorted(HARDWARE_ALIASES)}") from None
+
 
 @dataclass(frozen=True)
 class ModelSpec:
@@ -122,6 +142,43 @@ class PrefillCostModel:
             raise ValueError(name)
         return fl, by
 
+    # --- vectorized counterpart: c, o are float64 arrays over all chunks.
+    # Formulas and evaluation order mirror `_op_cost` exactly — every
+    # intermediate is an integer-valued float64 < 2^53, so the batched path is
+    # bit-identical to the scalar one (pinned by tests/test_costmodel_vec.py).
+    def _op_cost_vec(self, name: str, c: np.ndarray,
+                     o: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        m = self.m
+        d, H, K, hd, f = (m.d_model, m.num_heads, m.num_kv_heads,
+                          m.head_dim, m.d_ff)
+        one = np.ones_like(c)             # broadcast helper for constant bytes
+        if name == "qkv_proj":
+            fl = 2 * c * d * (H + 2 * K) * hd
+            by = (2 * d * (H + 2 * K) * hd) * one
+        elif name == "attn":
+            fl = 4 * c * (o + c / 2) * H * hd
+            by = 2 * 2 * (o + c) * K * hd + 2 * 2 * c * K * hd
+        elif name == "o_proj":
+            fl = 2 * c * H * hd * d
+            by = (2 * H * hd * d) * one
+        elif name == "gate_up_proj":
+            fl = 4 * c * d * f
+            by = (2 * d * 2 * f) * one
+        elif name == "down_proj":
+            fl = 2 * c * f * d
+            by = (2 * f * d) * one
+        elif name == "gate":
+            fl = 2 * c * d * m.num_experts
+            by = (2 * d * m.num_experts) * one
+        elif name == "experts":
+            k = m.experts_per_token
+            fl = 6 * c * k * d * f
+            touched = np.minimum(c * k, float(m.num_experts))
+            by = 2 * 3 * d * f * touched
+        else:
+            raise ValueError(name)
+        return fl, by
+
     def op_duration(self, name: str, c: int, o: int) -> float:
         fl, by = self._op_cost(name, c, o)
         tp = self.m.tp
@@ -129,9 +186,47 @@ class PrefillCostModel:
                 by / tp / (self.hw.hbm_bw * self.hw.eff_b))
         return t + self.hw.launch_overhead
 
+    def _op_duration_vec(self, name: str, c: np.ndarray,
+                         o: np.ndarray) -> np.ndarray:
+        fl, by = self._op_cost_vec(name, c, o)
+        tp = self.m.tp
+        eff_c = self.hw.eff_c * c / (c + self.hw.sat_tokens)
+        t = np.maximum(fl / tp / (self.hw.peak_flops * eff_c),
+                       by / tp / (self.hw.hbm_bw * self.hw.eff_b))
+        return t + self.hw.launch_overhead
+
+    def _chunk_grid(self, tokens: int,
+                    chunk_tokens: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(sizes, offsets) of every chunk of a `tokens`-long prefill."""
+        chunk = chunk_tokens or tokens
+        o = np.arange(0, tokens, chunk, dtype=np.float64)
+        c = np.minimum(float(chunk), tokens - o)
+        return c, o
+
     def op_durations(self, tokens: int, chunk_tokens: int = 0) -> np.ndarray:
         """Per-operator durations for a full prefill (all layers x all chunks),
-        in execution order. Shape: (n_chunks * L * n_ops,)."""
+        in execution order. Shape: (n_chunks * L * n_ops,).
+
+        Batched over all (chunk, layer, op) triples — the simulator hot path
+        (every SUBMIT builds one of these arrays); bit-identical to the scalar
+        reference `op_durations_scalar`."""
+        m = self.m
+        c, o = self._chunk_grid(tokens, chunk_tokens)
+        if c.size <= 1:
+            # numpy overhead loses on a single chunk (the unchunked presets):
+            # the scalar reference is bit-identical and faster there
+            return self.op_durations_scalar(tokens, chunk_tokens)
+        # (n_chunks, n_ops): one column per operator, rows in chunk order
+        per_chunk = np.stack(
+            [self._op_duration_vec(nm, c, o) for nm in m.op_names], axis=1)
+        # execution order = chunk-major, the op row repeated once per layer
+        return np.tile(per_chunk[:, None, :],
+                       (1, m.num_layers, 1)).reshape(-1)
+
+    def op_durations_scalar(self, tokens: int,
+                            chunk_tokens: int = 0) -> np.ndarray:
+        """Reference implementation (per-chunk Python loop) kept as the ground
+        truth the vectorized `op_durations` is pinned against."""
         m = self.m
         chunk = chunk_tokens or tokens
         out: List[float] = []

@@ -47,6 +47,11 @@ class SimTask:
     resume_time: float = 0.0             # sim time of last (re)start
     epoch: int = 0                       # invalidates stale events
     tid: int = field(default_factory=itertools.count().__next__)
+    min_deadline: float = 0.0            # over members (fixed once built)
+    preempted_tokens: float = 0.0        # remaining tokens frozen at preempt
+
+    def __post_init__(self):
+        self.min_deadline = min(r.deadline for r in self.requests)
 
     @property
     def head(self) -> Request:
@@ -112,13 +117,18 @@ class InstanceEngine:
 
     def __init__(self, cost: PrefillCostModel, cfg: SimConfig,
                  predictor: TTFTPredictor, heap: List, seq: Iterator[int],
-                 instance_id: int = 0):
+                 instance_id: int = 0, capacity: float = 1.0):
         self.cost = cost
         self.cfg = cfg
         self.predictor = predictor
         self.heap = heap
         self.seq = seq
         self.instance_id = instance_id
+        self.capacity = capacity        # peak prefill throughput (tokens/s);
+                                        # 1.0 = uniform pool (capacity unused)
+        # online predictor feedback: engines feed observed (tokens, latency)
+        # into predictors that expose observe() (OnlineTTFTPredictor)
+        self._observe = getattr(predictor, "observe", None)
         self.core = SchedulerCore(
             predictor=predictor, policy=cfg.policy,
             batch_budget=cfg.batch_budget,
@@ -151,20 +161,20 @@ class InstanceEngine:
         batch deadline is earlier (it finishes first — otherwise it yields
         within one boundary)."""
         items = [(float(r.num_tokens), r.deadline) for r in self.waiting]
-        items += [(t.tokens * t.remaining_fraction(now, running=False),
-                   min(r.deadline for r in t.requests))
+        items += [(t.preempted_tokens, t.min_deadline)
                   for t in self.preempted.values()]
         queued = competing_tokens(items, candidate, now, self.predictor.predict)
         running = 0.0
         if self.running is not None:
             t = self.running
-            if min(r.deadline for r in t.requests) <= candidate.deadline:
+            if t.min_deadline <= candidate.deadline:
                 running = t.tokens * t.remaining_fraction(now, running=True)
         return InstanceLoad(
             instance_id=self.instance_id, queued_tokens=queued,
             running_tokens=running,
             n_outstanding=len(self.waiting) + len(self.preempted)
-            + (self.running is not None))
+            + (self.running is not None),
+            capacity=self.capacity)
 
     # --------------------------------------------------------------- build
     def _boundaries(self, op_ends: np.ndarray, tokens: int) -> np.ndarray:
@@ -229,6 +239,34 @@ class InstanceEngine:
             self.running = task
             self._schedule_completion(task, t0)
 
+    def _preempted_reps(self, t0: float) -> List[Request]:
+        """Each preempted TASK is represented by its highest-priority member
+        (Alg. 2's Q_all contains requests, not tasks — a batch must not
+        starve because its head went infeasible). Unbatched tasks need no
+        priority evaluation; batched ones share one vectorized pass
+        (np.argmax takes the first maximum, exactly like max())."""
+        tasks = list(self.preempted.values())
+        multi = [t for t in tasks if len(t.requests) > 1]
+        if not multi:
+            return [t.requests[0] for t in tasks]
+        members = [r for t in multi for r in t.requests]
+        vec = self.core._priorities_vec(members, t0) \
+            if len(members) >= 16 else None
+        if vec is None:
+            return [t.requests[0] if len(t.requests) == 1
+                    else max(t.requests,
+                             key=lambda r: self.core.priority(r, t0))
+                    for t in tasks]
+        pri = vec[0]
+        best: Dict[int, Request] = {}
+        i = 0
+        for t in multi:
+            k = len(t.requests)
+            best[t.tid] = t.requests[int(np.argmax(pri[i:i + k]))]
+            i += k
+        return [best[t.tid] if t.tid in best else t.requests[0]
+                for t in tasks]
+
     def _round(self, t0: float) -> None:
         cfg = self.cfg
         self.rounds += 1
@@ -236,11 +274,7 @@ class InstanceEngine:
             return                          # round resumes after the ACK
         running = self.running
         running_head = running.head if running is not None else None
-        # each preempted TASK is represented by its highest-priority member
-        # (Alg. 2's Q_all contains requests, not tasks — a batch must not
-        # starve because its head went infeasible)
-        reps = [max(t.requests, key=lambda r: self.core.priority(r, t0))
-                for t in self.preempted.values()]
+        reps = self._preempted_reps(t0)
         decision = self.core.schedule_round(
             t0 + cfg.round_overhead, self.waiting, reps, running_head)
         if decision.is_noop:
@@ -276,6 +310,10 @@ class InstanceEngine:
             r.first_token_time = now
             r.state = RequestState.DONE
             r.ops_done = r.ops_total
+        if self._observe is not None:
+            # observed service time for the batch — the quantity the TTFT
+            # predictor models (queueing is priced separately by dispatch)
+            self._observe(task.tokens, task.total)
         self.running = None
         self._round(now)
         return list(task.requests)
@@ -288,6 +326,8 @@ class InstanceEngine:
             return
         task.epoch += 1                 # cancels its completion event
         task.exec_offset = task.next_boundary(now)
+        task.preempted_tokens = task.tokens * task.remaining_fraction(
+            now, running=False)         # frozen until resume (load snapshots)
         # boundary index -> ops completed (for S-EDF remaining work)
         ops_done = int(np.searchsorted(
             task.op_ends, task.exec_offset - 1e-12) + 1)

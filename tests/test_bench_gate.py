@@ -1,0 +1,103 @@
+"""The CI benchmark-regression gate must actually trip: compare.py exits
+nonzero on a synthetically degraded BENCH json, passes on identical/improved
+results, and run.py --only rejects unknown figure names instead of silently
+running nothing (which would green-wash a CI typo)."""
+import json
+
+import pytest
+
+from benchmarks import run as bench_run
+from benchmarks.compare import is_gated, main as compare_main
+
+
+def write_bench(path, bench, metrics):
+    with open(path / f"BENCH_{bench}.json", "w") as f:
+        json.dump({"bench": bench, "elapsed_s": 1.0, "metrics": metrics}, f)
+
+
+BASE = {
+    "fig9/llama3-8b/flowprefill/goodput_req_s": 6.21,
+    "fig9/llama3-8b/flowprefill_vs_distserve": 3.09,
+    "fig9/_elapsed_s": 12.0,                 # never gated
+}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    write_bench(base, "fig9", BASE)
+    return base, fresh
+
+
+def test_gate_passes_on_identical_and_improved(dirs):
+    base, fresh = dirs
+    write_bench(fresh, "fig9", BASE)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    better = dict(BASE, **{"fig9/llama3-8b/flowprefill/goodput_req_s": 7.5})
+    write_bench(fresh, "fig9", better)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+
+
+def test_gate_trips_on_degraded_goodput(dirs):
+    """The acceptance check: a synthetically degraded result (goodput -20%,
+    beyond the -10% tolerance) must exit nonzero."""
+    base, fresh = dirs
+    degraded = dict(BASE, **{"fig9/llama3-8b/flowprefill/goodput_req_s": 4.9})
+    write_bench(fresh, "fig9", degraded)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # ...but a -5% wobble inside tolerance passes
+    wobble = dict(BASE, **{"fig9/llama3-8b/flowprefill/goodput_req_s": 5.9})
+    write_bench(fresh, "fig9", wobble)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    # tolerance is configurable: -5% trips a -2% gate
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh),
+                         "--tolerance", "0.02"]) == 1
+
+
+def test_gate_trips_on_missing_bench_or_metric(dirs):
+    base, fresh = dirs
+    # bench json absent entirely (module crashed: only an _error CSV row)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # gated metric silently dropped from an otherwise-present bench
+    partial = {"fig9/llama3-8b/flowprefill_vs_distserve": 3.09}
+    write_bench(fresh, "fig9", partial)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+
+
+def test_gate_errors_without_baselines(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert compare_main(["--baseline", str(empty),
+                         "--fresh", str(empty)]) == 2
+
+
+def test_gated_metric_selection():
+    assert is_gated("fig18/llama3-8b/poisson/least-loaded/goodput_req_s")
+    assert is_gated("fig19/llama3-8b/a800-a100/decode-aware_vs_jsq")
+    assert is_gated("fig19/llama3-8b/a800-tpu/capacity-weighted/fast_share")
+    assert not is_gated("fig9/_elapsed_s")
+    assert not is_gated("fig9/_error")
+    assert not is_gated("fig19/llama3-8b/refit/refit_rel_err")
+
+
+def test_run_only_rejects_unknown_figure_names(capsys):
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", "fig9,fig99"])
+    assert exc.value.code == 2
+    assert "unknown figure name" in capsys.readouterr().err
+
+
+def test_committed_baselines_are_wellformed():
+    """The committed reference results must stay loadable and gated."""
+    import os
+
+    from benchmarks.compare import load_dir
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
+    assert {"fig9", "fig18", "fig19"} <= set(baselines)
+    gated = [m for metrics in baselines.values() for m in metrics
+             if is_gated(m)]
+    assert len(gated) >= 20

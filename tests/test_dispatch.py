@@ -3,10 +3,11 @@
 objects from repro.core.dispatch."""
 import numpy as np
 
-from repro.core.dispatch import (DISPATCH_POLICIES, DeflectionDispatch,
+from repro.core.dispatch import (DISPATCH_POLICIES, CapacityWeightedDispatch,
+                                 DecodeAwareDispatch, DeflectionDispatch,
                                  InstanceLoad, LeastLoadedDispatch,
                                  RoundRobinDispatch, competing_tokens,
-                                 make_dispatch, predicted_ttft)
+                                 drain_time, make_dispatch, predicted_ttft)
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
 
@@ -80,9 +81,55 @@ def test_deflection_falls_back_to_least_predicted():
                       0.0) == 1
 
 
+def test_capacity_weighted_prefers_fast_instance():
+    pol = CapacityWeightedDispatch()
+    # same 1000-token backlog everywhere: the 2x-capacity instance drains it
+    # in half the time and wins
+    lds = [InstanceLoad(instance_id=0, queued_tokens=1000, capacity=1000.0),
+           InstanceLoad(instance_id=1, queued_tokens=1000, capacity=2000.0)]
+    assert pol.select(req(tokens=100), lds, 0.0) == 1
+    # the fast instance keeps winning until its backlog costs more wall time
+    lds = [InstanceLoad(instance_id=0, queued_tokens=1000, capacity=1000.0),
+           InstanceLoad(instance_id=1, queued_tokens=3000, capacity=2000.0)]
+    assert pol.select(req(tokens=100), lds, 0.0) == 0
+    # uniform capacities degrade to raw-token JSQ with id tie-break
+    lds = loads(500, 500, 200)
+    assert pol.select(req(), lds, 0.0) == 2
+
+
+def test_drain_time_normalizes_by_capacity():
+    ld = InstanceLoad(instance_id=0, queued_tokens=900, capacity=500.0)
+    assert drain_time(req(tokens=100), ld) == 1000 / 500.0
+    # capacity 1.0 (unknown) -> raw tokens
+    assert drain_time(req(tokens=100), loads(900)[0]) == 1000.0
+
+
+def test_decode_aware_penalizes_saturated_decode():
+    pol = DecodeAwareDispatch(knee=0.85, penalty=8.0)
+    # equal prefill drain, but instance 0's decode sits past the TBT knee
+    lds = [InstanceLoad(instance_id=0, queued_tokens=500, capacity=1000.0,
+                        decode_pressure=1.2),
+           InstanceLoad(instance_id=1, queued_tokens=500, capacity=1000.0,
+                        decode_pressure=0.3)]
+    assert pol.select(req(tokens=100), lds, 0.0) == 1
+    # below the knee the policy IS capacity-weighted JSQ (id tie-break)
+    lds = [InstanceLoad(instance_id=0, queued_tokens=500, capacity=1000.0,
+                        decode_pressure=0.5),
+           InstanceLoad(instance_id=1, queued_tokens=500, capacity=1000.0,
+                        decode_pressure=0.84)]
+    assert pol.select(req(tokens=100), lds, 0.0) == 0
+    # saturated decode still loses to a hugely backlogged prefill queue
+    lds = [InstanceLoad(instance_id=0, queued_tokens=100, capacity=1000.0,
+                        decode_pressure=1.0),
+           InstanceLoad(instance_id=1, queued_tokens=50000, capacity=1000.0,
+                        decode_pressure=0.0)]
+    assert pol.select(req(tokens=100), lds, 0.0) == 0
+
+
 def test_make_dispatch_registry_and_passthrough():
     assert set(DISPATCH_POLICIES) == {"round-robin", "least-loaded",
-                                      "deflection"}
+                                      "deflection", "capacity-weighted",
+                                      "decode-aware"}
     for name in DISPATCH_POLICIES:
         pol = make_dispatch(name, PRED)
         assert pol.name == name and pol.predictor is PRED

@@ -1,0 +1,189 @@
+"""Heterogeneous cluster simulation: per-instance hardware specs, capacity-
+weighted and decode-aware dispatch, and online TTFT-predictor refit."""
+import copy
+
+import numpy as np
+
+from repro.core.metrics import max_goodput
+from repro.core.predictor import OnlineTTFTPredictor, TTFTPredictor
+from repro.sim.cluster import ClusterSim, simulate_cluster
+from repro.sim.costmodel import (A100, A800, TPU_V5E, MODEL_SPECS,
+                                 PrefillCostModel, resolve_hardware)
+from repro.sim.policies import preset
+from repro.traces.qwentrace import TraceConfig, generate
+
+
+def test_resolve_hardware_names_and_specs():
+    assert resolve_hardware("a800") is A800
+    assert resolve_hardware("A100-SXM4") is A100
+    assert resolve_hardware(TPU_V5E) is TPU_V5E
+    try:
+        resolve_hardware("h9000")
+        raise AssertionError("expected ValueError")
+    except ValueError:
+        pass
+
+
+def test_hetero_pool_builds_per_instance_models():
+    cost = PrefillCostModel(MODEL_SPECS["llama3-8b"], A800)
+    sim = ClusterSim(cost, preset("flowprefill"),
+                     hardware=[A800, A800, TPU_V5E])
+    assert sim.num_instances == 3
+    assert [c.hw.name for c in sim.instance_costs] == \
+        [A800.name, A800.name, TPU_V5E.name]
+    # faster hardware -> larger capacity (peak prefill throughput)
+    assert sim.capacities[0] == sim.capacities[1] > sim.capacities[2]
+    # per-hardware predictor cache: same-spec instances share one fit
+    assert sim.instance_predictors[0] is sim.instance_predictors[1]
+    assert sim.instance_predictors[2] is not sim.instance_predictors[0]
+
+
+def test_capacity_weighted_routes_more_to_faster_instance():
+    """On a mixed A800/TPU-v5e pool (~1.6x prefill capacity gap),
+    capacity-weighted JSQ must route proportionally more work to the fast
+    card than both blind cycling and hardware-blind least-loaded."""
+    reqs = generate(TraceConfig(rate=10, duration=40, seed=1))
+    share = {}
+    att = {}
+    for pol in ("round-robin", "least-loaded", "capacity-weighted"):
+        res = simulate_cluster("flowprefill", reqs,
+                               hardware=[A800, TPU_V5E], dispatch=pol)
+        share[pol] = res.dispatched[0] / sum(res.dispatched)
+        att[pol] = res.attainment
+    assert share["capacity-weighted"] > 0.55            # skewed to A800
+    assert share["capacity-weighted"] > share["least-loaded"] + 0.03
+    assert abs(share["round-robin"] - 0.5) < 0.02       # blind cycling
+    assert att["capacity-weighted"] > att["round-robin"]
+
+
+def test_decode_aware_beats_load_blind_jsq_on_mixed_pool():
+    """The fig19 acceptance claim: on a mixed A800/A100 pool with a paired
+    decode stage and a tight TBT SLO, decode-aware dispatch achieves >= 1.15x
+    the end-to-end goodput of hardware-blind least-loaded JSQ."""
+    pool = [A800, A800, A100, A100]
+    rates = [8, 12, 16, 20]
+    goodput = {}
+    for pol in ("least-loaded", "decode-aware"):
+        atts = []
+        for rate in rates:
+            reqs = generate(TraceConfig(rate=rate, duration=40, seed=3,
+                                        output_mean=256, tbt_slo=0.018))
+            res = simulate_cluster("flowprefill", reqs, hardware=pool,
+                                   decode_hardware=pool, decode_instances=4,
+                                   dispatch=pol)
+            atts.append(res.e2e_attainment)
+        goodput[pol] = max_goodput(rates, atts)
+    assert goodput["decode-aware"] >= 1.15 * goodput["least-loaded"], goodput
+
+
+def test_decode_affinity_defaults():
+    cost = PrefillCostModel(MODEL_SPECS["llama3-8b"], A800)
+    sim = ClusterSim(cost, preset("flowprefill"), num_instances=2,
+                     dispatch="decode-aware", decode_instances=2)
+    assert sim.decode_affinity                     # paired handoff
+    sim = ClusterSim(cost, preset("flowprefill"), num_instances=2,
+                     dispatch="least-loaded", decode_instances=2)
+    assert not sim.decode_affinity                 # least-batch join (PR 1)
+
+
+def test_simulate_cluster_accepts_hardware_names():
+    reqs = generate(TraceConfig(rate=4, duration=10, seed=0))
+    res = simulate_cluster("flowprefill", reqs, hardware=["a800", "tpu-v5e"],
+                           dispatch="capacity-weighted")
+    assert sum(res.dispatched) == len(reqs)
+
+
+# --- online predictor refit --------------------------------------------------
+
+
+def test_online_predictor_unit_refit_converges():
+    prior = TTFTPredictor(coeffs=np.array([5e-4, 0.1]))      # 2x-ish off
+    true = TTFTPredictor(coeffs=np.array([2.5e-4, 0.05]))
+    p = OnlineTTFTPredictor.from_predictor(prior)
+    rng = np.random.default_rng(0)
+    probe = [500.0, 2000.0, 8000.0, 20000.0]
+
+    def err():
+        return float(np.mean([abs(p.predict(n) - true.predict(n))
+                              / true.predict(n) for n in probe]))
+
+    before = err()
+    for _ in range(64):
+        n = float(rng.uniform(100, 30000))
+        p.observe(n, true.predict(n))
+    assert p.n_refits > 0
+    assert err() < before * 0.05
+
+
+def test_online_predictor_observe_is_thread_safe():
+    """The real Proxy feeds observe() from every instance's scheduler thread;
+    concurrent observes must neither mispair observations nor crash a refit
+    with mismatched window arrays."""
+    import threading
+
+    p = OnlineTTFTPredictor(coeffs=np.array([1e-4, 0.0]), window=64,
+                            min_points=4, refit_every=2)
+    errors = []
+
+    def feed(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(500):
+                n = float(rng.uniform(100, 30000))
+                p.observe(n, 1e-4 * n)
+        except Exception as e:          # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=feed, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert p.n_observed == 2000
+    assert p.n_refits > 0
+
+
+def test_online_refit_shrinks_error_in_cluster_sim():
+    """Predictor-feedback acceptance: an A800-fitted prior deployed on
+    TPU-v5e instances converges to the instance's true cost curve after one
+    online-refit run (error must shrink by well over 2x)."""
+    spec = MODEL_SPECS["llama3-8b"]
+    prior_cost = PrefillCostModel(spec, A800)
+    true_cost = PrefillCostModel(spec, TPU_V5E)
+    probe = np.linspace(256, 24576, 16)
+
+    def err(predict):
+        return float(np.mean(
+            [abs(predict(n) - true_cost.prefill_time(int(n)))
+             / true_cost.prefill_time(int(n)) for n in probe]))
+
+    sim = ClusterSim(prior_cost, preset("flowprefill"), num_instances=2,
+                     hardware=[TPU_V5E, TPU_V5E], dispatch="least-loaded",
+                     online_refit=True)
+    # deploy the WRONG-generation prior on both instances
+    sim.instance_predictors = [sim.predictor] * 2
+    before = err(sim.predictor.predict)
+    reqs = generate(TraceConfig(rate=8, duration=20, seed=3))
+    sim.run(copy.deepcopy(reqs))
+    after = float(np.mean([err(p.predict) for p in sim.run_predictors]))
+    assert before > 0.2                      # the prior really is off
+    assert after < before * 0.5, (before, after)
+    # engine predictors were refit; the seed prior object is untouched
+    assert all(p.n_refits > 0 for p in sim.run_predictors)
+    assert err(sim.predictor.predict) == before
+
+
+def test_online_refit_keeps_observing_across_hardware():
+    """Two different-speed instances each converge to their OWN curve."""
+    spec = MODEL_SPECS["llama3-8b"]
+    cost = PrefillCostModel(spec, A800)
+    sim = ClusterSim(cost, preset("flowprefill"),
+                     hardware=[A800, TPU_V5E], dispatch="capacity-weighted",
+                     online_refit=True)
+    reqs = generate(TraceConfig(rate=8, duration=20, seed=5))
+    sim.run(copy.deepcopy(reqs))
+    p_fast, p_slow = sim.run_predictors
+    assert p_fast.n_observed > 0 and p_slow.n_observed > 0
+    # the slow instance's learned curve predicts higher latency at scale
+    assert p_slow.predict(16384) > p_fast.predict(16384)
