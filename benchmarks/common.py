@@ -11,14 +11,16 @@ Row = Tuple[str, float, str]
 
 @lru_cache(maxsize=None)
 def cached_trace(*, rate, duration, seed, model="llama3-8b", burstiness=1.0,
-                 output_mean=0.0, tbt_slo=0.1):
+                 output_mean=0.0, tbt_slo=0.1, tbt_slo_by_task=None):
     """Memoized qwentrace generation: policy sweeps replay the SAME trace
     (same seed/rate), and `simulate_cluster`/`simulate` copy requests before
-    running, so the cached list is never mutated."""
+    running, so the cached list is never mutated. `tbt_slo_by_task` must be
+    hashable — pass a tuple of (task, slo) pairs."""
     from repro.traces.qwentrace import TraceConfig, generate
-    return generate(TraceConfig(rate=rate, duration=duration, seed=seed,
-                                model=model, burstiness=burstiness,
-                                output_mean=output_mean, tbt_slo=tbt_slo))
+    return generate(TraceConfig(
+        rate=rate, duration=duration, seed=seed, model=model,
+        burstiness=burstiness, output_mean=output_mean, tbt_slo=tbt_slo,
+        tbt_slo_by_task=dict(tbt_slo_by_task) if tbt_slo_by_task else None))
 
 
 def time_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:

@@ -5,19 +5,25 @@ results in ``benchmarks/baselines/`` and exits nonzero when a gated metric
 regresses beyond tolerance — so the perf trajectory is *enforced* on every
 push, not just uploaded as an artifact someone might read.
 
-Gated metrics are the higher-is-better SLO outcomes (name contains
-``goodput``, ``attainment``, ``_vs_`` ratios, or ``share``); wall-clock and
-harness bookkeeping rows are ignored (they vary with runner speed — the
-simulator metrics themselves are deterministic, seeded discrete-event
-results, so cross-machine values match exactly and the tolerance only
-absorbs intentional drift).
+Two gated families (see docs/BENCHMARKS.md):
+
+  * higher-is-better SLO outcomes (name contains ``goodput``,
+    ``attainment``, ``_vs_`` ratios, or ``share``): a drop beyond tolerance
+    fails;
+  * lower-is-better error metrics (name contains ``rel_err``, e.g. the
+    fig19 online-refit prediction errors): a RISE beyond tolerance fails.
+
+Wall-clock and harness bookkeeping rows are ignored (they vary with runner
+speed — the simulator metrics themselves are deterministic, seeded
+discrete-event results, so cross-machine values match exactly and the
+tolerance only absorbs intentional drift).
 
     python -m benchmarks.compare --baseline benchmarks/baselines \
         --fresh bench-artifacts [--tolerance 0.10]
 
 Refreshing baselines after an intentional perf change:
 
-    PYTHONPATH=src python -m benchmarks.run --only fig9,fig18,fig19 \
+    PYTHONPATH=src python -m benchmarks.run --only fig9,fig18,fig19,fig20 \
         --json-out benchmarks/baselines
 """
 from __future__ import annotations
@@ -29,14 +35,24 @@ import os
 import sys
 from typing import Dict, List, Tuple
 
-# substrings of metric names that are gated (higher is better)
+# substrings of metric names that are gated, higher is better
 GATED = ("goodput", "attainment", "_vs_", "share")
+# substrings of metric names that are gated, LOWER is better (error families)
+GATED_LOWER = ("rel_err",)
 # metric-name substrings never gated (runner-speed or error bookkeeping)
-SKIPPED = ("_elapsed_s", "/_error", "/_real_error", "rel_err")
+SKIPPED = ("_elapsed_s", "/_error", "/_real_error")
+
+
+def is_gated_lower(name: str) -> bool:
+    """Lower-is-better gated metric: regression = value RISING."""
+    if any(s in name for s in SKIPPED):
+        return False
+    return any(s in name for s in GATED_LOWER)
 
 
 def is_gated(name: str) -> bool:
-    if any(s in name for s in SKIPPED):
+    """Higher-is-better gated metric: regression = value dropping."""
+    if any(s in name for s in SKIPPED) or is_gated_lower(name):
         return False
     return any(s in name for s in GATED)
 
@@ -67,20 +83,30 @@ def compare(baseline: Dict[str, Dict[str, float]],
             continue
         fresh_metrics = fresh[bench]
         for name, base in sorted(base_metrics.items()):
-            if not is_gated(name):
+            lower = is_gated_lower(name)
+            if not (is_gated(name) or lower):
                 continue
             if name not in fresh_metrics:
                 regressions.append(f"{name}: gated metric missing from "
                                    f"fresh run (baseline={base})")
                 continue
             new = fresh_metrics[name]
-            floor = base * (1.0 - tolerance)
-            if base > 0 and new < floor:
-                regressions.append(
-                    f"{name}: {base} -> {new} "
-                    f"({(new / base - 1.0) * 100:+.1f}%, floor {floor:.3g})")
+            if lower:
+                # base == 0 is a perfect error score: ANY positive fresh
+                # value is an unambiguous regression (no division-safety
+                # excuse here, unlike the higher-is-better floor)
+                ceil = base * (1.0 + tolerance)
+                bad = new > ceil if base > 0 else new > 0
+                bound = f"ceiling {ceil:.3g}"
             else:
-                delta = f"{(new / base - 1.0) * 100:+.1f}%" if base else "n/a"
+                floor = base * (1.0 - tolerance)
+                bad = base > 0 and new < floor
+                bound = f"floor {floor:.3g}"
+            delta = f"{(new / base - 1.0) * 100:+.1f}%" if base else "n/a"
+            if bad:
+                regressions.append(f"{name}: {base} -> {new} "
+                                   f"({delta}, {bound})")
+            else:
                 lines.append(f"  ok {name}: {base} -> {new} ({delta})")
     for bench in sorted(set(fresh) - set(baseline)):
         lines.append(f"  new bench (no baseline, not gated): {bench}")

@@ -14,7 +14,7 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig10_policies, fig11_budget, fig12_blocking,
                         fig13_predictor, fig14_single_slo,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
-                        fig18_cluster, fig19_hetero, roofline)
+                        fig18_cluster, fig19_hetero, fig20_decode, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -30,6 +30,7 @@ MODULES = [
     ("fig17", fig17_moe),
     ("fig18", fig18_cluster),
     ("fig19", fig19_hetero),
+    ("fig20", fig20_decode),
     ("roofline", roofline),
 ]
 

@@ -8,6 +8,8 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
       PYTHONPATH=src python examples/serve_cluster.py [--instances 4]
           [--rate 24] [--burstiness 3] [--policy all]
           [--hetero a800,a800,a100,a100]   # mixed-hardware pool
+          [--decode-sched s-edf] [--decode-max-batch 16]
+          [--decode-migration]             # TBT-slack-aware decode stage
 
   --real  — a tiny REAL model on CPU: Proxy + N threaded PrefillInstances +
             a DecodeInstance, load-aware dispatch against live backlog:
@@ -35,15 +37,20 @@ def run_sim(args):
           f"({sum(r.num_tokens for r in reqs)} prefill tokens)")
     policies = POLICIES if args.policy == "all" else [args.policy]
     print(f"{'dispatch':>17s} | {'TTFT att':>8s} {'e2e att':>8s} "
-          f"{'imbalance':>9s} {'preempts':>8s} | per-instance dispatched")
+          f"{'imbalance':>9s} {'preempts':>8s} {'dec-pre':>7s} "
+          f"{'migr':>4s} | per-instance dispatched")
     for policy in policies:
         res = simulate_cluster("flowprefill", reqs,
                                num_instances=n, dispatch=policy,
                                decode_instances=n, hardware=hardware,
-                               decode_hardware=hardware)
+                               decode_hardware=hardware,
+                               decode_policy=args.decode_sched,
+                               decode_max_batch=args.decode_max_batch,
+                               decode_migration=args.decode_migration)
         print(f"{policy:>17s} | {res.attainment:8.3f} "
               f"{res.e2e_attainment:8.3f} {res.imbalance:9.2f} "
-              f"{res.preemptions:8d} | {res.dispatched}")
+              f"{res.preemptions:8d} {res.decode_preemptions:7d} "
+              f"{res.migrations:4d} | {res.dispatched}")
 
 
 def run_real(args):
@@ -84,17 +91,22 @@ def run_real(args):
     insts = [PrefillInstance(
         params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
         max_seq=max_seq, executor=ex) for _ in range(args.instances)]
-    dec = DecodeInstance(params, cfg, decode_tokens=2)
+    # the decode flags apply here too: --decode-sched picks the instances'
+    # admission policy, --decode-migration needs >= 2 decode instances
+    n_dec = 2 if args.decode_migration else 1
+    decs = [DecodeInstance(params, cfg, decode_tokens=2,
+                           policy=args.decode_sched) for _ in range(n_dec)]
     # wire the hetero-pool signals so capacity-weighted / decode-aware run
     # against real measurements, not silent 1.0/0.0 defaults: capacity from
     # the measured profile (identical executors -> identical capacities),
     # decode pressure priced by the analytic decode model for this config
     from repro.sim.costmodel import A800, DecodeCostModel, ModelSpec
     cap = xs[-1] / ys[-1]                  # measured prefill tokens/s
-    proxy = Proxy(insts, [dec], dispatch=policy,
+    proxy = Proxy(insts, decs, dispatch=policy,
                   capacities=[cap] * args.instances,
                   decode_cost=DecodeCostModel(ModelSpec.from_config(cfg),
-                                              A800))
+                                              A800),
+                  decode_migration=args.decode_migration)
     rng = np.random.default_rng(args.seed)
     try:
         for i in range(args.requests):
@@ -112,7 +124,9 @@ def run_real(args):
         print(f"  SLO attainment={rep['slo_attainment']:.2f} "
               f"TTFT mean={rep['ttft']['mean']:.3f}s "
               f"p99={rep['ttft']['p99']:.3f}s")
-        print(f"  decoded={len(dec.finished)}")
+        print(f"  decoded={sum(len(d.finished) for d in decs)} "
+              f"decode_migrations={rep['decode_migrations']} "
+              f"decode_preemptions={rep['decode_preemptions']}")
     finally:
         proxy.shutdown()
 
@@ -131,11 +145,26 @@ def main():
     ap.add_argument("--tbt-slo", type=float, default=0.02,
                     help="decode TBT SLO (s/token); tight values make the "
                     "decode-aware policy visible on mixed pools")
+    ap.add_argument("--decode-sched", default="fcfs",
+                    choices=["fcfs", "s-edf"],
+                    help="decode batch-admission policy (s-edf = TBT-slack-"
+                    "aware with token-boundary preemption)")
+    ap.add_argument("--decode-max-batch", type=int, default=0,
+                    help="sim mode: decode KV slot cap per instance (0 = "
+                    "unbounded processor sharing; scheduling needs a cap to "
+                    "matter). The real DecodeInstance decodes one stream at "
+                    "a time, i.e. an inherent cap of 1")
+    ap.add_argument("--decode-migration", action="store_true",
+                    help="cost-gated migration of queued decodes off "
+                    "instances past the TBT knee")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--requests", type=int, default=10,
                     help="request count in --real mode")
     args = ap.parse_args()
+    if args.decode_migration and args.decode_max_batch <= 0 and not args.real:
+        ap.error("--decode-migration migrates QUEUED decodes: set "
+                 "--decode-max-batch > 0 (unbounded decode never queues)")
     if args.real:
         run_real(args)
     else:

@@ -1,10 +1,13 @@
-from repro.core.dispatch import (DISPATCH_POLICIES, DispatchPolicy,
-                                 InstanceLoad, make_dispatch)
+from repro.core.dispatch import (DISPATCH_POLICIES, DecodeLoad, DispatchPolicy,
+                                 InstanceLoad, make_dispatch,
+                                 plan_decode_migrations)
 from repro.core.events import Event, EventKind, EventMonitor
 from repro.core.metrics import (attainment_by_task, max_goodput, min_slo_scale,
                                 slo_attainment, ttft_stats)
-from repro.core.predictor import TTFTPredictor
+from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
+                                  TTFTPredictor)
 from repro.core.preemption import BlockingStats, PreemptionSignal, SyncCounter
 from repro.core.request import Request, RequestState
-from repro.core.scheduler import (Action, Decision, SchedulerCore,
-                                  slo_aware_batching)
+from repro.core.scheduler import (Action, Decision, DecodeEntry,
+                                  DecodeSchedulerCore, SchedulerCore,
+                                  decode_sedf_priority, slo_aware_batching)

@@ -38,11 +38,21 @@ the newcomer: outstanding items with an earlier deadline that are themselves
 still feasible.  (Raw aggregate tokens make join-shortest-queue *worse* than
 round-robin here: doomed long requests repel traffic from instances that
 would serve it instantly.)
+
+Decode-side rebalancing lives here too: `DecodeLoad` snapshots a decode
+instance's continuous batch + admission queue, and `plan_decode_migrations`
+produces a cost-gated plan for moving QUEUED decodes off an instance whose
+effective TBT pressure has crossed the SLO knee — the decode-aware policy's
+dispatch-time avoidance turned into a run-time correction. The same plan
+function drives `ClusterSim` (KV-handoff priced by the cost model) and the
+real `Proxy` (host-memory handoff). Policy-by-policy rationale and the
+figures demonstrating each live in docs/SCHEDULING.md.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -249,6 +259,125 @@ DISPATCH_POLICIES = {
     (RoundRobinDispatch, LeastLoadedDispatch, DeflectionDispatch,
      CapacityWeightedDispatch, DecodeAwareDispatch)
 }
+
+
+# ---------------------------------------------------------------------------
+# Decode migration (cost-gated rebalancing of queued decodes)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DecodeLoad:
+    """Snapshot of one decode instance for migration planning: the continuous
+    batch (`n_resident`, capped at `max_batch` slots), the admission queue
+    (`n_waiting`), and the aggregate context those streams hold. Built fresh
+    per planning decision by the owner (ClusterSim / Proxy)."""
+    instance_id: int
+    n_resident: int = 0
+    n_waiting: int = 0
+    ctx_tokens: float = 0.0        # total context (prompt + decoded) held
+    max_batch: int = 0             # batch slot cap; 0 = unbounded
+    step_time: Optional[Callable[[int, float], float]] = None
+
+    @property
+    def total(self) -> int:
+        return self.n_resident + self.n_waiting
+
+    def effective_step(self, extra_jobs: int = 0,
+                       extra_ctx: float = 0.0) -> float:
+        """Predicted effective per-token latency of one stream on this
+        instance with `extra_jobs` streams added (negative = removed): the
+        analytic step time of the slot-capped batch, inflated by the
+        time-sharing factor N/max_batch once the population N exceeds the cap
+        — B slots shared by N streams serve each at B/N of the batch rate, so
+        queueing shows up as TBT degradation, the signal the knee is defined
+        on. Uncapped instances never queue: the factor is exactly 1."""
+        n = self.total + extra_jobs
+        if n <= 0 or self.step_time is None:
+            return 0.0
+        b = min(n, self.max_batch) if self.max_batch > 0 else n
+        t = self.step_time(b, (self.ctx_tokens + extra_ctx) / n)
+        if self.max_batch > 0 and n > self.max_batch:
+            t *= n / self.max_batch
+        return t
+
+
+@dataclass(frozen=True)
+class DecodeCandidate:
+    """One queued (not yet resident) decode considered for migration."""
+    key: int                       # owner handle (request rid)
+    context_tokens: float          # KV to hand off (prompt + decoded so far)
+    remaining_tokens: float        # output tokens still to decode
+    deadline: float                # Request.decode_deadline
+    migrations: int = 0            # times already migrated
+
+
+def plan_decode_migrations(
+        src: DecodeLoad, candidates: Sequence[DecodeCandidate],
+        loads: Sequence[DecodeLoad], now: float, *,
+        transfer_time: Optional[Callable[[float], float]] = None,
+        knee: float = 0.85, max_migrations: int = 1,
+        margin: float = 0.25) -> List[Tuple[int, int, float]]:
+    """Cost-gated plan for migrating queued decodes off a saturating `src`.
+
+    For each candidate (earliest decode deadline first) the per-token budget
+    is its REMAINING slack rate, (deadline - now) / remaining_tokens; `src` is
+    saturating for that stream when its effective step time exceeds
+    ``knee * budget``. Every gate below must hold, so a pool in which every
+    instance sits past the knee produces an EMPTY plan (no thrash):
+
+      * the candidate still has a finite deadline, positive budget, and fewer
+        than `max_migrations` prior moves (KV churn cap);
+      * the best destination, with the migrated stream's context added, stays
+        at or below the knee for that stream;
+      * the predicted finish at the destination — including the KV-handoff
+        time `transfer_time(context_tokens)` plus a `margin` multiple of it
+        as hysteresis — beats the predicted finish at `src`.
+
+    Planned moves update the running tallies on both sides, so one planning
+    pass cannot dump every queued stream onto the same target, and draining
+    `src` below the knee stops further moves.
+
+    Returns ``[(candidate key, destination instance_id, transfer seconds)]``.
+    """
+    others = [ld for ld in loads if ld.instance_id != src.instance_id]
+    if not others:
+        return []
+    extra = {ld.instance_id: [0, 0.0] for ld in others}
+    moved_jobs, moved_ctx = 0, 0.0
+    plan: List[Tuple[int, int, float]] = []
+    for cand in sorted(candidates, key=lambda c: (c.deadline, c.key)):
+        if cand.migrations >= max_migrations:
+            continue
+        if not math.isfinite(cand.deadline) or cand.remaining_tokens <= 0:
+            continue
+        budget = (cand.deadline - now) / cand.remaining_tokens
+        if budget <= 0:
+            continue                # already doomed: a transfer can't save it
+        t_src = src.effective_step(-moved_jobs, -moved_ctx)
+        if t_src <= knee * budget:
+            continue                # src under the knee for this stream
+        xfer = transfer_time(cand.context_tokens) if transfer_time else 0.0
+        best: Optional[Tuple[DecodeLoad, float]] = None
+        for ld in others:
+            ej, ec = extra[ld.instance_id]
+            t_dst = ld.effective_step(1 + ej, cand.context_tokens + ec)
+            if t_dst > knee * budget:
+                continue            # destination would be saturated too
+            finish_dst = now + xfer + cand.remaining_tokens * t_dst
+            if best is None or finish_dst < best[1]:
+                best = (ld, finish_dst)
+        if best is None:
+            continue                # every destination past the knee: no move
+        finish_src = now + cand.remaining_tokens * t_src
+        if best[1] + margin * xfer >= finish_src:
+            continue                # benefit doesn't clear the handoff cost
+        plan.append((cand.key, best[0].instance_id, xfer))
+        extra[best[0].instance_id][0] += 1
+        extra[best[0].instance_id][1] += cand.context_tokens
+        moved_jobs += 1
+        moved_ctx += cand.context_tokens
+    return plan
 
 
 def make_dispatch(policy: Union[str, DispatchPolicy],

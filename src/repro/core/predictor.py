@@ -15,6 +15,14 @@ it starts from an offline prior and refits the polynomial from a sliding
 window of observed (tokens, latency) pairs, so a mis-calibrated prior — e.g.
 a predictor fitted on one hardware generation deployed on another in a
 heterogeneous pool — converges to the instance's true cost curve.
+
+`DecodeStepPredictor` is the decode-phase counterpart: the decode S-EDF
+scheduler (core/scheduler.py `DecodeSchedulerCore`) needs predicted per-token
+step times to compute TBT-deadline slack. The prior is analytic
+(`DecodeCostModel.step_time(batch, mean_context)` — decode is memory-bound, so
+the two-term weights+KV model is accurate), and observed per-token latencies
+calibrate a single multiplicative scale via an EMA, so slack estimates track
+the real hardware the way OnlineTTFTPredictor tracks prefill speed.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import json
 import threading
 import warnings
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -155,3 +163,38 @@ class OnlineTTFTPredictor(TTFTPredictor):
             self.coeffs = np.polyfit(xs, ys, deg)
         self.floor = float(max(ys.min() * 0.5, 0.0))
         self.n_refits += 1
+
+
+@dataclass
+class DecodeStepPredictor:
+    """Per-token decode step-time predictor (decode S-EDF's latency model).
+
+    Wraps an analytic prior ``(batch_size, mean_context) -> seconds``
+    (canonically `DecodeCostModel.step_time`) and calibrates it with a single
+    multiplicative scale learned from observed per-token latencies via an EMA:
+    decode latency is dominated by one memory-bandwidth term, so a scale on
+    the analytic curve absorbs most hardware mis-calibration — a full refit
+    like OnlineTTFTPredictor's polynomial is unnecessary here.
+
+    With no observations the predictor IS the prior (scale 1.0): the fluid
+    simulator uses it un-calibrated so scheduling decisions stay bit-aligned
+    with the cost model it is evaluated against; the threaded DecodeInstance
+    feeds `observe` from its own worker, one predictor per instance.
+    """
+    prior: Callable[[int, float], float]
+    ema_alpha: float = 0.1               # EMA weight of a new observation
+    scale: float = 1.0
+    n_observed: int = 0
+
+    def step_time(self, batch_size: int, mean_context: float) -> float:
+        return self.prior(batch_size, mean_context) * self.scale
+
+    def observe(self, batch_size: int, mean_context: float,
+                measured: float) -> None:
+        """Feed one measured per-token step latency for calibration."""
+        base = self.prior(batch_size, mean_context)
+        if base <= 0.0 or measured <= 0.0:
+            return
+        ratio = measured / base
+        self.scale += self.ema_alpha * (ratio - self.scale)
+        self.n_observed += 1

@@ -39,6 +39,9 @@ class Request:
     # decode phase (cluster-level end-to-end accounting; 0 = prefill-only)
     output_tokens: int = 0               # tokens to decode after prefill
     tbt_slo: float = float("inf")        # per-token TBT/TPOT SLO (seconds)
+    decode_start: Optional[float] = None  # first decode admission/enqueue time
+    decode_migrations: int = 0           # times this decode moved instances
+    decode_preemptions: int = 0          # times this decode was displaced
 
     # outcome
     first_token_time: Optional[float] = None
@@ -52,6 +55,16 @@ class Request:
     @property
     def deadline(self) -> float:
         return self.arrival + self.slo
+
+    @property
+    def decode_deadline(self) -> float:
+        """Decode-phase deadline: the TBT SLO is met iff the decode finishes
+        by first-join + output_tokens * tbt_slo (mean-TPOT basis), so that
+        instant IS the deadline the decode S-EDF scheduler ranks by. Infinite
+        until the decode is first enqueued or for prefill-only requests."""
+        if self.decode_start is None or self.output_tokens <= 0:
+            return float("inf")
+        return self.decode_start + self.output_tokens * self.tbt_slo
 
     @property
     def ttft(self) -> Optional[float]:

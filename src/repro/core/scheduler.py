@@ -1,24 +1,37 @@
 """Event-driven scheduling core (FlowPrefill §5.2) — pure policy logic.
 
 This module is deliberately free of threads and devices: the same functions
-drive BOTH the real serving runtime (repro/serving/prefill_instance.py) and the
-discrete-event simulator (repro/sim/) so the evaluated policy is the deployed
-policy.
+drive BOTH the real serving runtime (repro/serving/prefill_instance.py,
+repro/serving/decode_instance.py) and the discrete-event simulator (repro/sim/)
+so the evaluated policy is the deployed policy.
 
-Implements, paper-faithfully:
+Prefill side (paper-faithful):
   * S-EDF priority (Eq. 3):  priority = sgn(slack) / deadline,
     slack = deadline - now - TTFT_hat
   * SLO-aware batching (Algorithm 1)
   * The per-event scheduling round of Algorithm 2 (returns control commands;
     the Execution Pool carries them out)
-Ablation policies (Fig. 10): naive EDF and D-EDF; plus FCFS for the DistServe
-baseline.
+  * Ablation policies (Fig. 10): naive EDF and D-EDF; plus FCFS for the
+    DistServe baseline.
+
+Decode side (the paper's core idea — decoupling preemption granularity from
+scheduling frequency — generalized to the second serving phase):
+  * `DecodeSchedulerCore` ranks decode candidates by TBT-deadline slack
+    (`decode_sedf_priority`: slack = decode_deadline - now - remaining_tokens
+    * t_step_hat) and selects the continuous batch under a slot cap, optionally
+    displacing slack-rich residents at token boundaries (decode preemption).
+  * FCFS admission is kept as the baseline (and is what the paper's
+    deliberately-plain decode stage does).
+
+Policy-by-policy rationale and the figures that demonstrate each live in
+docs/SCHEDULING.md.
 """
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import (Callable, List, Optional, Sequence, Set, Tuple)
 
 import numpy as np
 
@@ -234,3 +247,100 @@ class SchedulerCore:
             return Decision(Action.SUBMIT, batch=batch, target=H,
                             preempt=preempt)
         return Decision(Action.RESUME, target=H, preempt=preempt)
+
+
+# ---------------------------------------------------------------------------
+# Decode-side scheduling: TBT-slack-aware batch admission (S-EDF for decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecodeEntry:
+    """One decode candidate as the decode scheduler sees it — owner-agnostic,
+    so the SAME ranking drives the fluid `DecodeSim` and the threaded
+    `DecodeInstance` (the repo's evaluated-is-deployed rule)."""
+    key: int                       # owner handle (request rid)
+    remaining_tokens: float        # output tokens still to decode
+    deadline: float                # Request.decode_deadline (inf = no TBT SLO)
+    order: int                     # admission order (FCFS / deterministic tie)
+
+
+def decode_sedf_priority(entry: DecodeEntry, now: float,
+                         t_step: float) -> float:
+    """S-EDF ported to decode (the paper's Eq. 3 with TBT semantics):
+
+        slack    = decode_deadline - now - remaining_tokens * t_step_hat
+        priority = sgn(slack) / decode_deadline
+
+    `t_step_hat` is the predicted per-token step time of the batch the entry
+    would decode in (DecodeCostModel.step_time via a DecodeStepPredictor).
+    Feasible-but-urgent decodes rank first; already-doomed ones (negative
+    slack) rank below every feasible candidate, exactly like prefill S-EDF —
+    a doomed stream must not displace one that can still meet its TBT SLO.
+    Requests without a TBT SLO have an infinite deadline: priority 0, between
+    the feasible (positive) and the doomed (negative)."""
+    if not math.isfinite(entry.deadline):
+        return 0.0
+    slack = entry.deadline - now - entry.remaining_tokens * t_step
+    return _sgn(slack) / max(entry.deadline, 1e-9)
+
+
+@dataclass
+class DecodeSchedulerCore:
+    """Batch-admission policy for one decode instance.
+
+    A decode instance runs a continuous batch of at most `max_batch` streams
+    (KV-memory slot cap; <= 0 means unbounded, which degenerates to the
+    paper's plain processor-sharing decode). On every join/leave event the
+    owner calls `select_batch` with ALL candidates (current residents plus
+    queued decodes); the returned batch is the new resident set.
+
+    * ``fcfs``  — admission in arrival order; residents are never displaced
+      (an earlier order always outranks a later one).
+    * ``s-edf`` — candidates ranked by `decode_sedf_priority`; with
+      ``preempt`` (the default) the top-`max_batch` BY PRIORITY become the
+      batch, so a near-deadline queued decode displaces a slack-rich resident
+      — the decode analogue of operator-level preemption, effective at the
+      next token boundary. With ``preempt=False`` residents keep their slots
+      and only free slots are filled by rank (admission-only S-EDF).
+    """
+    policy: str = "s-edf"              # "s-edf" | "fcfs"
+    preempt: bool = True
+
+    def priority(self, entry: DecodeEntry, now: float, t_step: float) -> float:
+        if self.policy == "fcfs":
+            return -float(entry.order)
+        return decode_sedf_priority(entry, now, t_step)
+
+    def rank(self, entries: Sequence[DecodeEntry], now: float,
+             t_step: float) -> List[DecodeEntry]:
+        """Descending priority; deterministic tie-break (deadline, order)."""
+        if self.policy == "fcfs":
+            return sorted(entries, key=lambda e: e.order)
+        return sorted(entries,
+                      key=lambda e: (-decode_sedf_priority(e, now, t_step),
+                                     e.deadline, e.order))
+
+    def select_batch(self, entries: Sequence[DecodeEntry],
+                     resident: Set[int], max_batch: int, now: float,
+                     t_step: float) -> Tuple[List[int], List[int]]:
+        """Pick the new resident batch from `entries` (residents + queued).
+
+        Returns ``(batch_keys, preempted_keys)``: the keys to run (in rank
+        order) and the previously-resident keys displaced by the decision.
+        ``max_batch <= 0`` = unbounded: everything is admitted, nothing is
+        ever preempted (the plain processor-sharing decode)."""
+        ranked = self.rank(entries, now, t_step)
+        if max_batch <= 0 or len(entries) <= max_batch:
+            return [e.key for e in ranked], []
+        if self.preempt:
+            batch = [e.key for e in ranked[:max_batch]]
+        else:
+            keep = [e for e in ranked if e.key in resident]
+            free = max_batch - len(keep)
+            fill = [e for e in ranked if e.key not in resident][:max(free, 0)]
+            batch = [e.key for e in self.rank(keep + fill, now, t_step)]
+        chosen = set(batch)
+        preempted = [e.key for e in ranked
+                     if e.key in resident and e.key not in chosen]
+        return batch, preempted

@@ -1,21 +1,44 @@
-"""Decode instance (FlowPrefill §4): reuses the framework's default execution
-logic with FCFS scheduling — decoding optimization is explicitly out of the
-paper's scope, so this instance is deliberately plain: a worker thread pops
-finished prefills FCFS and autoregressively decodes `decode_tokens` tokens per
-request using the handed-over KV cache (the PD-disaggregation KV transfer).
+"""Decode instance (FlowPrefill §4, extended): autoregressive decode of
+handed-over prefills (the PD-disaggregation KV transfer), with pluggable
+batch-admission scheduling.
+
+The paper's decode stage is deliberately plain FCFS; this instance keeps that
+as the default but can run the SAME decode S-EDF policy the cluster simulator
+evaluates (`repro.core.scheduler.DecodeSchedulerCore` — evaluated-is-deployed,
+see docs/SCHEDULING.md):
+
+  * ``policy="fcfs"``  — worker pops finished prefills in arrival order and
+    decodes `decode_tokens` tokens per request (the original behavior).
+  * ``policy="s-edf"`` — the worker picks the queued job with the highest
+    TBT-deadline-slack priority, and (with ``preempt``) re-checks the queue at
+    every TOKEN boundary: if a strictly-higher-priority job is waiting, the
+    running decode is suspended mid-stream — progress, KV cache, and next
+    token kept — and resumes later. This is the decode analogue of the
+    paper's operator-level prefill preemption: scheduling stays event-driven
+    while preemption granularity is one token.
+
+Slack needs a per-token latency estimate: a `DecodeStepPredictor` (analytic
+`DecodeCostModel.step_time` prior, EMA-calibrated from this instance's own
+measured TBT samples) or, without one, a plain EMA of observed TBT.
+
+Queued (not yet started) jobs can be handed to another instance by the Proxy
+(decode migration): `snapshot_load`/`snapshot_candidates` feed the shared
+cost-gated planner in `repro.core.dispatch`, `take` removes the chosen jobs.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import DecodeCandidate, DecodeLoad
+from repro.core.predictor import DecodeStepPredictor
 from repro.core.request import Request
+from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
 from repro.models.model import decode_step
 
 
@@ -24,57 +47,223 @@ class DecodeJob:
     request: Request
     cache: Dict                     # model.decode_step cache (B=1 slice)
     first_token: int
+    tokens_done: int = 0            # tokens already decoded (preemption state)
+    next_token: Optional[int] = None  # resume point after a suspension
+    enqueued: float = 0.0           # first submit (fixes the decode deadline)
+    order: int = 0                  # FCFS order / deterministic tiebreak
+    target: int = 0                 # tokens to decode for THIS job (set at
+                                    # submit: request.output_tokens, or the
+                                    # instance default) — deadlines and
+                                    # remaining-work MUST use the same count
 
 
 class DecodeInstance:
     def __init__(self, params, cfg, *, decode_tokens: int = 8,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 policy: str = "fcfs", preempt: Optional[bool] = None,
+                 step_predictor: Optional[DecodeStepPredictor] = None):
         self.params = params
         self.cfg = cfg
         self.decode_tokens = decode_tokens
         self.clock = clock
-        self._q: "queue.Queue[Optional[DecodeJob]]" = queue.Queue()
+        self.sched = DecodeSchedulerCore(
+            policy=policy, preempt=(policy == "s-edf") if preempt is None
+            else preempt)
+        self.step_pred = step_predictor
+        self._tbt_ema = 0.0             # fallback t_step estimate (no prior)
+        self._waiting: List[DecodeJob] = []
+        self._active: Optional[DecodeJob] = None
+        self._cv = threading.Condition()
+        self._order = 0
+        self._shutdown = False
         self.finished: List[Request] = []
         self.tbt_samples: List[float] = []
+        self.preemptions = 0
         self._step = jax.jit(
             lambda p, t, c: decode_step(p, cfg, t, c))
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="decode-instance")
         self._thread.start()
 
+    # ------------------------------------------------------------- frontend
     def submit(self, job: DecodeJob) -> None:
-        self._q.put(job)
+        """Enqueue a decode job (fresh handoff or a migrated-in stream)."""
+        req = job.request
+        if req.decode_start is None:
+            now = self.clock()
+            job.enqueued = now
+            req.decode_start = now      # fixes Request.decode_deadline
+            if req.output_tokens <= 0:
+                # the instance decodes exactly this many tokens; record it so
+                # TBT accounting (decode_deadline / tbt_met) is well-defined
+                req.output_tokens = self.decode_tokens
+        if job.target <= 0:
+            # deadline (output_tokens x tbt_slo) and remaining work must
+            # count the SAME tokens, or slack estimates skew by their ratio
+            job.target = req.output_tokens if req.output_tokens > 0 \
+                else self.decode_tokens
+        with self._cv:
+            job.order = self._order
+            self._order += 1
+            self._waiting.append(job)
+            self._cv.notify()
 
     def pending(self) -> int:
         """Decode jobs waiting in this instance's queue (the backlog signal
         decode-aware dispatch prices via DecodeCostModel.step_time)."""
-        return self._q.qsize()
+        with self._cv:
+            return len(self._waiting)
 
+    def idle(self) -> bool:
+        """No queued work and nothing decoding. NOTE: a job being migrated
+        is momentarily in NO instance, so cross-instance quiescence must be
+        checked under the owner's migration lock (Proxy.drain does)."""
+        with self._cv:
+            return not self._waiting and self._active is None
+
+    # ------------------------------------------------- migration (the Proxy)
+    def snapshot_load(self, instance_id: int,
+                      step_time: Callable[[int, float], float]) -> DecodeLoad:
+        """Planner view of this instance: the worker decodes one stream at a
+        time, so the slot cap is 1 and queueing shows up as the N/1
+        time-sharing factor in `DecodeLoad.effective_step`."""
+        with self._cv:
+            jobs = list(self._waiting)
+            active = self._active
+        ctx = sum(j.request.num_tokens + j.tokens_done for j in jobs)
+        if active is not None:
+            ctx += active.request.num_tokens + active.tokens_done
+        return DecodeLoad(instance_id=instance_id,
+                          n_resident=1 if active is not None else 0,
+                          n_waiting=len(jobs), ctx_tokens=float(ctx),
+                          max_batch=1, step_time=step_time)
+
+    def snapshot_candidates(self) -> List[DecodeCandidate]:
+        """Queued (never running) jobs as migration candidates."""
+        with self._cv:
+            jobs = list(self._waiting)
+        return [DecodeCandidate(
+            key=j.request.rid,
+            context_tokens=float(j.request.num_tokens + j.tokens_done),
+            remaining_tokens=float(j.target - j.tokens_done),
+            deadline=j.request.decode_deadline,
+            migrations=j.request.decode_migrations) for j in jobs]
+
+    def take(self, rids: Sequence[int]) -> List[DecodeJob]:
+        """Remove and return queued jobs by request id (migration departure).
+        Jobs that started decoding meanwhile are silently skipped — their KV
+        is hot on this instance."""
+        want = set(rids)
+        with self._cv:
+            taken = [j for j in self._waiting if j.request.rid in want]
+            self._waiting = [j for j in self._waiting
+                             if j.request.rid not in want]
+        return taken
+
+    # ------------------------------------------------------------ lifecycle
     def shutdown(self) -> None:
-        self._q.put(None)
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify()
         self._thread.join(10.0)
 
     def drain(self, timeout: float = 60.0) -> bool:
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
-            if self._q.qsize() == 0:
-                return True
+            with self._cv:
+                if not self._waiting and self._active is None:
+                    return True
             time.sleep(0.005)
         return False
 
+    # -------------------------------------------------------------- worker
+    def _t_step(self, ctx: float) -> float:
+        if self.step_pred is not None:
+            return self.step_pred.step_time(1, ctx)
+        return self._tbt_ema
+
+    def _entry(self, job: DecodeJob) -> DecodeEntry:
+        return DecodeEntry(key=job.request.rid,
+                           remaining_tokens=float(
+                               job.target - job.tokens_done),
+                           deadline=job.request.decode_deadline,
+                           order=job.order)
+
+    def _pick_next_locked(self, now: float) -> DecodeJob:
+        # caller holds _cv; _waiting is non-empty
+        if len(self._waiting) == 1:
+            return self._waiting.pop(0)
+        ctx = sum(j.request.num_tokens + j.tokens_done
+                  for j in self._waiting) / len(self._waiting)
+        ranked = self.sched.rank([self._entry(j) for j in self._waiting],
+                                 now, self._t_step(ctx))
+        best = ranked[0].key
+        for i, j in enumerate(self._waiting):
+            if j.request.rid == best:
+                return self._waiting.pop(i)
+        return self._waiting.pop(0)       # unreachable; defensive
+
+    def _should_yield(self, job: DecodeJob, now: float) -> bool:
+        """Token-boundary preemption check: a strictly-higher-priority queued
+        job displaces the running one."""
+        if not (self.sched.policy == "s-edf" and self.sched.preempt):
+            return False
+        with self._cv:
+            if not self._waiting:
+                return False
+            queued = list(self._waiting)
+        ctx = job.request.num_tokens + job.tokens_done
+        t_step = self._t_step(float(ctx))
+        own = self.sched.priority(self._entry(job), now, t_step)
+        best = max(self.sched.priority(self._entry(j), now, t_step)
+                   for j in queued)
+        return best > own
+
+    def _observe(self, job: DecodeJob, tbt: float) -> None:
+        self.tbt_samples.append(tbt)
+        a = 0.1 if self._tbt_ema > 0 else 1.0
+        self._tbt_ema += a * (tbt - self._tbt_ema)
+        if self.step_pred is not None:
+            self.step_pred.observe(
+                1, float(job.request.num_tokens + job.tokens_done), tbt)
+
     def _run(self) -> None:
         while True:
-            job = self._q.get()
-            if job is None:
-                return
-            tok = jnp.asarray([job.first_token], jnp.int32)
+            with self._cv:
+                while not self._waiting and not self._shutdown:
+                    self._cv.wait(0.1)
+                if not self._waiting:
+                    return                     # shutdown with an empty queue
+                job = self._pick_next_locked(self.clock())
+                self._active = job
+            start = job.first_token if job.next_token is None \
+                else job.next_token
+            tok = jnp.asarray([start], jnp.int32)
             cache = job.cache
             last = self.clock()
-            for _ in range(self.decode_tokens):
+            while job.tokens_done < job.target:
                 logits, cache = self._step(self.params, tok, cache)
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 now = self.clock()
-                self.tbt_samples.append(now - last)
+                self._observe(job, now - last)
                 last = now
-            job.request.finish_time = self.clock()
-            self.finished.append(job.request)
+                job.tokens_done += 1
+                job.cache = cache
+                job.next_token = int(tok[0])
+                if job.tokens_done < job.target and \
+                        self._should_yield(job, now):
+                    job.request.decode_preemptions += 1
+                    self.preemptions += 1
+                    with self._cv:
+                        self._waiting.append(job)
+                        self._active = None
+                        self._cv.notify()
+                    break
+            else:
+                now = self.clock()
+                job.request.finish_time = now
+                job.request.mean_tpot = (now - job.enqueued) \
+                    / max(job.target, 1)
+                self.finished.append(job.request)
+                with self._cv:
+                    self._active = None

@@ -14,6 +14,14 @@ DecodeCostModel) to derive downstream decode pressure for decode-aware
 dispatch from each decode instance's live backlog. When the wired predictor
 exposes `observe()` (OnlineTTFTPredictor), the proxy feeds measured prefill
 latencies back on every completion — online refit against real hardware.
+
+Decode migration (``decode_migration=True``, needs `decode_cost`): after each
+handoff the proxy re-plans with the SAME cost-gated planner the cluster
+simulator uses (`repro.core.dispatch.plan_decode_migrations`) and moves
+queued decode jobs off instances whose effective TBT pressure crossed the SLO
+knee — the KV handoff is priced by `DecodeCostModel.kv_transfer_time` even
+though the in-process transfer is a reference pass, so real decisions stay
+conservative and consistent with the simulated ones (docs/SCHEDULING.md).
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import (DispatchPolicy, InstanceLoad,
-                                 competing_tokens, make_dispatch)
+                                 competing_tokens, make_dispatch,
+                                 plan_decode_migrations)
 from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
@@ -41,7 +50,10 @@ class Proxy:
                  dispatch: Union[str, DispatchPolicy] = "round-robin",
                  predictor: Optional[TTFTPredictor] = None,
                  capacities: Optional[Sequence[float]] = None,
-                 decode_cost=None):
+                 decode_cost=None,
+                 decode_migration: bool = False,
+                 migration_knee: float = 0.85,
+                 max_migrations: int = 1):
         self.prefill_instances = prefill_instances
         self.decode_instances = decode_instances or []
         self.clock = clock
@@ -57,6 +69,12 @@ class Proxy:
         self.capacities = list(capacities) if capacities is not None \
             else [1.0] * len(prefill_instances)
         self.decode_cost = decode_cost        # analytic DecodeCostModel
+        self.decode_migration = decode_migration and decode_cost is not None \
+            and len(self.decode_instances) > 1
+        self.migration_knee = migration_knee
+        self.max_migrations = max_migrations
+        self.decode_migrations = 0            # streams moved cross-instance
+        self._migration_lock = threading.Lock()
         self._observe = getattr(self.dispatch.predictor, "observe", None)
         self._outstanding: List[dict] = [{} for _ in prefill_instances]
         self._load_lock = threading.Lock()
@@ -152,12 +170,59 @@ class Proxy:
             }
             dec.submit(DecodeJob(request=req, cache=cache,
                                  first_token=int(first[i])))
+        if self.decode_migration:
+            self.rebalance_decodes()
+
+    def rebalance_decodes(self) -> int:
+        """One pass of cost-gated decode migration (core/dispatch planner):
+        queued jobs leave instances whose effective TBT pressure crossed the
+        knee for the queue's streams. Returns the number of jobs moved.
+
+        One pass at a time (`_migration_lock` — `_prefill_done` fires from
+        every prefill instance's thread), and loads are re-snapshotted per
+        SOURCE so a later source sees the jobs an earlier one just moved —
+        matching ClusterSim's per-event `migrate_from` exactly; otherwise two
+        over-the-knee sources planning from one stale snapshot would both
+        dump onto the same destination and push it past the knee."""
+        if self.decode_cost is None or len(self.decode_instances) < 2:
+            return 0
+        moved = 0
+        with self._migration_lock:
+            for i, src in enumerate(self.decode_instances):
+                if src.pending() == 0:
+                    continue
+                now = self.clock()
+                loads = [dec.snapshot_load(j, self.decode_cost.step_time)
+                         for j, dec in enumerate(self.decode_instances)]
+                plan = plan_decode_migrations(
+                    loads[i], src.snapshot_candidates(), loads, now,
+                    transfer_time=self.decode_cost.kv_transfer_time,
+                    knee=self.migration_knee,
+                    max_migrations=self.max_migrations)
+                for rid, dst_id, _ in plan:
+                    for job in src.take([rid]):
+                        job.request.decode_migrations += 1
+                        self.decode_instances[dst_id].submit(job)
+                        moved += 1
+            self.decode_migrations += moved
+        return moved
 
     def drain(self, timeout: float = 120.0) -> bool:
         ok = all(inst.drain(timeout) for inst in self.prefill_instances)
-        for dec in self.decode_instances:
-            ok = dec.drain(timeout) and ok
-        return ok
+        if not self.decode_instances:
+            return ok
+        # ALL decode instances must be idle in one atomic observation under
+        # the migration lock: a migrating job is momentarily in NO instance
+        # (take -> submit inside rebalance_decodes), and per-instance
+        # sequential drains could each look empty while a job hops between
+        # already-checked instances.
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._migration_lock:
+                if all(dec.idle() for dec in self.decode_instances):
+                    return ok
+            time.sleep(0.005)
+        return False
 
     def shutdown(self) -> None:
         for inst in self.prefill_instances:
@@ -176,6 +241,9 @@ class Proxy:
             "slo_attainment": slo_attainment(self.requests),
             "by_task": attainment_by_task(self.requests),
             "ttft": ttft_stats(self.requests),
+            "decode_migrations": self.decode_migrations,
+            "decode_preemptions": sum(d.preemptions
+                                      for d in self.decode_instances),
             "scheduling_rounds": sum(i.scheduling_rounds
                                      for i in self.prefill_instances),
             "blocking_mean": float(np.mean(

@@ -1,13 +1,28 @@
 """Cluster-scale discrete-event simulator: N prefill instances + dispatch +
-a decode-phase cost model, on ONE shared event heap.
+decode instances with TBT-slack-aware scheduling, on ONE shared event heap.
 
 Each prefill instance is an `InstanceEngine` (the exact state machine behind
 `PrefillSim` — a 1-instance round-robin cluster reproduces the single-instance
 simulator event-for-event). Arrivals are routed by a pluggable dispatch policy
 from `repro.core.dispatch` — the same policy objects the real `Proxy` uses —
-and completed prefills hand over to decode instances modeled as
+and completed prefills hand over to decode instances (`DecodeSim`) modeled as
 continuous-batching processor sharing with TPOT/TBT SLO accounting
 (`DecodeCostModel`), so the cluster reports *end-to-end* goodput.
+
+The decode stage is schedulable, not just accounted (docs/SCHEDULING.md):
+
+  * With a KV slot cap (``decode_max_batch``) a decode instance admits at most
+    B streams; the rest queue. Admission is a `DecodeSchedulerCore` policy —
+    FCFS (the paper's deliberately-plain decode) or decode S-EDF, which ranks
+    by TBT-deadline slack using `DecodeCostModel.step_time` predictions via a
+    `DecodeStepPredictor`.
+  * Decode S-EDF preempts at token boundaries: a near-deadline queued stream
+    displaces the most slack-rich resident (progress kept, resumed later) —
+    the decode analogue of the paper's operator-level prefill preemption.
+  * Decode *migration* (``decode_migration=True``): queued decodes are moved
+    off an instance whose effective TBT pressure crossed the SLO knee, KV
+    handoff priced by `DecodeCostModel.kv_transfer_time`, planned by the
+    cost-gated `plan_decode_migrations` (shared with the real Proxy).
 """
 from __future__ import annotations
 
@@ -17,13 +32,18 @@ import math
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.dispatch import DispatchPolicy, InstanceLoad, make_dispatch
-from repro.core.predictor import OnlineTTFTPredictor, TTFTPredictor
+from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
+                                 InstanceLoad, make_dispatch,
+                                 plan_decode_migrations)
+from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
+                                  TTFTPredictor)
 from repro.core.request import Request
+from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
 from repro.sim.costmodel import (DecodeCostModel, HardwareSpec,
                                  PrefillCostModel, resolve_hardware)
-from repro.sim.simulator import (ARRIVAL, DECODE_DONE, InstanceEngine,
-                                 SimConfig, handle_event, reset_requests)
+from repro.sim.simulator import (ARRIVAL, DECODE_DONE, DECODE_JOIN,
+                                 InstanceEngine, SimConfig, handle_event,
+                                 reset_requests)
 
 # token count at which per-instance peak prefill throughput (the
 # capacity-weighted dispatch normalizer) is probed: long enough to saturate
@@ -34,26 +54,51 @@ CAPACITY_PROBE_TOKENS = 8192
 @dataclass
 class _DecodeJob:
     request: Request
-    joined: float
+    joined: float                         # first enqueue (fixes the deadline)
     done: float = 0.0                     # tokens decoded (fractional)
+    order: int = 0                        # admission order (FCFS / tiebreak)
+
+    @property
+    def context(self) -> float:
+        """Current context (prompt + decoded) — KV held / to hand off."""
+        return self.request.num_tokens + self.done
+
+    @property
+    def remaining(self) -> float:
+        return self.request.output_tokens - self.done
 
 
 class DecodeSim:
-    """One decode instance: a continuous batch in which all resident requests
+    """One decode instance: a continuous batch in which all RESIDENT requests
     advance together at 1/t_step(B, mean_context) tokens/sec (processor
     sharing). Batch changes re-rate everyone; stale completion events are
-    invalidated by an epoch counter, so events are O(joins + leaves)."""
+    invalidated by an epoch counter, so events are O(joins + leaves).
+
+    With ``max_batch > 0`` at most that many streams are resident (KV slot
+    cap); the rest wait in an admission queue ordered by the scheduler policy
+    (`DecodeSchedulerCore`): FCFS, or decode S-EDF with token-boundary
+    preemption. ``max_batch = 0`` (default) reproduces the original unbounded
+    processor-sharing decode event-for-event."""
 
     def __init__(self, cost: DecodeCostModel, heap: List, seq,
-                 instance_id: int = 0):
+                 instance_id: int = 0, *, max_batch: int = 0,
+                 scheduler: Optional[DecodeSchedulerCore] = None,
+                 step_predictor: Optional[DecodeStepPredictor] = None):
         self.cost = cost
         self.heap = heap
         self.seq = seq
         self.instance_id = instance_id
-        self.jobs: Dict[int, _DecodeJob] = {}
+        self.max_batch = max_batch
+        self.sched = scheduler or DecodeSchedulerCore(policy="fcfs")
+        self.step_pred = step_predictor \
+            or DecodeStepPredictor(prior=cost.step_time)
+        self.jobs: Dict[int, _DecodeJob] = {}      # resident batch
+        self.waiting: Dict[int, _DecodeJob] = {}   # queued for admission
         self.epoch = 0
         self.last_update = 0.0
         self.finished: List[Request] = []
+        self.preemptions = 0
+        self._order = itertools.count()
 
     def _step_time(self) -> float:
         if not self.jobs:
@@ -81,22 +126,85 @@ class DecodeSim:
         heapq.heappush(self.heap, (now + max(t_next, 0.0), next(self.seq),
                                    DECODE_DONE, (self, self.epoch)))
 
+    def _rebatch(self, now: float) -> None:
+        """Re-run batch admission after a membership change. Residents keep
+        insertion order (the float-sum order of `_step_time`); preempted
+        streams keep their progress and re-queue."""
+        everyone = {**self.jobs, **self.waiting}
+        if self.max_batch <= 0:
+            self.jobs = everyone          # unbounded: plain processor sharing
+            self.waiting = {}
+            return
+        if not everyone:
+            return
+        total = len(everyone)
+        b_eff = min(self.max_batch, total)
+        ctx = sum(j.context for j in everyone.values())
+        t_step = self.step_pred.step_time(b_eff, ctx / total)
+        entries = [DecodeEntry(key=rid, remaining_tokens=j.remaining,
+                               deadline=j.request.decode_deadline,
+                               order=j.order)
+                   for rid, j in everyone.items()]
+        batch, preempted = self.sched.select_batch(
+            entries, set(self.jobs), self.max_batch, now, t_step)
+        for rid in preempted:
+            self.preemptions += 1
+            everyone[rid].request.decode_preemptions += 1
+        self.jobs = {rid: everyone[rid] for rid in batch}
+        self.waiting = {rid: j for rid, j in everyone.items()
+                        if rid not in self.jobs}
+
+    # ------------------------------------------------------------- pressure
     def pressure(self, req: Request, now: float) -> float:
         """Predicted TBT pressure were `req`'s decode to join this instance
-        now: the analytic step time at batch B+1 over the candidate's TBT SLO
-        (1.0 = exactly at the SLO knee). Read-only — uses the jobs' last
+        now: the effective step time (`DecodeLoad.effective_step` — the ONE
+        slot-cap + queue-time-sharing formula, shared with the migration
+        planner) at population N+1 over the candidate's TBT SLO (1.0 =
+        exactly at the SLO knee). Read-only — uses the jobs' last
         materialized progress, which only perturbs the mean context."""
         if req.tbt_slo <= 0 or not math.isfinite(req.tbt_slo):
             return 0.0
-        b = len(self.jobs) + 1
-        ctx = sum(j.request.num_tokens + j.done for j in self.jobs.values()) \
-            + req.num_tokens
-        return self.cost.step_time(b, ctx / b) / req.tbt_slo
+        return self.snapshot_load().effective_step(
+            1, float(req.num_tokens)) / req.tbt_slo
 
+    @property
+    def backlog(self) -> int:
+        """Streams held (resident + queued) — the least-batch join signal."""
+        return len(self.jobs) + len(self.waiting)
+
+    def snapshot_load(self) -> DecodeLoad:
+        """Migration-planner view of this instance (core/dispatch.py)."""
+        ctx = sum(j.context for j in self.jobs.values()) \
+            + sum(j.context for j in self.waiting.values())
+        return DecodeLoad(instance_id=self.instance_id,
+                          n_resident=len(self.jobs),
+                          n_waiting=len(self.waiting),
+                          ctx_tokens=ctx, max_batch=self.max_batch,
+                          step_time=self.step_pred.step_time)
+
+    # --------------------------------------------------------------- events
     def join(self, req: Request, now: float) -> None:
+        if req.decode_start is None:
+            req.decode_start = now        # fixes Request.decode_deadline
+        job = _DecodeJob(request=req, joined=now, order=next(self._order))
+        self._admit(job, now)
+
+    def migrate_in(self, job: _DecodeJob, now: float) -> None:
+        """Arrival of a migrated stream (KV transfer done): re-enters
+        admission with its progress and ORIGINAL deadline intact."""
+        job.order = next(self._order)
+        self._admit(job, now)
+
+    def _admit(self, job: _DecodeJob, now: float) -> None:
         self._advance(now)
-        self.jobs[req.rid] = _DecodeJob(request=req, joined=now)
+        self.waiting[job.request.rid] = job
+        self._rebatch(now)
         self._reschedule(now)
+
+    def pop_waiting(self, rid: int) -> _DecodeJob:
+        """Remove a QUEUED stream (migration departure). Never touches the
+        resident batch, so no re-rate or reschedule is needed."""
+        return self.waiting.pop(rid)
 
     def on_decode_done(self, payload, now: float) -> List[Request]:
         _, epoch = payload
@@ -111,6 +219,7 @@ class DecodeSim:
             r.mean_tpot = (now - j.joined) / max(r.output_tokens, 1)
             del self.jobs[r.rid]
             self.finished.append(r)
+        self._rebatch(now)                # freed slots admit from the queue
         self._reschedule(now)
         return [j.request for j in done]
 
@@ -124,11 +233,20 @@ class ClusterResult:
     makespan: float
     dispatched: List[int]                 # requests routed per prefill instance
     decoded: int = 0
+    decode_preemptions: int = 0           # token-boundary batch displacements
+    migrations: int = 0                   # decode streams moved cross-instance
 
     @property
     def attainment(self) -> float:
         """TTFT-SLO attainment (comparable with single-instance SimResult)."""
         met = sum(1 for r in self.requests if r.slo_met)
+        return met / max(len(self.requests), 1)
+
+    @property
+    def tbt_attainment(self) -> float:
+        """Decode-phase TBT/TPOT-SLO attainment (prefill-only requests are
+        vacuously met, mirroring Request.tbt_met)."""
+        met = sum(1 for r in self.requests if r.tbt_met)
         return met / max(len(self.requests), 1)
 
     @property
@@ -166,6 +284,15 @@ class ClusterSim:
     decode i mod D, the disaggregated-pool wiring that makes downstream
     pressure attributable); otherwise they join the least-loaded decode batch
     as before. ``decode_hardware`` heterogenizes the decode pool the same way.
+
+    Decode scheduling (see module docstring / docs/SCHEDULING.md):
+    ``decode_max_batch`` caps each decode instance's continuous batch (KV
+    slots; 0 = unbounded processor sharing, the original model);
+    ``decode_policy`` picks the admission order ("fcfs" | "s-edf");
+    ``decode_preempt`` enables token-boundary displacement (defaults to True
+    exactly when the policy is "s-edf"); ``decode_migration`` turns on
+    cost-gated migration of queued decodes off over-the-knee instances
+    (``migration_knee``, ``max_migrations`` tune the gates).
     """
 
     def __init__(self, cost: PrefillCostModel, sim_cfg: SimConfig, *,
@@ -177,7 +304,13 @@ class ClusterSim:
                  hardware: Optional[Sequence[HardwareSpec]] = None,
                  decode_hardware: Optional[Sequence[HardwareSpec]] = None,
                  online_refit: bool = False,
-                 decode_affinity: Optional[bool] = None):
+                 decode_affinity: Optional[bool] = None,
+                 decode_max_batch: int = 0,
+                 decode_policy: str = "fcfs",
+                 decode_preempt: Optional[bool] = None,
+                 decode_migration: bool = False,
+                 migration_knee: float = 0.85,
+                 max_migrations: int = 1):
         if hardware is not None:
             hardware = [resolve_hardware(hw) for hw in hardware]
             num_instances = len(hardware)
@@ -225,6 +358,21 @@ class ClusterSim:
         if decode_affinity is None:
             decode_affinity = self.policy.needs_decode_pressure
         self.decode_affinity = decode_affinity and self.num_decode > 0
+        if decode_policy not in ("fcfs", "s-edf"):
+            raise ValueError(f"unknown decode_policy {decode_policy!r}; "
+                             f"known: ['fcfs', 's-edf']")
+        self.decode_max_batch = decode_max_batch
+        self.decode_policy = decode_policy
+        self.decode_preempt = (decode_policy == "s-edf") \
+            if decode_preempt is None else decode_preempt
+        if decode_migration and decode_max_batch <= 0:
+            # migration moves QUEUED decodes; an unbounded instance admits
+            # everything immediately, so the flag would be a silent no-op
+            raise ValueError("decode_migration requires a decode_max_batch "
+                             "slot cap (> 0): unbounded decode never queues")
+        self.decode_migration = decode_migration and self.num_decode > 1
+        self.migration_knee = migration_knee
+        self.max_migrations = max_migrations
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
@@ -238,8 +386,13 @@ class ClusterSim:
                                   predictors[i], heap, seq, instance_id=i,
                                   capacity=self.capacities[i])
                    for i in range(self.num_instances)]
-        decodes = [DecodeSim(self.decode_costs[i], heap, seq, instance_id=i)
+        decodes = [DecodeSim(self.decode_costs[i], heap, seq, instance_id=i,
+                             max_batch=self.decode_max_batch,
+                             scheduler=DecodeSchedulerCore(
+                                 policy=self.decode_policy,
+                                 preempt=self.decode_preempt))
                    for i in range(self.num_decode)]
+        n_migrations = 0
         reset_requests(requests)
         for r in requests:
             heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
@@ -248,6 +401,41 @@ class ClusterSim:
                                    capacity=e.capacity)
                       for e in engines]
         with_pressure = self.policy.needs_decode_pressure and decodes
+
+        # streams mid-KV-transfer, per destination: [count, ctx tokens].
+        # They are invisible to the destination's snapshot until DECODE_JOIN
+        # lands, so the planner must count them as queued there or two plans
+        # within one transfer window would over-dump the same destination
+        # past the knee (each stream's migration budget then strands it).
+        in_flight: Dict[int, List[float]] = {}
+
+        def migrate_from(src: DecodeSim, now: float) -> int:
+            """Plan + enact cost-gated migrations of `src`'s queued decodes
+            (KV handoff = a DECODE_JOIN event after the transfer delay)."""
+            if not src.waiting:
+                return 0
+            loads = [d.snapshot_load() for d in decodes]
+            for dst_id, (cnt, ctx) in in_flight.items():
+                loads[dst_id].n_waiting += int(cnt)
+                loads[dst_id].ctx_tokens += ctx
+            cands = [DecodeCandidate(key=rid, context_tokens=j.context,
+                                     remaining_tokens=j.remaining,
+                                     deadline=j.request.decode_deadline,
+                                     migrations=j.request.decode_migrations)
+                     for rid, j in src.waiting.items()]
+            plan = plan_decode_migrations(
+                loads[src.instance_id], cands, loads, now,
+                transfer_time=src.cost.kv_transfer_time,
+                knee=self.migration_knee, max_migrations=self.max_migrations)
+            for rid, dst_id, xfer in plan:
+                job = src.pop_waiting(rid)
+                job.request.decode_migrations += 1
+                fl = in_flight.setdefault(dst_id, [0, 0.0])
+                fl[0] += 1
+                fl[1] += job.context
+                heapq.heappush(heap, (now + xfer, next(seq), DECODE_JOIN,
+                                      (decodes[dst_id], job)))
+            return len(plan)
 
         now = 0.0
         while heap:
@@ -266,7 +454,17 @@ class ClusterSim:
                 engines[self.policy.select(req, loads, now)].on_arrival(
                     req, now)
             elif kind == DECODE_DONE:
-                payload[0].on_decode_done(payload, now)
+                dec: DecodeSim = payload[0]
+                if dec.on_decode_done(payload, now) and self.decode_migration:
+                    # freed slots elsewhere may now clear a queued stream's
+                    # cost gate; re-plan for THIS instance's remaining queue
+                    n_migrations += migrate_from(dec, now)
+            elif kind == DECODE_JOIN:
+                dec, job = payload
+                fl = in_flight[dec.instance_id]
+                fl[0] -= 1
+                fl[1] -= job.context
+                dec.migrate_in(job, now)
             else:
                 engine: InstanceEngine = payload[0]
                 for r in handle_event(kind, payload, now):
@@ -275,10 +473,13 @@ class ClusterSim:
                             # paired handoff: prefill i -> decode i mod D
                             dec = decodes[engine.instance_id % len(decodes)]
                         else:
-                            # join the decode instance with the smallest batch
-                            dec = min(decodes, key=lambda d: (len(d.jobs),
+                            # join the decode instance holding the fewest
+                            # streams (resident + queued)
+                            dec = min(decodes, key=lambda d: (d.backlog,
                                                               d.instance_id))
                         dec.join(r, now)
+                        if self.decode_migration:
+                            n_migrations += migrate_from(dec, now)
 
         return ClusterResult(
             requests=list(requests),
@@ -288,6 +489,8 @@ class ClusterSim:
             makespan=now,
             dispatched=[e.n_dispatched for e in engines],
             decoded=sum(len(d.finished) for d in decodes),
+            decode_preemptions=sum(d.preemptions for d in decodes),
+            migrations=n_migrations,
         )
 
 
@@ -299,11 +502,19 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      hw=None, hardware=None, decode_hardware=None,
                      online_refit: bool = False,
                      decode_affinity: Optional[bool] = None,
+                     decode_max_batch: int = 0,
+                     decode_policy: str = "fcfs",
+                     decode_preempt: Optional[bool] = None,
+                     decode_migration: bool = False,
+                     migration_knee: float = 0.85,
+                     max_migrations: int = 1,
                      **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
-    presets, same fresh-copy semantics, plus instance count, dispatch, and
+    presets, same fresh-copy semantics, plus instance count, dispatch,
     heterogeneous pool layout (`hardware` / `decode_hardware` accept
-    HardwareSpecs or names like "a800")."""
+    HardwareSpecs or names like "a800"), and decode scheduling
+    (`decode_max_batch` / `decode_policy` / `decode_preempt` /
+    `decode_migration`)."""
     import copy
 
     from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
@@ -316,5 +527,11 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      decode_instances=decode_instances,
                      hardware=hardware, decode_hardware=decode_hardware,
                      online_refit=online_refit,
-                     decode_affinity=decode_affinity)
+                     decode_affinity=decode_affinity,
+                     decode_max_batch=decode_max_batch,
+                     decode_policy=decode_policy,
+                     decode_preempt=decode_preempt,
+                     decode_migration=decode_migration,
+                     migration_knee=migration_knee,
+                     max_migrations=max_migrations)
     return sim.run([copy.copy(r) for r in requests])

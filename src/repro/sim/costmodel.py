@@ -32,6 +32,10 @@ class HardwareSpec:
     sat_tokens: int = 600              # tokens to reach ~50% of eff_c
                                        # (kernel tails / wave quantization:
                                        # small batches underutilize — Fig. 4a)
+    kv_link_bw: float = 50e9           # inter-instance KV transfer bytes/s
+                                       # (PCIe4 x16-class; prices decode
+                                       # migration and PD handoff)
+    kv_link_latency: float = 2e-3      # per-transfer setup latency (seconds)
 
     def eff_c_at(self, tokens: float) -> float:
         return self.eff_c * tokens / (tokens + self.sat_tokens)
@@ -290,3 +294,12 @@ class DecodeCostModel:
         t = by / self.m.tp / (self.hw.hbm_bw * self.hw.eff_b)
         return t + self.m.num_layers * len(self.m.op_names) \
             * self.hw.launch_overhead
+
+    def kv_transfer_time(self, context_tokens: float) -> float:
+        """Seconds to hand a stream's KV cache to another instance over the
+        inter-instance link — the price of a decode migration (and of the PD
+        prefill->decode handoff, which the fluid sim folds into step times).
+        KV bytes scale with the context; the fixed setup latency keeps tiny
+        transfers from looking free."""
+        by = max(context_tokens, 0.0) * self.kv_bytes_per_token
+        return self.hw.kv_link_latency + by / self.hw.kv_link_bw

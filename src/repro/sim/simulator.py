@@ -34,7 +34,7 @@ from repro.core.scheduler import Action, SchedulerCore
 from repro.sim.costmodel import PrefillCostModel
 
 # event kinds (shared heap: (time, seq, kind, payload))
-ARRIVAL, COMPLETION, PREEMPT_AT, DECODE_DONE = 0, 1, 2, 3
+ARRIVAL, COMPLETION, PREEMPT_AT, DECODE_DONE, DECODE_JOIN = 0, 1, 2, 3, 4
 
 
 @dataclass
@@ -361,6 +361,9 @@ def reset_requests(requests: Sequence[Request]) -> None:
         r.ops_done = 0
         r.ops_total = 0
         r.batch_tokens = r.num_tokens
+        r.decode_start = None
+        r.decode_migrations = 0
+        r.decode_preemptions = 0
 
 
 class PrefillSim:

@@ -64,6 +64,10 @@ class TraceConfig:
     output_mean: float = 0.0          # mean output length (lognormal)
     output_std: float = 0.0           # 0 -> defaults to output_mean
     tbt_slo: float = 0.1              # per-token TBT SLO when decoding
+    # heterogeneous TBT SLOs per task type (e.g. tight for interactive text,
+    # loose for search/file agents) — the workload where slack-aware decode
+    # admission wins; unlisted tasks fall back to `tbt_slo`
+    tbt_slo_by_task: Optional[Dict[str, float]] = None
 
 
 def generate(cfg: TraceConfig) -> List[Request]:
@@ -93,13 +97,14 @@ def generate(cfg: TraceConfig) -> List[Request]:
             mu, sigma = _lognormal_params(cfg.output_mean,
                                           cfg.output_std or cfg.output_mean)
             out_tokens = int(np.clip(int(rng.lognormal(mu, sigma)), 1, 8192))
+        tbt = (cfg.tbt_slo_by_task or {}).get(task, cfg.tbt_slo)
         out.append(Request(
             num_tokens=sample_length(task, rng, max_len=cfg.max_len),
             slo=slos[task] * cfg.slo_scale,
             arrival=t,
             task_type=task,
             output_tokens=out_tokens,
-            tbt_slo=cfg.tbt_slo if out_tokens else float("inf"),
+            tbt_slo=tbt if out_tokens else float("inf"),
         ))
     return out
 

@@ -7,7 +7,7 @@ import json
 import pytest
 
 from benchmarks import run as bench_run
-from benchmarks.compare import is_gated, main as compare_main
+from benchmarks.compare import is_gated, is_gated_lower, main as compare_main
 
 
 def write_bench(path, bench, metrics):
@@ -78,9 +78,47 @@ def test_gated_metric_selection():
     assert is_gated("fig18/llama3-8b/poisson/least-loaded/goodput_req_s")
     assert is_gated("fig19/llama3-8b/a800-a100/decode-aware_vs_jsq")
     assert is_gated("fig19/llama3-8b/a800-tpu/capacity-weighted/fast_share")
+    assert is_gated("fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs")
     assert not is_gated("fig9/_elapsed_s")
     assert not is_gated("fig9/_error")
+    # rel_err metrics are gated in the LOWER-is-better family, not this one
     assert not is_gated("fig19/llama3-8b/refit/refit_rel_err")
+    assert is_gated_lower("fig19/llama3-8b/refit/refit_rel_err")
+    assert not is_gated_lower("fig9/_elapsed_s")
+    assert not is_gated_lower("fig18/llama3-8b/poisson/goodput_req_s")
+
+
+def test_gate_trips_on_rel_err_rise(dirs):
+    """Lower-is-better gating: a rel_err metric RISING beyond tolerance must
+    exit nonzero, while a drop (improvement) of any size passes."""
+    base, fresh = dirs
+    err_base = dict(BASE, **{"fig9/refit/refit_rel_err": 0.013})
+    write_bench(base, "fig9", err_base)
+    # +50% error rise (beyond +10% tolerance) trips
+    worse = dict(err_base, **{"fig9/refit/refit_rel_err": 0.0195})
+    write_bench(fresh, "fig9", worse)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # big improvement passes (no lower bound on an error metric)
+    better = dict(err_base, **{"fig9/refit/refit_rel_err": 0.0001})
+    write_bench(fresh, "fig9", better)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    # +5% wobble inside tolerance passes
+    wobble = dict(err_base, **{"fig9/refit/refit_rel_err": 0.01365})
+    write_bench(fresh, "fig9", wobble)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    # gated lower metric silently dropped from the fresh run trips too
+    missing = {k: v for k, v in err_base.items() if "rel_err" not in k}
+    write_bench(fresh, "fig9", missing)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # a 0.0 baseline (perfect error score) must not disable the gate: any
+    # positive fresh value is a regression, staying at 0.0 passes
+    zero_base = dict(BASE, **{"fig9/refit/refit_rel_err": 0.0})
+    write_bench(base, "fig9", zero_base)
+    write_bench(fresh, "fig9",
+                dict(zero_base, **{"fig9/refit/refit_rel_err": 0.37}))
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    write_bench(fresh, "fig9", zero_base)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
 def test_run_only_rejects_unknown_figure_names(capsys):
@@ -97,7 +135,14 @@ def test_committed_baselines_are_wellformed():
     from benchmarks.compare import load_dir
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
-    assert {"fig9", "fig18", "fig19"} <= set(baselines)
+    assert {"fig9", "fig18", "fig19", "fig20"} <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
-    assert len(gated) >= 20
+    assert len(gated) >= 25
+    # the decode-scheduling acceptance ratio is committed and actually holds
+    assert baselines["fig20"]["fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs"] \
+        >= 1.15
+    # at least one lower-is-better (error) metric is gated too
+    lower = [m for metrics in baselines.values() for m in metrics
+             if is_gated_lower(m)]
+    assert lower

@@ -1,0 +1,53 @@
+"""The committed docs tree must stay navigable: the CI link checker
+(tools/check_links.py) passes on README.md + docs/, and trips on a broken
+relative link (so the lint step actually guards something)."""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_links  # noqa: E402
+
+
+def test_committed_docs_have_no_broken_links(capsys):
+    assert check_links.main([]) == 0
+    out = capsys.readouterr().out
+    assert "all relative links resolve" in out
+
+
+def test_docs_tree_exists_and_is_cross_linked():
+    docs = os.path.join(REPO, "docs")
+    for name in ("ARCHITECTURE.md", "SCHEDULING.md", "BENCHMARKS.md"):
+        assert os.path.exists(os.path.join(docs, name)), name
+    readme = open(os.path.join(REPO, "README.md")).read()
+    for name in ("docs/ARCHITECTURE.md", "docs/SCHEDULING.md",
+                 "docs/BENCHMARKS.md"):
+        assert name in readme, f"README must link {name}"
+
+
+def test_checker_trips_on_broken_link(tmp_path):
+    md = tmp_path / "broken.md"
+    md.write_text("see [missing](does/not/exist.md) and "
+                  "[ok](https://example.com) and [anchor](#here)\n")
+    # the tmp file lives outside the repo root, so point REPO at tmp_path to
+    # make its links verifiable
+    old = check_links.REPO
+    check_links.REPO = str(tmp_path)
+    try:
+        assert check_links.main([str(md)]) == 1
+        md.write_text("only [ok](https://example.com) here\n")
+        assert check_links.main([str(md)]) == 0
+    finally:
+        check_links.REPO = old
+
+
+def test_checker_skips_fenced_code_blocks(tmp_path):
+    md = tmp_path / "fenced.md"
+    md.write_text("```\n[not a link](nope.md)\n```\n")
+    old = check_links.REPO
+    check_links.REPO = str(tmp_path)
+    try:
+        assert check_links.main([str(md)]) == 0
+    finally:
+        check_links.REPO = old

@@ -1,0 +1,96 @@
+"""CI docs link checker: fail on broken RELATIVE links in docs/ and README.
+
+Scans markdown files for inline links/images ``[text](target)`` and verifies
+every relative target resolves to an existing file or directory in the repo.
+Skipped targets (unverifiable offline): absolute URLs (``scheme://``),
+``mailto:``, pure in-page anchors (``#...``), and paths that resolve OUTSIDE
+the repository root (e.g. the README's ``../../actions/...`` CI badge, which
+is a GitHub web path, not a file). A ``path#anchor`` target is checked for
+the file part only.
+
+    python tools/check_links.py [files/dirs ...]   # default: README.md docs/
+
+Exit 0 = all resolvable; exit 1 = broken links, each printed as
+``file:line: target``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline markdown link/image: [text](target) / ![alt](target); target ends at
+# the first unnested ')' — good enough for the plain paths used in this repo
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(path: str) -> Iterator[Tuple[int, str]]:
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(path: str) -> List[str]:
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in iter_links(path):
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.realpath(os.path.join(base, rel))
+        if not (resolved == REPO or resolved.startswith(REPO + os.sep)):
+            continue                       # outside the repo: unverifiable
+        if not os.path.exists(resolved):
+            broken.append(f"{os.path.relpath(path, REPO)}:{lineno}: {target}")
+    return broken
+
+
+def collect(paths: List[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        elif os.path.exists(p):
+            out.append(p)
+        else:
+            print(f"error: no such file or directory: {p}", file=sys.stderr)
+            raise SystemExit(2)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) on broken relative markdown links")
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(REPO, "README.md"),
+                             os.path.join(REPO, "docs")])
+    args = ap.parse_args(argv)
+    files = collect(args.paths)
+    broken = [b for f in files for b in check_file(f)]
+    if broken:
+        print(f"BROKEN LINKS ({len(broken)}):", file=sys.stderr)
+        for b in broken:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print(f"link check: {len(files)} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
