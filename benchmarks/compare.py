@@ -35,8 +35,9 @@ import os
 import sys
 from typing import Dict, List, Tuple
 
-# substrings of metric names that are gated, higher is better
-GATED = ("goodput", "attainment", "_vs_", "share")
+# substrings of metric names that are gated, higher is better ("speedup"
+# covers the fig21 measured decode-batching scaling curve)
+GATED = ("goodput", "attainment", "_vs_", "share", "speedup")
 # substrings of metric names that are gated, LOWER is better (error families)
 GATED_LOWER = ("rel_err",)
 # metric-name substrings never gated (runner-speed or error bookkeeping)

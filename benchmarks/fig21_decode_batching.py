@@ -1,0 +1,99 @@
+"""Fig. 21 (decode-batching extension) — measured decode step-time curve of
+the REAL continuous-batching runtime: one jitted `decode_step_ragged` over
+all resident streams, paged KV (`PagedKVCache.gather_batch`/`write_tokens`).
+
+Decode is bandwidth-bound: weights are streamed once per step regardless of
+how many streams share it, so tokens/s should scale near-linearly with the
+resident batch B — the behavior the simulator's `DecodeSim`/`DecodeCostModel`
+has assumed since PR 3 and the runtime only now delivers (the old
+`DecodeInstance` decoded one stream at a time).
+
+Panels:
+
+  a) tokens/s vs B on the bench config (tiny llama3-8b derivative on CPU —
+     the same reduced config the serving tests drive): per-step wall time is
+     measured by `profile_step_times` from the real jitted step, after jit
+     warmup. Acceptance (CI-gated): B=8 >= 3x B=1 tokens/s.
+  b) sim-vs-runtime step-time agreement: the measured samples seed a
+     `MeasuredStepTime` surface (`DecodeStepPredictor.from_profile`) — the
+     profiled prior the TBT-slack scheduler prices loads with. Gated metric:
+     the surface's mean relative error over the measured samples (the
+     runtime's deployed latency model must track the hardware it runs on).
+     The analytic `DecodeCostModel` prior's error after one-scale calibration
+     is reported alongside (ungated — CPU is not the A800 it models).
+
+Wall-clock-derived metric convention (docs/BENCHMARKS.md): the committed
+baselines for this figure are CONSERVATIVE floors/ceilings (acceptance
+thresholds), not the measured values of one machine, so the gate tracks the
+claim (>= 3x scaling, sane fit) instead of runner-speed noise.
+"""
+import dataclasses
+
+from repro.core.predictor import MeasuredStepTime
+
+BATCH_SIZES = (1, 2, 4, 8)
+CTXS = (128, 320)        # two context points per B: 8 samples for the
+                         # 3-parameter MeasuredStepTime fit (one point per B
+                         # leaves the fit hostage to a single noisy median)
+CTX = CTXS[0]            # the tokens/s scaling panel's operating point
+DECODE_TOKENS = 24
+WARMUP = 4
+
+
+def _bench_model():
+    import jax
+
+    from repro.configs.base import get_tiny_config
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    return init_params(cfg, jax.random.PRNGKey(0)), cfg
+
+
+def run(model="llama3-8b"):
+    from repro.serving.decode_instance import profile_step_times
+    from repro.sim.costmodel import (A800, DecodeCostModel, ModelSpec)
+
+    params, cfg = _bench_model()
+    by_ctx = {c: profile_step_times(params, cfg, batch_sizes=BATCH_SIZES,
+                                    ctx=c, decode_tokens=DECODE_TOKENS,
+                                    warmup=WARMUP, kv_block_size=128)
+              for c in CTXS}
+    samples = [s for c in CTXS for s in by_ctx[c]]
+    rows = []
+    tps = {}
+    for b, mean_ctx, t_step in by_ctx[CTX]:
+        tps[b] = b / t_step
+        rows.append((f"fig21/{model}/tokens_per_s_b{b}",
+                     round(tps[b], 1),
+                     f"B={b} ctx~{mean_ctx:.0f}: {t_step * 1e3:.2f} ms/step "
+                     f"(measured, runner-speed dependent — not gated)"))
+    b_lo, b_hi = BATCH_SIZES[0], BATCH_SIZES[-1]
+    rows.append((f"fig21/{model}/b{b_hi}_vs_b{b_lo}_speedup",
+                 round(tps[b_hi] / tps[b_lo], 2),
+                 f"tokens/s scaling of the batched jitted step "
+                 f"(acceptance: >= 3.0; committed baseline is the "
+                 f"tolerance-compensated conservative threshold)"))
+
+    # measured prior fit quality (the deployed latency model) — gated
+    fit = MeasuredStepTime.fit(samples)
+    rows.append((f"fig21/{model}/measured_prior_rel_err",
+                 round(fit.rel_err(samples), 4),
+                 "mean |fit - measured| / measured of the profiled "
+                 "step_time(B, ctx) surface over the sweep (gated: a rise "
+                 "means the runtime's latency model stopped tracking the "
+                 "real step)"))
+
+    # analytic prior after one-scale calibration at B=1 — informational
+    spec = ModelSpec.from_config(cfg)
+    analytic = DecodeCostModel(spec, A800)
+    scale = samples[0][2] / analytic.step_time(1, samples[0][1])
+    errs = [abs(scale * analytic.step_time(b, c) - t) / t
+            for b, c, t in samples]
+    rows.append((f"fig21/{model}/analytic_prior/_real_error",
+                 round(sum(errs) / len(errs), 3),
+                 "analytic DecodeCostModel (A800 spec) vs CPU measurements "
+                 "after one-scale calibration at B=1 — why the measured "
+                 "profile replaces the analytic seed (not gated)"))
+    return rows

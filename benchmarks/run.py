@@ -14,7 +14,8 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig10_policies, fig11_budget, fig12_blocking,
                         fig13_predictor, fig14_single_slo,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
-                        fig18_cluster, fig19_hetero, fig20_decode, roofline)
+                        fig18_cluster, fig19_hetero, fig20_decode,
+                        fig21_decode_batching, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -31,6 +32,7 @@ MODULES = [
     ("fig18", fig18_cluster),
     ("fig19", fig19_hetero),
     ("fig20", fig20_decode),
+    ("fig21", fig21_decode_batching),
     ("roofline", roofline),
 ]
 

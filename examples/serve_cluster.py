@@ -92,10 +92,14 @@ def run_real(args):
         params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
         max_seq=max_seq, executor=ex) for _ in range(args.instances)]
     # the decode flags apply here too: --decode-sched picks the instances'
-    # admission policy, --decode-migration needs >= 2 decode instances
+    # admission policy, --decode-max-batch the continuous-batching slot cap
+    # (the REAL batched jitted step, paged KV), --decode-migration needs
+    # >= 2 decode instances
     n_dec = 2 if args.decode_migration else 1
     decs = [DecodeInstance(params, cfg, decode_tokens=2,
-                           policy=args.decode_sched) for _ in range(n_dec)]
+                           policy=args.decode_sched,
+                           decode_max_batch=max(args.decode_max_batch, 1))
+            for _ in range(n_dec)]
     # wire the hetero-pool signals so capacity-weighted / decode-aware run
     # against real measurements, not silent 1.0/0.0 defaults: capacity from
     # the measured profile (identical executors -> identical capacities),
@@ -150,10 +154,10 @@ def main():
                     help="decode batch-admission policy (s-edf = TBT-slack-"
                     "aware with token-boundary preemption)")
     ap.add_argument("--decode-max-batch", type=int, default=0,
-                    help="sim mode: decode KV slot cap per instance (0 = "
-                    "unbounded processor sharing; scheduling needs a cap to "
-                    "matter). The real DecodeInstance decodes one stream at "
-                    "a time, i.e. an inherent cap of 1")
+                    help="decode KV slot cap per instance. Sim mode: 0 = "
+                    "unbounded processor sharing (scheduling needs a cap to "
+                    "matter). Real mode: the continuous-batching slot count "
+                    "of the batched jitted decode step (min 1)")
     ap.add_argument("--decode-migration", action="store_true",
                     help="cost-gated migration of queued decodes off "
                     "instances past the TBT knee")

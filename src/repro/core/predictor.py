@@ -166,15 +166,83 @@ class OnlineTTFTPredictor(TTFTPredictor):
 
 
 @dataclass
+class MeasuredStepTime:
+    """Measured decode step-time surface — the PROFILED prior for
+    `DecodeStepPredictor`, replacing the purely analytic seed.
+
+    Decode latency has the two-term memory-bound structure of
+    `DecodeCostModel.step_time` (a fixed weight-stream + per-launch cost,
+    plus a per-stream KV-stream term), so the surface
+
+        t(B, ctx) = c0 + c1 * B + c2 * B * ctx
+
+    fitted by least squares over profiled ``(batch, mean_context, seconds)``
+    samples (`repro.serving.decode_instance.profile_step_times` measures them
+    from the real jitted batched step) captures the deployed hardware's
+    actual curve — including host/dispatch overheads the analytic model can
+    only approximate. Negative slope terms (a noisy profile can fit c1/c2
+    below zero) are clamped to zero AT FIT TIME with the intercept refit, so
+    the surface stays monotone non-decreasing in batch and context — a
+    latency model claiming bigger batches are faster would invert every
+    S-EDF slack ranking built on it.
+    """
+    c0: float
+    c1: float
+    c2: float
+    n_samples: int = 0
+    floor: float = 1e-9
+
+    @classmethod
+    def fit(cls, samples: Sequence[Tuple[int, float, float]]
+            ) -> "MeasuredStepTime":
+        """samples: [(batch_size, mean_context, seconds_per_step)]."""
+        pts = [(float(b), float(c), float(t)) for b, c, t in samples]
+        if not pts:
+            raise ValueError("MeasuredStepTime.fit needs >= 1 sample")
+        y = np.array([t for _, _, t in pts])
+        cols = [np.ones(len(pts)),
+                np.array([b for b, _, _ in pts]),
+                np.array([b * c for b, c, _ in pts])]
+        keep = [0, 1, 2]
+        coef = np.zeros(3)
+        while True:
+            A = np.stack([cols[i] for i in keep], axis=1)
+            sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+            coef = np.zeros(3)
+            coef[keep] = sol
+            # clamp negative slope terms and refit the rest (active-set
+            # style): monotone non-decreasing in B and ctx by construction
+            neg = [i for i in keep if i != 0 and coef[i] < 0.0]
+            if not neg:
+                break
+            keep = [i for i in keep if i not in neg]
+        floor = float(max(y.min() * 0.25, 1e-9))
+        return cls(c0=float(coef[0]), c1=float(coef[1]), c2=float(coef[2]),
+                   n_samples=len(pts), floor=floor)
+
+    def __call__(self, batch_size: int, mean_context: float) -> float:
+        t = self.c0 + self.c1 * batch_size \
+            + self.c2 * batch_size * max(mean_context, 0.0)
+        return max(t, self.floor)
+
+    def rel_err(self, samples: Sequence[Tuple[int, float, float]]) -> float:
+        """Mean relative error of the fitted surface over `samples` (fit
+        quality / holdout agreement — the fig21 gate metric)."""
+        errs = [abs(self(b, c) - t) / max(t, 1e-12) for b, c, t in samples]
+        return float(np.mean(errs)) if errs else 0.0
+
+
+@dataclass
 class DecodeStepPredictor:
     """Per-token decode step-time predictor (decode S-EDF's latency model).
 
-    Wraps an analytic prior ``(batch_size, mean_context) -> seconds``
-    (canonically `DecodeCostModel.step_time`) and calibrates it with a single
-    multiplicative scale learned from observed per-token latencies via an EMA:
-    decode latency is dominated by one memory-bandwidth term, so a scale on
-    the analytic curve absorbs most hardware mis-calibration — a full refit
-    like OnlineTTFTPredictor's polynomial is unnecessary here.
+    Wraps a prior ``(batch_size, mean_context) -> seconds`` — the analytic
+    `DecodeCostModel.step_time`, or a `MeasuredStepTime` surface profiled
+    from the real batched step (`from_profile`) — and calibrates it with a
+    single multiplicative scale learned from observed per-token latencies via
+    an EMA: decode latency is dominated by one memory-bandwidth term, so a
+    scale on the prior curve absorbs most hardware mis-calibration — a full
+    refit like OnlineTTFTPredictor's polynomial is unnecessary here.
 
     With no observations the predictor IS the prior (scale 1.0): the fluid
     simulator uses it un-calibrated so scheduling decisions stay bit-aligned
@@ -185,6 +253,15 @@ class DecodeStepPredictor:
     ema_alpha: float = 0.1               # EMA weight of a new observation
     scale: float = 1.0
     n_observed: int = 0
+
+    @classmethod
+    def from_profile(cls, samples: Sequence[Tuple[int, float, float]],
+                     **kwargs) -> "DecodeStepPredictor":
+        """Build a predictor whose prior is a `MeasuredStepTime` surface
+        fitted to profiled ``(batch, mean_context, seconds)`` samples from
+        the real jitted step (see
+        `repro.serving.decode_instance.profile_step_times`)."""
+        return cls(prior=MeasuredStepTime.fit(samples), **kwargs)
 
     def step_time(self, batch_size: int, mean_context: float) -> float:
         return self.prior(batch_size, mean_context) * self.scale

@@ -24,13 +24,14 @@ DEFAULT_BLOCK_K = 512
 _NEG_INF = -1e30
 
 
-def _decode_kernel(scalars_ref,           # SMEM: [kv_len]
+def _decode_kernel(scalars_ref,           # SMEM: per-row [kv_len] * B
                    q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref,
                    *, block_k: int, scale: float):
+    ib = pl.program_id(0)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
-    kv_len = scalars_ref[0]
+    kv_len = scalars_ref[ib]
 
     @pl.when(ik == 0)
     def _init():
@@ -79,7 +80,12 @@ def flash_decode_attention(
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
 ) -> jax.Array:
-    """Flash-decode. Returns (B, H, hd)."""
+    """Flash-decode. Returns (B, H, hd).
+
+    ``kv_len`` is either a scalar (every row attends to the same prefix — the
+    original contract) or a (B,)-shaped array of per-row valid lengths, the
+    ragged continuous-batching case: each resident stream masks its own KV
+    tail, so one kernel launch serves the whole batch."""
     B, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
     assert H % K == 0
@@ -99,7 +105,9 @@ def flash_decode_attention(
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
     nk = (T + t_pad) // block_k
 
-    scalars = jnp.array([kv_len], dtype=jnp.int32)
+    # one kv_len per batch row (a scalar broadcasts to every row)
+    scalars = jnp.broadcast_to(
+        jnp.asarray(kv_len, dtype=jnp.int32).reshape(-1), (B,))
     kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

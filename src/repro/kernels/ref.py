@@ -25,16 +25,19 @@ def chunked_prefill_attention_ref(
     qg = q.reshape(B, Sq, K, H // K, hd).astype(jnp.float32)
     scores = jnp.einsum("bskqh,btkh->bkqst", qg, k.astype(jnp.float32))
     scores = scores / math.sqrt(hd)
-    q_pos = jnp.arange(Sq)[:, None] + q_offset
-    k_pos = jnp.arange(T)[None, :]
-    mask = jnp.ones((Sq, T), dtype=bool)
+    # q_offset / kv_len may be per-row (B,) arrays (ragged decode batches);
+    # scalars broadcast over the leading batch axis exactly as before
+    q_pos = jnp.arange(Sq)[:, None] \
+        + jnp.asarray(q_offset).reshape(-1, 1, 1)          # (B or 1, Sq, 1)
+    k_pos = jnp.arange(T)[None, None, :]                   # (1, 1, T)
+    mask = jnp.ones((1, Sq, T), dtype=bool)
     if causal:
-        mask &= k_pos <= q_pos
+        mask = mask & (k_pos <= q_pos)
     if local_window:
-        mask &= k_pos > q_pos - local_window
+        mask = mask & (k_pos > q_pos - local_window)
     if kv_len is not None:
-        mask &= k_pos < kv_len
-    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        mask = mask & (k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1))
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
     # rows that are fully masked produce 0 (matches kernel's guarded division)
     m = jnp.max(scores, axis=-1, keepdims=True)
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)

@@ -40,6 +40,10 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=4096)
     ap.add_argument("--decode-tokens", type=int, default=4)
+    ap.add_argument("--decode-max-batch", type=int, default=4,
+                    help="continuous-batching decode slot cap (batched "
+                    "jitted step + paged KV; families without a dense "
+                    "per-layer KV cache fall back to 1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -68,7 +72,10 @@ def main():
                          batch_budget=args.batch_budget)
     inst = PrefillInstance(params, cfg, core, max_seq=args.max_seq,
                            executor=executor)
-    dec = DecodeInstance(params, cfg, decode_tokens=args.decode_tokens)
+    from repro.models.model import supports_ragged_decode
+    dmb = args.decode_max_batch if supports_ragged_decode(cfg) else 1
+    dec = DecodeInstance(params, cfg, decode_tokens=args.decode_tokens,
+                         decode_max_batch=dmb)
     proxy = Proxy([inst], [dec])
     rng = np.random.default_rng(args.seed)
     try:

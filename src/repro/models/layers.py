@@ -98,21 +98,24 @@ def naive_attention(
     qg = q.reshape(B, S, K, H // K, hd)
     scores = _gqa_scores_einsum(qg, k) / math.sqrt(hd)     # (B,K,Q,S,T) f32
 
-    q_pos = jnp.arange(S)[:, None] + q_offset              # (S, 1)
+    # q_offset / kv_len accept per-row (B,) arrays (ragged decode batches);
+    # scalars broadcast over the leading batch axis exactly as before
+    q_pos = jnp.arange(S)[:, None] \
+        + jnp.asarray(q_offset).reshape(-1, 1, 1)          # (B or 1, S, 1)
     if k_positions is not None:
-        k_pos = k_positions[None, :]                       # (1, T)
+        k_pos = k_positions[None, None, :]                 # (1, 1, T)
     else:
-        k_pos = jnp.arange(T)[None, :]                     # (1, T)
-    mask = jnp.ones((S, T), dtype=bool)
+        k_pos = jnp.arange(T)[None, None, :]               # (1, 1, T)
+    mask = jnp.ones((1, S, T), dtype=bool)
     if k_positions is not None:
-        mask &= k_pos >= 0                                 # unwritten ring slots
+        mask = mask & (k_pos >= 0)                         # unwritten ring slots
     if causal:
-        mask &= k_pos <= q_pos
+        mask = mask & (k_pos <= q_pos)
     if local_window:
-        mask &= k_pos > q_pos - local_window
+        mask = mask & (k_pos > q_pos - local_window)
     if kv_len is not None:
-        mask &= k_pos < kv_len
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        mask = mask & (k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1))
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkqst,btkh->bskqh", probs.astype(v.dtype), v)
     return out.reshape(B, S, H, hd)

@@ -814,6 +814,82 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits[:, 0], cache
 
 
+def supports_ragged_decode(cfg: ModelConfig) -> bool:
+    """Families whose decode cache is a dense per-layer K/V stack with a
+    single position pointer — the shapes the batched paged decode runtime
+    (`decode_step_ragged` + PagedKVCache) handles. Recurrent-state families
+    (ssm/hybrid), encoder-decoder audio, and the interleaved MoE pair layout
+    stay on the single-stream `decode_step` path."""
+    if cfg.family in ("ssm", "hybrid", "audio"):
+        return False
+    if cfg.num_experts and cfg.moe_layer_freq == 2:
+        return False
+    return True
+
+
+def _ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             kv_lens: jax.Array, attn_impl: str) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, T, K, hd); kv_lens: (B,) valid key counts.
+    Row b attends to keys [0, kv_lens[b]) of its own KV view."""
+    if attn_impl in ("pallas", "pallas_interpret"):
+        # runtime import: kernels.ops imports models.layers; importing it at
+        # module scope from here would tie the model to the kernel package
+        from repro.kernels.ops import decode_attention
+        return decode_attention(q, k, v, kv_lens, impl=attn_impl)
+    out = L.naive_attention(q[:, None], k, v, causal=False, kv_len=kv_lens)
+    return out[:, 0]
+
+
+def decode_step_ragged(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       k_gathered: jax.Array, v_gathered: jax.Array,
+                       kv_lens: jax.Array, *, attn_impl: str = "naive"):
+    """One continuous-batching decode step over B resident streams.
+
+    tokens: (B,) int32 — each stream's current token; k_gathered/v_gathered:
+    (L, B, T, K, hd) dense per-stream KV views (PagedKVCache.gather_batch),
+    padded to a common T; kv_lens: (B,) int32 — stream b's context length,
+    which is also the position its new K/V belongs at (padding slots carry
+    kv_len 0 and their outputs are discarded by the caller).
+
+    Returns (logits (B, V), k_new (L, B, K, hd), v_new (L, B, K, hd)): the
+    new per-layer K/V are handed back for the caller to scatter into the
+    paged pool (PagedKVCache.write_tokens) — the whole step is ONE jitted
+    program per (B, T) shape bucket, one batched cache write per token,
+    instead of per-stream O(pool) functional updates.
+    """
+    if not supports_ragged_decode(cfg):
+        raise NotImplementedError(
+            f"batched ragged decode unsupported for family={cfg.family!r} "
+            f"(moe_layer_freq={cfg.moe_layer_freq}); use decode_step")
+    B = tokens.shape[0]
+    pos = kv_lens.astype(jnp.int32)
+    rows = jnp.arange(B)
+    h = embed_tokens(cfg, params, tokens[:, None])          # (B, 1, D)
+
+    def body(carry, xs):
+        p_l, k_l, v_l = xs                                  # k_l: (B,T,K,hd)
+        y = carry
+        x = L.rms_norm(y, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, p_l, x)                 # (B, 1, ·, hd)
+        rp = pos[:, None]                                   # (B, 1) positions
+        q = L.apply_rope(q, rp, cfg.rope_theta)
+        k = L.apply_rope(k, rp, cfg.rope_theta)
+        # batched scatter of the new token into the gathered views so
+        # attention sees prefix + self; the pool write happens in the caller
+        k_full = k_l.at[rows, pos].set(k[:, 0].astype(k_l.dtype))
+        v_full = v_l.at[rows, pos].set(v[:, 0].astype(v_l.dtype))
+        o = _ragged_decode_attention(q[:, 0], k_full, v_full, pos + 1,
+                                     attn_impl)             # (B, H, hd)
+        y = y + jnp.einsum("bsq,qd->bsd", o.reshape(B, 1, -1), p_l["wo"])
+        y = ffn_block(cfg, p_l, y)
+        return y, (k[:, 0], v[:, 0])
+
+    h, (k_new, v_new) = _ctl_scan(
+        body, h, (params["layers"], k_gathered, v_gathered))
+    logits = lm_head(cfg, params, h)
+    return logits[:, 0], k_new, v_new
+
+
 def _decode_ssm(params, cfg, h, cache):
     B = h.shape[0]
     din, N, nh, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width

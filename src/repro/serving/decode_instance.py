@@ -1,51 +1,75 @@
-"""Decode instance (FlowPrefill §4, extended): autoregressive decode of
-handed-over prefills (the PD-disaggregation KV transfer), with pluggable
-batch-admission scheduling.
+"""Decode instance (FlowPrefill §4, extended): continuous-batching
+autoregressive decode of handed-over prefills (the PD-disaggregation KV
+transfer), with pluggable batch-admission scheduling.
 
-The paper's decode stage is deliberately plain FCFS; this instance keeps that
-as the default but can run the SAME decode S-EDF policy the cluster simulator
-evaluates (`repro.core.scheduler.DecodeSchedulerCore` — evaluated-is-deployed,
-see docs/SCHEDULING.md):
+The runtime mirrors the simulator's decode model (`DecodeSim`,
+docs/SCHEDULING.md — evaluated-is-deployed): an instance owns up to
+``decode_max_batch`` resident SLOTS backed by `PagedKVCache` block tables and
+runs ONE jitted decode step per token over the whole resident batch
+(`repro.models.model.decode_step_ragged`): decode is bandwidth-bound, so
+weights are streamed once per step regardless of how many streams share it —
+tokens/s scales near-linearly with the batch (benchmarks/fig21).
 
-  * ``policy="fcfs"``  — worker pops finished prefills in arrival order and
-    decodes `decode_tokens` tokens per request (the original behavior).
-  * ``policy="s-edf"`` — the worker picks the queued job with the highest
-    TBT-deadline-slack priority, and (with ``preempt``) re-checks the queue at
-    every TOKEN boundary: if a strictly-higher-priority job is waiting, the
-    running decode is suspended mid-stream — progress, KV cache, and next
-    token kept — and resumes later. This is the decode analogue of the
-    paper's operator-level prefill preemption: scheduling stays event-driven
-    while preemption granularity is one token.
+Scheduling (`repro.core.scheduler.DecodeSchedulerCore`, shared verbatim with
+the simulator):
+
+  * ``policy="fcfs"``  — arrival-order admission into free slots; residents
+    are never displaced (the paper's deliberately-plain decode stage).
+  * ``policy="s-edf"`` — admission ranked by TBT-deadline slack; with
+    ``preempt`` a near-deadline waiting stream displaces the most slack-rich
+    resident at the next TOKEN boundary. Preemption is slot *eviction*:
+    progress, KV blocks (kept resident in the pool), and the next token all
+    survive, exactly like the old single-stream suspend — the decode analogue
+    of the paper's operator-level prefill preemption.
+
+Batch shapes are BUCKETED (``batch_buckets``, KV width padded to
+power-of-two block multiples) so jit recompilations are bounded by the
+bucket-pair count, not by the number of distinct resident populations
+(asserted in tests/test_decode_batched.py).
+
+``decode_max_batch=1`` (the default) keeps the original single-stream worker
+byte-for-byte: one dense `decode_step` per token on the job's own handoff
+cache, so the B=1 path bit-matches the pre-batching runtime.
 
 Slack needs a per-token latency estimate: a `DecodeStepPredictor` (analytic
-`DecodeCostModel.step_time` prior, EMA-calibrated from this instance's own
-measured TBT samples) or, without one, a plain EMA of observed TBT.
+or profiled `step_time(B, ctx)` prior, EMA-calibrated from this instance's
+own measured TBT samples) or, without one, a plain EMA of observed TBT.
 
-Queued (not yet started) jobs can be handed to another instance by the Proxy
+Queued (not yet resident) jobs can be handed to another instance by the Proxy
 (decode migration): `snapshot_load`/`snapshot_candidates` feed the shared
-cost-gated planner in `repro.core.dispatch`, `take` removes the chosen jobs.
+cost-gated planner in `repro.core.dispatch`, `take` removes the chosen jobs
+(evicted pool-resident streams are gathered back into a dense handoff cache).
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dispatch import DecodeCandidate, DecodeLoad
 from repro.core.predictor import DecodeStepPredictor
 from repro.core.request import Request
 from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
-from repro.models.model import decode_step
+from repro.models.model import (decode_step, decode_step_ragged,
+                                supports_ragged_decode)
+from repro.serving.kvcache import PagedKVCache
+
+# sequence id of the pool slot padding rows write into / gather from — never
+# a real request rid (rids are non-negative)
+_SCRATCH_SEQ = -1
 
 
 @dataclass
 class DecodeJob:
     request: Request
-    cache: Dict                     # model.decode_step cache (B=1 slice)
+    cache: Dict                     # model.decode_step cache (B=1 slice);
+                                    # None while the stream's KV lives in the
+                                    # instance's paged pool (batched path)
     first_token: int
     tokens_done: int = 0            # tokens already decoded (preemption state)
     next_token: Optional[int] = None  # resume point after a suspension
@@ -55,33 +79,66 @@ class DecodeJob:
                                     # submit: request.output_tokens, or the
                                     # instance default) — deadlines and
                                     # remaining-work MUST use the same count
+    base_len: int = 0               # prompt tokens in the pool (batched path):
+                                    # kv position = base_len + tokens_done
 
 
 class DecodeInstance:
     def __init__(self, params, cfg, *, decode_tokens: int = 8,
                  clock: Callable[[], float] = time.monotonic,
                  policy: str = "fcfs", preempt: Optional[bool] = None,
-                 step_predictor: Optional[DecodeStepPredictor] = None):
+                 step_predictor: Optional[DecodeStepPredictor] = None,
+                 decode_max_batch: int = 1,
+                 batch_buckets: Sequence[int] = (1, 2, 4, 8),
+                 kv_block_size: int = 128,
+                 attn_impl: str = "naive"):
+        if decode_max_batch > 1 and not supports_ragged_decode(cfg):
+            raise ValueError(
+                f"decode_max_batch={decode_max_batch} needs the batched "
+                f"ragged decode step, unsupported for family "
+                f"{cfg.family!r}; use decode_max_batch=1")
         self.params = params
         self.cfg = cfg
         self.decode_tokens = decode_tokens
+        self.decode_max_batch = max(decode_max_batch, 1)
         self.clock = clock
         self.sched = DecodeSchedulerCore(
             policy=policy, preempt=(policy == "s-edf") if preempt is None
             else preempt)
         self.step_pred = step_predictor
+        self.attn_impl = attn_impl
+        self.kv_block_size = kv_block_size
+        # batch-size buckets: padded shapes the jitted step may see — bounds
+        # recompiles to len(buckets) x len(width buckets)
+        self._b_buckets = sorted(
+            {min(b, self.decode_max_batch) for b in batch_buckets if b >= 1}
+            | {self.decode_max_batch})
         self._tbt_ema = 0.0             # fallback t_step estimate (no prior)
         self._waiting: List[DecodeJob] = []
-        self._active: Optional[DecodeJob] = None
+        self._resident: Dict[int, DecodeJob] = {}   # rid -> job (slots)
+        self._admitting = 0             # jobs mid-ingestion: in NEITHER list
+                                        # (keeps drain/idle from lying)
+        self._in_pool: set = set()      # rids whose KV lives in self.kv
+        self.kv: Optional[PagedKVCache] = None      # lazily sized on first use
+        # serializes ALL self.kv access: the worker's per-step gather/scatter
+        # runs outside _cv (write_tokens DONATES the pool buffers), while
+        # take() extracts evicted streams from other threads — unguarded
+        # overlap would read a deleted/torn pool. Lock order: _cv -> _kv_lock.
+        self._kv_lock = threading.Lock()
         self._cv = threading.Condition()
         self._order = 0
         self._shutdown = False
         self.finished: List[Request] = []
         self.tbt_samples: List[float] = []
         self.preemptions = 0
+        self.steps = 0                  # batched decode steps executed
         self._step = jax.jit(
             lambda p, t, c: decode_step(p, cfg, t, c))
-        self._thread = threading.Thread(target=self._run, daemon=True,
+        self._step_ragged = jax.jit(
+            lambda p, t, kg, vg, kl: decode_step_ragged(
+                p, cfg, t, kg, vg, kl, attn_impl=attn_impl))
+        run = self._run_batched if self.decode_max_batch > 1 else self._run
+        self._thread = threading.Thread(target=run, daemon=True,
                                         name="decode-instance")
         self._thread.start()
 
@@ -106,7 +163,10 @@ class DecodeInstance:
             job.order = self._order
             self._order += 1
             self._waiting.append(job)
-            self._cv.notify()
+            # notify_all: drain() waits on the same cv — a single notify
+            # could wake the drain waiter (predicate now false) instead of
+            # the worker, costing a wait-timeout of first-token latency
+            self._cv.notify_all()
 
     def pending(self) -> int:
         """Decode jobs waiting in this instance's queue (the backlog signal
@@ -114,32 +174,44 @@ class DecodeInstance:
         with self._cv:
             return len(self._waiting)
 
+    def resident(self) -> int:
+        """Streams currently occupying batch slots."""
+        with self._cv:
+            return len(self._resident)
+
     def idle(self) -> bool:
         """No queued work and nothing decoding. NOTE: a job being migrated
         is momentarily in NO instance, so cross-instance quiescence must be
         checked under the owner's migration lock (Proxy.drain does)."""
         with self._cv:
-            return not self._waiting and self._active is None
+            return not self._waiting and not self._resident \
+                and self._admitting == 0
+
+    def compile_cache_size(self) -> int:
+        """Compiled-shape count of the batched step — the recompile budget
+        the shape buckets bound (tests assert <= |B buckets| x |KV widths|)."""
+        size = getattr(self._step_ragged, "_cache_size", None)
+        return int(size()) if callable(size) else -1
 
     # ------------------------------------------------- migration (the Proxy)
     def snapshot_load(self, instance_id: int,
                       step_time: Callable[[int, float], float]) -> DecodeLoad:
-        """Planner view of this instance: the worker decodes one stream at a
-        time, so the slot cap is 1 and queueing shows up as the N/1
-        time-sharing factor in `DecodeLoad.effective_step`."""
+        """Planner view of this instance: the real slot cap (continuous batch
+        width) plus the admission queue, so `DecodeLoad.effective_step` prices
+        time-sharing beyond the cap exactly as the simulator does."""
         with self._cv:
             jobs = list(self._waiting)
-            active = self._active
-        ctx = sum(j.request.num_tokens + j.tokens_done for j in jobs)
-        if active is not None:
-            ctx += active.request.num_tokens + active.tokens_done
+            res = list(self._resident.values())
+        ctx = sum(j.request.num_tokens + j.tokens_done for j in jobs) \
+            + sum(j.request.num_tokens + j.tokens_done for j in res)
         return DecodeLoad(instance_id=instance_id,
-                          n_resident=1 if active is not None else 0,
+                          n_resident=len(res),
                           n_waiting=len(jobs), ctx_tokens=float(ctx),
-                          max_batch=1, step_time=step_time)
+                          max_batch=self.decode_max_batch,
+                          step_time=step_time)
 
     def snapshot_candidates(self) -> List[DecodeCandidate]:
-        """Queued (never running) jobs as migration candidates."""
+        """Queued (not resident) jobs as migration candidates."""
         with self._cv:
             jobs = list(self._waiting)
         return [DecodeCandidate(
@@ -151,35 +223,42 @@ class DecodeInstance:
 
     def take(self, rids: Sequence[int]) -> List[DecodeJob]:
         """Remove and return queued jobs by request id (migration departure).
-        Jobs that started decoding meanwhile are silently skipped — their KV
-        is hot on this instance."""
+        Jobs that became resident meanwhile are silently skipped — their KV
+        is hot on this instance. An EVICTED stream whose KV still lives in
+        the paged pool is gathered back into a dense handoff cache first."""
         want = set(rids)
         with self._cv:
             taken = [j for j in self._waiting if j.request.rid in want]
             self._waiting = [j for j in self._waiting
                              if j.request.rid not in want]
+        # pool extraction waits on _kv_lock (up to one decode step) — do it
+        # AFTER releasing _cv so the Proxy's submit/snapshot path never
+        # stalls behind it; the popped jobs are invisible to the worker
+        for job in taken:
+            if job.request.rid in self._in_pool:
+                self._extract_cache(job)
         return taken
 
     # ------------------------------------------------------------ lifecycle
     def shutdown(self) -> None:
         with self._cv:
             self._shutdown = True
-            self._cv.notify()
+            self._cv.notify_all()
         self._thread.join(10.0)
 
     def drain(self, timeout: float = 60.0) -> bool:
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            with self._cv:
-                if not self._waiting and self._active is None:
-                    return True
-            time.sleep(0.005)
-        return False
+        """Block until the instance is idle. Waits on the instance condition
+        variable (the worker notifies on every completion) instead of the old
+        5 ms busy-wait poll."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: not self._waiting and not self._resident
+                and self._admitting == 0, timeout)
 
-    # -------------------------------------------------------------- worker
-    def _t_step(self, ctx: float) -> float:
+    # -------------------------------------------------------------- shared
+    def _t_step(self, b: int, ctx: float) -> float:
         if self.step_pred is not None:
-            return self.step_pred.step_time(1, ctx)
+            return self.step_pred.step_time(b, ctx)
         return self._tbt_ema
 
     def _entry(self, job: DecodeJob) -> DecodeEntry:
@@ -189,6 +268,18 @@ class DecodeInstance:
                            deadline=job.request.decode_deadline,
                            order=job.order)
 
+    def _observe(self, b: int, ctx: float, tbt: float) -> None:
+        a = 0.1 if self._tbt_ema > 0 else 1.0
+        self._tbt_ema += a * (tbt - self._tbt_ema)
+        if self.step_pred is not None:
+            self.step_pred.observe(b, ctx, tbt)
+
+    def _finish(self, job: DecodeJob, now: float) -> None:
+        job.request.finish_time = now
+        job.request.mean_tpot = (now - job.enqueued) / max(job.target, 1)
+        self.finished.append(job.request)
+
+    # ------------------------------------- single-stream worker (slot cap 1)
     def _pick_next_locked(self, now: float) -> DecodeJob:
         # caller holds _cv; _waiting is non-empty
         if len(self._waiting) == 1:
@@ -196,7 +287,7 @@ class DecodeInstance:
         ctx = sum(j.request.num_tokens + j.tokens_done
                   for j in self._waiting) / len(self._waiting)
         ranked = self.sched.rank([self._entry(j) for j in self._waiting],
-                                 now, self._t_step(ctx))
+                                 now, self._t_step(1, ctx))
         best = ranked[0].key
         for i, j in enumerate(self._waiting):
             if j.request.rid == best:
@@ -213,19 +304,11 @@ class DecodeInstance:
                 return False
             queued = list(self._waiting)
         ctx = job.request.num_tokens + job.tokens_done
-        t_step = self._t_step(float(ctx))
+        t_step = self._t_step(1, float(ctx))
         own = self.sched.priority(self._entry(job), now, t_step)
         best = max(self.sched.priority(self._entry(j), now, t_step)
                    for j in queued)
         return best > own
-
-    def _observe(self, job: DecodeJob, tbt: float) -> None:
-        self.tbt_samples.append(tbt)
-        a = 0.1 if self._tbt_ema > 0 else 1.0
-        self._tbt_ema += a * (tbt - self._tbt_ema)
-        if self.step_pred is not None:
-            self.step_pred.observe(
-                1, float(job.request.num_tokens + job.tokens_done), tbt)
 
     def _run(self) -> None:
         while True:
@@ -235,7 +318,7 @@ class DecodeInstance:
                 if not self._waiting:
                     return                     # shutdown with an empty queue
                 job = self._pick_next_locked(self.clock())
-                self._active = job
+                self._resident[job.request.rid] = job
             start = job.first_token if job.next_token is None \
                 else job.next_token
             tok = jnp.asarray([start], jnp.int32)
@@ -245,7 +328,10 @@ class DecodeInstance:
                 logits, cache = self._step(self.params, tok, cache)
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 now = self.clock()
-                self._observe(job, now - last)
+                self.tbt_samples.append(now - last)
+                self._observe(
+                    1, float(job.request.num_tokens + job.tokens_done),
+                    now - last)
                 last = now
                 job.tokens_done += 1
                 job.cache = cache
@@ -256,14 +342,300 @@ class DecodeInstance:
                     self.preemptions += 1
                     with self._cv:
                         self._waiting.append(job)
-                        self._active = None
-                        self._cv.notify()
+                        del self._resident[job.request.rid]
+                        self._cv.notify_all()
                     break
             else:
-                now = self.clock()
-                job.request.finish_time = now
-                job.request.mean_tpot = (now - job.enqueued) \
-                    / max(job.target, 1)
-                self.finished.append(job.request)
+                self._finish(job, self.clock())
                 with self._cv:
-                    self._active = None
+                    del self._resident[job.request.rid]
+                    self._cv.notify_all()
+
+    # --------------------------------- continuous-batching worker (slots > 1)
+    def _ensure_pool_locked(self, job: DecodeJob, need_blocks: int) -> None:
+        """Create the paged pool on first admission (sized for 2x the slot
+        cap at this stream's footprint) or grow it when a larger stream
+        arrives while nothing can be freed."""
+        k = job.cache["k"]
+        L_, K, hd = k.shape[0], k.shape[-2], k.shape[-1]
+        if self.kv is None:
+            blocks = max((2 * self.decode_max_batch + 1) * need_blocks + 1, 8)
+            self.kv = PagedKVCache(L_, blocks, self.kv_block_size, K, hd,
+                                   dtype=k.dtype)
+            # scratch sequence: the slot padding rows of the batched step
+            # write into / gather from (never read through a kv_len mask)
+            self.kv.allocate(_SCRATCH_SEQ, 1)
+
+    def _ingest(self, job: DecodeJob, force: bool = False) -> bool:
+        """Move a stream's KV into the paged pool (no-op for an evicted
+        stream whose blocks stayed resident). False = pool genuinely cannot
+        hold it right now; the job goes back to the queue. ``force`` grows
+        the pool instead of declining — the no-resident deadlock guard,
+        where waiting for another stream's completion to free blocks can
+        never succeed. Takes only _kv_lock (prompt ingestion is device I/O);
+        the caller owns the job exclusively while it is neither waiting nor
+        resident (`_admitting` keeps drain/idle honest meanwhile)."""
+        rid = job.request.rid
+        if rid in self._in_pool:
+            return True
+        pos = int(job.cache["pos"])
+        remaining = job.target - job.tokens_done
+        need_tokens = pos + max(remaining, 1)
+        need_blocks = (need_tokens + self.kv_block_size - 1) \
+            // self.kv_block_size
+        with self._kv_lock:
+            self._ensure_pool_locked(job, need_blocks)
+            if not self.kv.can_allocate(need_tokens):
+                # stay queued only if the pool COULD fit this stream once
+                # residents complete; a footprint larger than the whole pool
+                # (minus the scratch block) would starve forever under
+                # continuous load — grow for it now. Growth is geometric
+                # (doubling at least) so pool-shape recompiles of the
+                # jitted scatters stay O(log): see kvcache._scatter_prompt
+                can_ever_fit = need_blocks <= self.kv.num_blocks - 1
+                if can_ever_fit and self._in_pool and not force:
+                    return False
+                self.kv.grow(max(need_blocks, self.kv.num_blocks))
+            self.kv.allocate(rid, need_tokens)
+            self.kv.write_prompt(rid, job.cache["k"][:, 0, :pos],
+                                 job.cache["v"][:, 0, :pos])
+        # the handoff cache's pos covers prompt + already-decoded tokens
+        # (a migrated-in mid-stream job has tokens_done > 0), while the kv
+        # position is computed as base_len + tokens_done — subtract so the
+        # two bookkeepings agree
+        job.base_len = pos - job.tokens_done
+        job.cache = None                # the pool is now authoritative
+        self._in_pool.add(rid)
+        return True
+
+    def _extract_cache(self, job: DecodeJob) -> None:
+        """Gather an evicted stream's KV out of the pool back into the dense
+        handoff-cache format (migration departure; caller owns the job —
+        it is in neither the waiting list nor a slot). The dense view is
+        padded to cover the REMAINING decode so a slot-cap-1 receiver (dense
+        `decode_step`, which writes at `pos`) never runs off the cache."""
+        rid = job.request.rid
+        with self._kv_lock:
+            k, v, length = self.kv.gather(rid)
+            k = jax.block_until_ready(k)     # copy out before the worker's
+            v = jax.block_until_ready(v)     # next donated scatter runs
+            self.kv.free(rid)
+        kv_len = job.base_len + job.tokens_done
+        need = kv_len + max(job.target - job.tokens_done, 0) + 1
+        keep = max(kv_len, int(length))
+        k, v = k[:, None, :keep], v[:, None, :keep]
+        if keep < need:
+            pad = [(0, 0)] * k.ndim
+            pad[2] = (0, need - keep)
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        job.cache = {"k": k, "v": v, "pos": jnp.asarray(kv_len, jnp.int32)}
+        self._in_pool.discard(rid)
+
+    def _plan_locked(self, now: float) -> List[DecodeJob]:
+        """Token-boundary admission + eviction DECISIONS (caller holds _cv):
+        one `select_batch` over residents + waiting picks the new resident
+        set (the simulator's `DecodeSim._rebatch`, verbatim policy core).
+        Pool-resident streams (evicted earlier) are admitted in place —
+        free. NEW streams are popped from the queue, counted in
+        `_admitting`, and returned for the caller to ingest OUTSIDE the
+        condition variable: prompt ingestion is device I/O, and holding _cv
+        across it would stall the Proxy's submit/snapshot/migration path."""
+        everyone: Dict[int, DecodeJob] = dict(self._resident)
+        for j in self._waiting:
+            everyone[j.request.rid] = j
+        if not everyone:
+            return []
+        total = len(everyone)
+        b_eff = min(self.decode_max_batch, total)
+        ctx = sum(j.request.num_tokens + j.tokens_done
+                  for j in everyone.values())
+        t_step = self._t_step(b_eff, ctx / total)
+        entries = [self._entry(j) for j in everyone.values()]
+        batch, preempted = self.sched.select_batch(
+            entries, set(self._resident), self.decode_max_batch, now, t_step)
+        for rid in preempted:
+            # slot eviction: progress, pool blocks, and next token all kept
+            job = self._resident.pop(rid)
+            job.request.decode_preemptions += 1
+            self.preemptions += 1
+            self._waiting.append(job)
+        to_ingest: List[DecodeJob] = []
+        claimed = set()
+        for rid in batch:
+            if rid in self._resident:
+                continue
+            job = everyone[rid]
+            claimed.add(rid)
+            if rid in self._in_pool:
+                self._resident[rid] = job          # re-admission is free
+            else:
+                self._admitting += 1
+                to_ingest.append(job)
+        if claimed:
+            self._waiting = [j for j in self._waiting
+                             if j.request.rid not in claimed]
+        return to_ingest
+
+    def _bucket(self, n: int, buckets: Sequence[int]) -> int:
+        for b in buckets:
+            if b >= n:
+                return b
+        return buckets[-1]
+
+    def _step_batch(self, jobs: List[DecodeJob]) -> None:
+        """One jitted decode step over the whole resident batch: gather the
+        resident KV views, run `decode_step_ragged` at the padded bucket
+        shape, scatter the new K/V back in one batched write."""
+        n = len(jobs)
+        bb = self._bucket(n, self._b_buckets)
+        seq_ids = [j.request.rid for j in jobs] + \
+            [_SCRATCH_SEQ] * (bb - n)
+        kv_lens = np.zeros(bb, np.int32)
+        tokens = np.zeros(bb, np.int32)
+        for i, j in enumerate(jobs):
+            kv_lens[i] = j.base_len + j.tokens_done
+            tokens[i] = j.first_token if j.next_token is None else j.next_token
+        t0 = self.clock()
+        with self._kv_lock:
+            # KV width bucket: power-of-two over the widest row's ALLOCATED
+            # block count — gather_batch pads to at least the table width,
+            # so bucketing the current kv_len instead would let per-stream
+            # allocation sizes leak into the jitted shape (unbounded
+            # recompiles)
+            need_blocks = max(
+                (len(self.kv.table(j.request.rid).blocks) for j in jobs),
+                default=1)
+            width = 1
+            while width < need_blocks:
+                width *= 2
+            k_g, v_g, _ = self.kv.gather_batch(seq_ids, width)
+            logits, k_new, v_new = self._step_ragged(
+                self.params, jnp.asarray(tokens), k_g, v_g,
+                jnp.asarray(kv_lens))
+            next_tokens = np.asarray(jnp.argmax(logits, -1))
+            self.kv.write_tokens(seq_ids, kv_lens.tolist(), k_new, v_new)
+        # the next token cannot start before the scatter completes: stamp the
+        # step AFTER write_tokens so observed dt matches what
+        # profile_step_times measures (the prior the EMA calibrates against)
+        now = self.clock()
+        self.steps += 1
+        dt = now - t0
+        mean_ctx = float(kv_lens[:n].mean())
+        self._observe(n, mean_ctx, dt)
+        done: List[DecodeJob] = []
+        for i, j in enumerate(jobs):
+            self.tbt_samples.append(dt)
+            j.tokens_done += 1
+            j.next_token = int(next_tokens[i])
+            if j.tokens_done >= j.target:
+                done.append(j)
+        with self._cv:
+            for j in done:
+                rid = j.request.rid
+                self._finish(j, now)
+                self._resident.pop(rid, None)
+                with self._kv_lock:
+                    self.kv.free(rid)
+                self._in_pool.discard(rid)
+            if done:
+                self._cv.notify_all()
+
+    def _run_batched(self) -> None:
+        while True:
+            with self._cv:
+                while not self._waiting and not self._resident \
+                        and not self._shutdown:
+                    self._cv.wait(0.1)
+                if self._shutdown and not self._waiting \
+                        and not self._resident:
+                    return
+                to_ingest = self._plan_locked(self.clock())
+            for job in to_ingest:                  # device I/O: no _cv held
+                ok = self._ingest(job)
+                with self._cv:
+                    self._admitting -= 1
+                    if ok:
+                        self._resident[job.request.rid] = job
+                    else:
+                        self._waiting.append(job)
+            with self._cv:
+                force_job = None
+                if not self._resident and self._waiting:
+                    # deadlock guard: nothing is decoding, so no completion
+                    # can ever free blocks for the declined admissions above
+                    # — force the top-ranked stream in (grows the pool)
+                    force_job = self._pick_next_locked(self.clock())
+                    self._admitting += 1
+            if force_job is not None:
+                self._ingest(force_job, force=True)
+                with self._cv:
+                    self._admitting -= 1
+                    self._resident[force_job.request.rid] = force_job
+            with self._cv:
+                batch = sorted(self._resident.values(), key=lambda j: j.order)
+            if not batch:
+                time.sleep(0.001)
+                continue
+            self._step_batch(batch)
+
+
+def profile_step_times(params, cfg, *, batch_sizes: Sequence[int] = (1, 2, 4, 8),
+                       ctx: int = 256, decode_tokens: int = 16,
+                       warmup: int = 2, kv_block_size: int = 128,
+                       attn_impl: str = "naive",
+                       clock: Callable[[], float] = time.monotonic,
+                       ) -> List[Tuple[int, float, float]]:
+    """Measure the REAL batched decode step over a sweep of batch sizes.
+
+    Drives `decode_step_ragged` + `PagedKVCache` directly (no threads): for
+    each B, B synthetic streams with `ctx` prompt tokens decode
+    `decode_tokens` tokens; the MEDIAN per-token wall time after `warmup`
+    steps is recorded (robust to host scheduler jitter — decode steps are
+    milliseconds, one descheduling would dominate a mean).
+    Returns ``[(B, mean_context, seconds_per_step)]`` —
+    the samples `DecodeStepPredictor.from_profile` fits its measured
+    step-time prior from (the profiled replacement for the analytic
+    `DecodeCostModel.step_time` seed), and the data behind
+    benchmarks/fig21_decode_batching.py.
+    """
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L_ = cfg.num_layers
+    step = jax.jit(lambda p, t, kg, vg, kl: decode_step_ragged(
+        p, cfg, t, kg, vg, kl, attn_impl=attn_impl))
+    samples: List[Tuple[int, float, float]] = []
+    rng = np.random.default_rng(0)
+    for bsz in batch_sizes:
+        tokens_cap = ctx + decode_tokens + warmup + 1
+        blocks_per = (tokens_cap + kv_block_size - 1) // kv_block_size
+        kv = PagedKVCache(L_, bsz * blocks_per + 1, kv_block_size, K, hd,
+                          dtype=jnp.bfloat16)
+        for s in range(bsz):
+            kv.allocate(s, tokens_cap)
+            kprompt = jnp.asarray(
+                rng.standard_normal((L_, ctx, K, hd)), jnp.bfloat16)
+            vprompt = jnp.asarray(
+                rng.standard_normal((L_, ctx, K, hd)), jnp.bfloat16)
+            kv.write_prompt(s, kprompt, vprompt)
+        width = 1
+        while width * kv_block_size < tokens_cap:
+            width *= 2
+        seq_ids = list(range(bsz))
+        toks = np.asarray(rng.integers(0, cfg.vocab_size, bsz), np.int32)
+        lens = np.full(bsz, ctx, np.int32)
+        elapsed: List[float] = []
+        ctx_timed: List[float] = []
+        for it in range(decode_tokens + warmup):
+            t0 = clock()
+            k_g, v_g, _ = kv.gather_batch(seq_ids, width)
+            logits, k_new, v_new = step(params, jnp.asarray(toks), k_g, v_g,
+                                        jnp.asarray(lens))
+            toks = np.asarray(jnp.argmax(logits, -1), np.int32)
+            kv.write_tokens(seq_ids, lens.tolist(), k_new, v_new)
+            t1 = clock()
+            if it >= warmup:
+                elapsed.append(t1 - t0)
+                ctx_timed.append(float(lens.mean()))   # ctx the step RAN at
+            lens += 1
+        samples.append((bsz, float(np.mean(ctx_timed)),
+                        float(np.median(elapsed))))
+    return samples

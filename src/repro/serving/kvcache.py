@@ -1,17 +1,66 @@
 """Paged KV cache manager (vLLM-style block tables, jnp-native).
 
 The decode instance allocates cache blocks per sequence from a shared pool;
-`gather` materializes a contiguous (T, K, hd) view per layer for attention.
-Tested standalone (tests/test_kvcache.py) incl. hypothesis properties:
-no double allocation, free-list conservation, data round-trip.
+`gather` materializes a contiguous (T, K, hd) view per layer for attention,
+and the continuous-batching decode runtime uses the BATCHED pool I/O:
+
+  * ``write_tokens(seq_ids, positions, k, v)`` — one jitted, donated scatter
+    writes every resident stream's new token per step. The scalar ``write``
+    is kept as the reference: each of its two functional ``.at[].set`` calls
+    copies the ENTIRE pool, so per-token per-stream writes cost O(pool) each —
+    the churn the batched path eliminates (donation lets XLA update in place).
+  * ``gather_batch(seq_ids, width)`` — one jitted gather materializes the
+    whole resident set as (L, B, T_pad, K, hd) dense views for the batched
+    decode step, rows padded to a common block count.
+
+Tested standalone (tests/test_property.py, tests/test_decode_batched.py)
+incl. hypothesis properties: no double allocation, free-list conservation,
+data round-trip.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_tokens(k_pool, v_pool, blk, off, k, v):
+    """Batched single-token scatter: pools (L, NB, bs, K, hd), blk/off (B,),
+    k/v (L, B, K, hd). Donated pools let XLA write in place."""
+    k_pool = k_pool.at[:, blk, off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[:, blk, off].set(v.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_prompt(k_pool, v_pool, blocks, k, v):
+    """Bulk prompt scatter: pools (L, NB, bs, K, hd), blocks (nb,),
+    k/v (L, nb, bs, K, hd) — the whole prompt lands in one donated update
+    (the per-block functional loop copied the full pool per block).
+    Retraces per distinct prompt block count nb (bounded by
+    max-prompt-tokens / block_size — a one-time, admission-path cost, unlike
+    the per-token step whose shapes the caller buckets) and per pool shape
+    (`grow` itself is an exact primitive; the decode runtime requests
+    doubling-at-least growth, so pool shapes occur O(log) times)."""
+    k_pool = k_pool.at[:, blocks].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[:, blocks].set(v.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+@jax.jit
+def _gather_blocks(k_pool, v_pool, tables):
+    """tables (B, nb) block ids -> contiguous (L, B, nb*bs, K, hd) views."""
+    k = k_pool[:, tables]                       # (L, B, nb, bs, K, hd)
+    v = v_pool[:, tables]
+    L_, B, nb, bs = k.shape[:4]
+    k = k.reshape(L_, B, nb * bs, *k.shape[4:])
+    v = v.reshape(L_, B, nb * bs, *v.shape[4:])
+    return k, v
 
 
 @dataclass
@@ -75,6 +124,19 @@ class PagedKVCache:
         table = self._tables.pop(seq_id)
         self._free.extend(table.blocks)
 
+    def grow(self, extra_blocks: int) -> None:
+        """Append `extra_blocks` fresh blocks to the pool (live tables keep
+        their indices — new blocks land at the tail of both pools)."""
+        if extra_blocks <= 0:
+            return
+        pad = [(0, 0)] * self.k_pool.ndim
+        pad[1] = (0, extra_blocks)
+        self.k_pool = jnp.pad(self.k_pool, pad)
+        self.v_pool = jnp.pad(self.v_pool, pad)
+        self._free.extend(range(self.num_blocks,
+                                self.num_blocks + extra_blocks))
+        self.num_blocks += extra_blocks
+
     def table(self, seq_id: int) -> Optional[BlockTable]:
         return self._tables.get(seq_id)
 
@@ -90,18 +152,27 @@ class PagedKVCache:
         table.length = max(table.length, pos + 1)
 
     def write_prompt(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
-        """Bulk write a prefilled prompt. k/v: (L, T, K, hd)."""
+        """Bulk write a prefilled prompt in ONE jitted, donated scatter.
+        k/v: (L, T, K, hd). The final partial block's tail is zero-filled —
+        positions past `length` are dead until a later write claims them
+        (readers mask by kv_len), so this is equivalent to leaving them
+        stale."""
         table = self._tables[seq_id]
         T = k.shape[1]
+        if T == 0:
+            return
         bs = self.block_size
-        for i, blk in enumerate(table.blocks):
-            lo, hi = i * bs, min((i + 1) * bs, T)
-            if lo >= T:
-                break
-            self.k_pool = self.k_pool.at[:, blk, :hi - lo].set(
-                k[:, lo:hi].astype(self.k_pool.dtype))
-            self.v_pool = self.v_pool.at[:, blk, :hi - lo].set(
-                v[:, lo:hi].astype(self.v_pool.dtype))
+        nb = (T + bs - 1) // bs
+        if nb * bs != T:
+            pad = [(0, 0)] * k.ndim
+            pad[1] = (0, nb * bs - T)
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        L_ = k.shape[0]
+        k = k.reshape(L_, nb, bs, *k.shape[2:])
+        v = v.reshape(L_, nb, bs, *v.shape[2:])
+        blocks = jnp.asarray(table.blocks[:nb], jnp.int32)
+        self.k_pool, self.v_pool = _scatter_prompt(
+            self.k_pool, self.v_pool, blocks, k, v)
         table.length = max(table.length, T)
 
     def gather(self, seq_id: int):
@@ -114,3 +185,42 @@ class PagedKVCache:
         k = k.reshape(L_, nb * bs, *k.shape[3:])
         v = v.reshape(L_, nb * bs, *v.shape[3:])
         return k, v, table.length
+
+    # ------------------------------------------------- batched pool I/O
+    def write_tokens(self, seq_ids: Sequence[int], positions: Sequence[int],
+                     k: jax.Array, v: jax.Array) -> None:
+        """Write one token's K/V for EVERY listed sequence in one jitted,
+        donated scatter. k/v: (L, B, K, hd), row i at absolute position
+        positions[i] of seq_ids[i]. This replaces B pairs of O(pool)
+        functional copies (see module docstring) with a single batched
+        update whose recompile count is bounded by the caller's batch-shape
+        buckets."""
+        n = len(seq_ids)
+        blk = np.empty(n, np.int32)
+        off = np.empty(n, np.int32)
+        for i, (sid, pos) in enumerate(zip(seq_ids, positions)):
+            table = self._tables[sid]
+            blk[i] = table.blocks[pos // self.block_size]
+            off[i] = pos % self.block_size
+            table.length = max(table.length, pos + 1)
+        self.k_pool, self.v_pool = _scatter_tokens(
+            self.k_pool, self.v_pool, jnp.asarray(blk), jnp.asarray(off), k, v)
+
+    def gather_batch(self, seq_ids: Sequence[int],
+                     width: int = 0) -> Tuple[jax.Array, jax.Array, np.ndarray]:
+        """Batched `gather` for the resident set: (L, B, T_pad, K, hd) views
+        plus the per-row valid lengths. Rows are padded to `width` blocks
+        (>= every row's block count; 0 = the max over rows) with an arbitrary
+        valid block — padded positions lie past each row's length, so the
+        decode step's per-row kv_len mask never reads them."""
+        tabs = [self._tables[sid] for sid in seq_ids]
+        need = max((len(t.blocks) for t in tabs), default=1)
+        width = max(width or need, need, 1)
+        filler = next((t.blocks[0] for t in tabs if t.blocks), 0)
+        arr = np.full((len(tabs), width), filler, np.int32)
+        for i, t in enumerate(tabs):
+            if t.blocks:
+                arr[i, :len(t.blocks)] = t.blocks
+        k, v = _gather_blocks(self.k_pool, self.v_pool, jnp.asarray(arr))
+        lens = np.asarray([t.length for t in tabs], np.int32)
+        return k, v, lens

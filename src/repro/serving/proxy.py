@@ -88,16 +88,18 @@ class Proxy:
     # ------------------------------------------------------------- dispatch
     def _decode_pressure(self, prefill_idx: int, req: Request) -> float:
         """Downstream TBT pressure for the decode instance paired with
-        `prefill_idx` (i mod D): predicted step time at backlog+1 over the
-        candidate's TBT SLO. 0.0 without decode instances or a cost model."""
+        `prefill_idx` (i mod D): the effective step time were this request's
+        decode to join now (`DecodeLoad.effective_step` — the ONE slot-cap +
+        queue-time-sharing formula shared with `DecodeSim.pressure` and the
+        migration planner) over the candidate's TBT SLO. 0.0 without decode
+        instances or a cost model."""
         if not self.decode_instances or self.decode_cost is None:
             return 0.0
         if req.tbt_slo <= 0 or req.tbt_slo == float("inf"):
             return 0.0
         dec = self.decode_instances[prefill_idx % len(self.decode_instances)]
-        b = dec.pending() + 1
-        return self.decode_cost.step_time(b, float(req.num_tokens)) \
-            / req.tbt_slo
+        load = dec.snapshot_load(prefill_idx, self.decode_cost.step_time)
+        return load.effective_step(1, float(req.num_tokens)) / req.tbt_slo
 
     def _snapshot_loads(self, req: Request, now: float) -> List[InstanceLoad]:
         """Per-instance competing-work snapshots for one dispatch decision
@@ -244,6 +246,8 @@ class Proxy:
             "decode_migrations": self.decode_migrations,
             "decode_preemptions": sum(d.preemptions
                                       for d in self.decode_instances),
+            "decode_steps": sum(getattr(d, "steps", 0)
+                                for d in self.decode_instances),
             "scheduling_rounds": sum(i.scheduling_rounds
                                      for i in self.prefill_instances),
             "blocking_mean": float(np.mean(

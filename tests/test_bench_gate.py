@@ -79,13 +79,47 @@ def test_gated_metric_selection():
     assert is_gated("fig19/llama3-8b/a800-a100/decode-aware_vs_jsq")
     assert is_gated("fig19/llama3-8b/a800-tpu/capacity-weighted/fast_share")
     assert is_gated("fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs")
+    assert is_gated("fig21/llama3-8b/b8_vs_b1_speedup")
     assert not is_gated("fig9/_elapsed_s")
     assert not is_gated("fig9/_error")
+    # absolute tokens/s is runner-speed dependent, deliberately ungated
+    assert not is_gated("fig21/llama3-8b/tokens_per_s_b8")
+    assert not is_gated_lower("fig21/llama3-8b/tokens_per_s_b8")
+    # the analytic-model error row is informational only
+    assert not is_gated_lower("fig21/llama3-8b/analytic_prior/_real_error")
     # rel_err metrics are gated in the LOWER-is-better family, not this one
     assert not is_gated("fig19/llama3-8b/refit/refit_rel_err")
     assert is_gated_lower("fig19/llama3-8b/refit/refit_rel_err")
+    assert is_gated_lower("fig21/llama3-8b/measured_prior_rel_err")
     assert not is_gated_lower("fig9/_elapsed_s")
     assert not is_gated_lower("fig18/llama3-8b/poisson/goodput_req_s")
+
+
+def test_gate_trips_on_fig21_scaling_regression(dirs):
+    """The decode-batching acceptance: the committed tolerance-compensated
+    speedup threshold (3.34 * 0.9 ~= floor 3.0) must trip when the fresh
+    measured scaling collapses (e.g. the batched step silently
+    serializing), and pass at or above the floor."""
+    base, fresh = dirs
+    fig21_base = {"fig21/llama3-8b/b8_vs_b1_speedup": 3.34,
+                  "fig21/llama3-8b/measured_prior_rel_err": 0.227,
+                  "fig21/llama3-8b/tokens_per_s_b8": 1500.0}
+    write_bench(base, "fig21", fig21_base)
+    collapsed = dict(fig21_base,
+                     **{"fig21/llama3-8b/b8_vs_b1_speedup": 1.1})
+    write_bench(fresh, "fig21", collapsed)
+    write_bench(fresh, "fig9", BASE)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # at the floor (and with a slower runner's absolute tokens/s) passes
+    ok = dict(fig21_base, **{"fig21/llama3-8b/b8_vs_b1_speedup": 3.4,
+                             "fig21/llama3-8b/tokens_per_s_b8": 500.0})
+    write_bench(fresh, "fig21", ok)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    # a mis-fit measured prior (rel_err blowing past the ceiling) trips
+    misfit = dict(fig21_base,
+                  **{"fig21/llama3-8b/measured_prior_rel_err": 0.5})
+    write_bench(fresh, "fig21", misfit)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
 
 
 def test_gate_trips_on_rel_err_rise(dirs):
@@ -135,13 +169,15 @@ def test_committed_baselines_are_wellformed():
     from benchmarks.compare import load_dir
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
-    assert {"fig9", "fig18", "fig19", "fig20"} <= set(baselines)
+    assert {"fig9", "fig18", "fig19", "fig20", "fig21"} <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
     assert len(gated) >= 25
     # the decode-scheduling acceptance ratio is committed and actually holds
     assert baselines["fig20"]["fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs"] \
         >= 1.15
+    # the decode-batching acceptance floor is committed and actually holds
+    assert baselines["fig21"]["fig21/llama3-8b/b8_vs_b1_speedup"] >= 3.0
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]

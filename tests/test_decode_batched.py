@@ -1,0 +1,424 @@
+"""Continuous-batching decode runtime: batched-vs-sequential numerical
+parity (B=1 bit-matches the single-stream path; B>1 matches per-stream
+replay), continuous join/leave mid-step, preemption-as-eviction resume
+state, bounded jit recompiles across the bucket sweep, batched PagedKVCache
+I/O parity, and the measured step-time prior."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_tiny_config
+from repro.core.predictor import DecodeStepPredictor, MeasuredStepTime
+from repro.core.request import Request
+from repro.models import init_params
+from repro.models.model import decode_step, prefill, supports_ragged_decode
+from repro.serving.decode_instance import (DecodeInstance, DecodeJob,
+                                           profile_step_times)
+from repro.serving.kvcache import PagedKVCache
+
+CFG = dataclasses.replace(get_tiny_config("llama3_8b"),
+                          num_layers=2, d_model=128, d_ff=256)
+MAX_SEQ = 256
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    return params
+
+
+def _handoff(params, n, seed):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, n)), jnp.int32)
+    logits, cache = prefill(params, CFG, {"tokens": toks}, max_seq=MAX_SEQ)
+    return int(jnp.argmax(logits, -1)[0]), \
+        {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+
+
+def _replay(params, first, cache, n_tokens):
+    """Sequential single-stream reference: today's dense decode_step loop."""
+    tok = jnp.asarray([first], jnp.int32)
+    c = dict(cache)
+    out = []
+    for _ in range(n_tokens):
+        logits, c = decode_step(params, CFG, tok, c)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out, c
+
+
+def _job(first, cache, out_tokens, tbt=100.0):
+    req = Request(num_tokens=int(cache["pos"]), slo=100.0, arrival=0.0,
+                  output_tokens=out_tokens, tbt_slo=tbt)
+    return DecodeJob(request=req, cache=dict(cache), first_token=first)
+
+
+# --- numerical parity --------------------------------------------------------
+
+
+def test_b1_path_bitmatches_single_stream_runtime(model):
+    """decode_max_batch=1 keeps the original worker: the SAME jitted dense
+    decode_step on the job's own cache — final cache and token trajectory
+    are bit-equal to a sequential replay."""
+    params = model
+    first, cache = _handoff(params, 48, seed=0)
+    want_tokens, want_cache = _replay(params, first, cache, 5)
+
+    inst = DecodeInstance(params, CFG, decode_tokens=5, decode_max_batch=1)
+    try:
+        job = _job(first, cache, 5)
+        inst.submit(job)
+        assert inst.drain(60.0)
+    finally:
+        inst.shutdown()
+    assert job.next_token == want_tokens[-1]
+    for key in ("k", "v"):
+        assert np.array_equal(np.asarray(job.cache[key]),
+                              np.asarray(want_cache[key])), key
+
+
+def test_batched_matches_per_stream_replay(model):
+    """B>1 continuous batch reproduces each stream's sequential greedy
+    decode (ragged lengths, shared jitted step, paged KV)."""
+    params = model
+    streams = [_handoff(params, n, seed=i)
+               for i, n in enumerate((32, 48, 80, 100))]
+    want = [_replay(params, f, c, 6)[0] for f, c in streams]
+
+    inst = DecodeInstance(params, CFG, decode_tokens=6, decode_max_batch=4,
+                          kv_block_size=64)
+    jobs = [_job(f, c, 6) for f, c in streams]
+    try:
+        for j in jobs:
+            inst.submit(j)
+        assert inst.drain(60.0)
+    finally:
+        inst.shutdown()
+    assert [j.tokens_done for j in jobs] == [6] * 4
+    assert [j.next_token for j in jobs] == [w[-1] for w in want]
+    assert inst.steps >= 6                    # one jitted step per token
+    assert len(inst.tbt_samples) == 4 * 6     # every (stream, token) sampled
+
+
+def test_continuous_join_and_leave_mid_step(model):
+    """A stream submitted while the batch is mid-decode joins at a token
+    boundary; earlier-finishing streams leave without disturbing the rest."""
+    params = model
+    s1, s2, s3 = (_handoff(params, n, seed=10 + i)
+                  for i, n in enumerate((32, 48, 64)))
+    inst = DecodeInstance(params, CFG, decode_tokens=8, decode_max_batch=4,
+                          kv_block_size=64)
+    jobs = [_job(s1[0], s1[1], 20), _job(s2[0], s2[1], 4)]
+    try:
+        for j in jobs:
+            inst.submit(j)
+        # wait until decoding is underway, then join a third stream
+        deadline = time.monotonic() + 30.0
+        while inst.steps < 2 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        assert inst.steps >= 2
+        late = _job(s3[0], s3[1], 6)
+        jobs.append(late)
+        inst.submit(late)
+        assert inst.drain(60.0)
+    finally:
+        inst.shutdown()
+    assert [j.tokens_done for j in jobs] == [20, 4, 6]
+    assert len(inst.finished) == 3
+    # the late stream's decode matches its own sequential replay
+    want, _ = _replay(params, s3[0], s3[1], 6)
+    assert late.next_token == want[-1]
+
+
+def test_preemption_is_slot_eviction_with_resume(model):
+    """At the slot cap, a tight-TBT arrival displaces the most slack-rich
+    resident at a token boundary; the evicted stream keeps progress, KV
+    blocks, and next token, resumes later, and still decodes exactly its
+    target — matching a sequential replay."""
+    params = model
+    # ema_alpha=0 pins the calibration scale: early measured steps include
+    # jit compiles (seconds), which would inflate t_step until the tight
+    # stream ranks as doomed — and doomed streams never preempt
+    pred = DecodeStepPredictor(prior=lambda b, c: 1e-4, ema_alpha=0.0)
+    loose_s = [_handoff(params, 32, seed=20), _handoff(params, 48, seed=21)]
+    tight_s = _handoff(params, 40, seed=22)
+    inst = DecodeInstance(params, CFG, decode_tokens=8, decode_max_batch=2,
+                          kv_block_size=64, policy="s-edf",
+                          step_predictor=pred)
+    loose = [_job(f, c, 40, tbt=100.0) for f, c in loose_s]
+    # tbt=2.0: far tighter than loose (earlier deadline wins the ranking)
+    # yet a 12 s budget no wall-clock hiccup (mid-test jit compiles take
+    # ~0.2 s/step in a loaded suite process) can push into doomed territory
+    # — a doomed stream ranks below everything and would be evicted itself
+    tight = _job(*tight_s, 6, tbt=2.0)
+    try:
+        for j in loose:
+            inst.submit(j)
+        deadline = time.monotonic() + 30.0
+        while inst.steps < 2 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        inst.submit(tight)
+        assert inst.drain(120.0)
+    finally:
+        inst.shutdown()
+    assert inst.preemptions >= 1
+    assert sum(j.request.decode_preemptions for j in loose) >= 1
+    assert tight.request.finish_time < max(j.request.finish_time
+                                           for j in loose)
+    assert [j.tokens_done for j in loose] == [40, 40]
+    assert tight.tokens_done == 6
+    for j, (f, c) in zip(loose, loose_s):
+        want, _ = _replay(params, f, c, 40)
+        assert j.next_token == want[-1]       # eviction preserved the stream
+
+
+def test_jit_recompiles_bounded_by_shape_buckets(model):
+    """Sweeping resident populations 1..8 must only ever trace the bucketed
+    shapes: compiled-step count <= |batch buckets| x |KV width buckets|."""
+    params = model
+    inst = DecodeInstance(params, CFG, decode_tokens=2, decode_max_batch=8,
+                          kv_block_size=64, batch_buckets=(1, 2, 4, 8))
+    try:
+        seed = 100
+        for n_streams in (1, 2, 3, 5, 7, 8):
+            jobs = []
+            for _ in range(n_streams):
+                # 32/48-token prompts + 2-token targets all allocate ONE
+                # 64-token block, so exactly one KV width bucket exists no
+                # matter how admissions interleave with in-flight submits
+                f, c = _handoff(params, 32 + 16 * (seed % 2), seed)
+                seed += 1
+                jobs.append(_job(f, c, 2))
+                inst.submit(jobs[-1])
+            assert inst.drain(120.0)
+        n_widths = 1
+        assert 0 < inst.compile_cache_size() <= 4 * n_widths
+    finally:
+        inst.shutdown()
+
+
+def test_unsupported_family_rejects_batched_decode():
+    ssm_cfg = get_tiny_config("mamba2_370m")
+    assert not supports_ragged_decode(ssm_cfg)
+    with pytest.raises(ValueError, match="decode_max_batch"):
+        DecodeInstance(None, ssm_cfg, decode_max_batch=2)
+
+
+# --- migration out of the pool ----------------------------------------------
+
+
+@pytest.mark.parametrize("dst_cap", [1, 2])
+def test_take_extracts_evicted_pool_resident_stream(model, dst_cap):
+    """A stream whose KV lives in the paged pool (evicted resident) must be
+    handed off as a dense cache that another instance — batched OR the
+    slot-cap-1 dense path — can decode to the same result."""
+    params = model
+    f, c = _handoff(params, 48, seed=30)
+    want, _ = _replay(params, f, c, 6)
+    src = DecodeInstance(params, CFG, decode_tokens=6, decode_max_batch=2,
+                         kv_block_size=64)
+    dst = DecodeInstance(params, CFG, decode_tokens=6,
+                         decode_max_batch=dst_cap, kv_block_size=64)
+    job = _job(f, c, 6)
+    try:
+        # stop src's worker first so it cannot re-admit and decode the
+        # hand-planted waiting job before take() runs (take needs no worker)
+        src.shutdown()
+        # ingest by hand: admit into the pool, then evict back to waiting
+        with src._cv:
+            job.target = 6
+            assert src._ingest(job)
+            src._waiting.append(job)
+        assert job.cache is None              # pool is authoritative now
+        taken = src.take([job.request.rid])
+        assert len(taken) == 1 and taken[0].cache is not None
+        assert src.kv.table(job.request.rid) is None   # blocks freed
+        dst.submit(taken[0])
+        assert dst.drain(60.0)
+    finally:
+        src.shutdown()
+        dst.shutdown()
+    assert job.tokens_done == 6
+    assert job.next_token == want[-1]
+
+
+def test_migrated_midstream_job_resumes_at_correct_position(model):
+    """A job preempted mid-decode elsewhere (tokens_done > 0, cache pos =
+    prompt + decoded) must resume in a batched instance at the RIGHT kv
+    position: base_len + tokens_done == pos, no gap and no overrun."""
+    params = model
+    f, c = _handoff(params, 48, seed=40)
+    want, _ = _replay(params, f, c, 8)
+    # replay the first 3 tokens to build the mid-stream handoff state
+    done, mid_cache = _replay(params, f, c, 3)
+    req = Request(num_tokens=48, slo=100.0, arrival=0.0, output_tokens=8,
+                  tbt_slo=100.0)
+    job = DecodeJob(request=req, first_token=f, tokens_done=3,
+                    next_token=done[-1],
+                    cache={"k": mid_cache["k"], "v": mid_cache["v"],
+                           "pos": mid_cache["pos"]})
+    inst = DecodeInstance(params, CFG, decode_tokens=8, decode_max_batch=2,
+                          kv_block_size=64)
+    try:
+        inst.submit(job)
+        assert inst.drain(60.0)
+    finally:
+        inst.shutdown()
+    assert job.tokens_done == 8
+    assert job.next_token == want[-1]
+
+
+def test_no_livelock_when_pool_cannot_fit_selected_streams(model):
+    """No-resident deadlock guard: if every selected stream fails pool
+    allocation while an evicted stream's blocks sit idle, the instance must
+    force progress (grow for the top candidate) instead of spinning — all
+    streams finish."""
+    params = model
+    pred = DecodeStepPredictor(prior=lambda b, c: 1e-4, ema_alpha=0.0)
+    inst = DecodeInstance(params, CFG, decode_tokens=4, decode_max_batch=2,
+                          kv_block_size=32, policy="s-edf",
+                          step_predictor=pred)
+    small = _handoff(params, 32, seed=50)      # sizes the pool small
+    big = [_handoff(params, 250, seed=51), _handoff(params, 250, seed=52)]
+    loose = _job(*small, 4, tbt=100.0)
+    tights = [_job(fc[0], fc[1], 50, tbt=0.05) for fc in big]
+    try:
+        inst.submit(loose)
+        deadline = time.monotonic() + 30.0
+        while inst.steps < 1 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        for t in tights:                       # both outrank + outsize the pool
+            inst.submit(t)
+        assert inst.drain(120.0), "instance livelocked instead of growing"
+    finally:
+        inst.shutdown()
+    assert loose.tokens_done == 4
+    assert [t.tokens_done for t in tights] == [50, 50]
+
+
+def test_oversized_stream_not_starved_while_pool_busy(model):
+    """A stream whose KV footprint exceeds the WHOLE pool must trigger a
+    grow even while other streams are resident (waiting for completions can
+    never free enough blocks for it) — no starvation under continuous
+    load."""
+    params = model
+    inst = DecodeInstance(params, CFG, decode_tokens=4, decode_max_batch=2,
+                          kv_block_size=32)
+    small = _handoff(params, 32, seed=60)      # sizes the pool small
+    big = _handoff(params, 250, seed=61)       # needs more than the pool
+    resident = _job(*small, 30)                # long-lived resident
+    oversized = _job(*big, 4)
+    try:
+        inst.submit(resident)
+        deadline = time.monotonic() + 30.0
+        while inst.steps < 1 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        inst.submit(oversized)
+        assert inst.drain(120.0), "oversized stream starved"
+    finally:
+        inst.shutdown()
+    assert resident.tokens_done == 30
+    assert oversized.tokens_done == 4
+
+
+# --- batched PagedKVCache I/O ------------------------------------------------
+
+
+def test_write_tokens_matches_scalar_write():
+    cache_a = PagedKVCache(2, 16, 4, 2, 8)
+    cache_b = PagedKVCache(2, 16, 4, 2, 8)
+    rng = np.random.default_rng(0)
+    for sid, n in ((0, 6), (1, 3)):
+        cache_a.allocate(sid, 12)
+        cache_b.allocate(sid, 12)
+    k = jnp.asarray(rng.standard_normal((2, 2, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 2, 8)), jnp.float32)
+    positions = [5, 2]
+    for i, sid in enumerate((0, 1)):
+        cache_a.write(sid, positions[i], k[:, i], v[:, i])
+    cache_b.write_tokens([0, 1], positions, k, v)
+    assert np.array_equal(np.asarray(cache_a.k_pool),
+                          np.asarray(cache_b.k_pool))
+    assert np.array_equal(np.asarray(cache_a.v_pool),
+                          np.asarray(cache_b.v_pool))
+    assert cache_b.table(0).length == 6 and cache_b.table(1).length == 3
+
+
+def test_gather_batch_matches_per_seq_gather():
+    cache = PagedKVCache(2, 32, 4, 2, 8)
+    rng = np.random.default_rng(1)
+    lens = {0: 10, 1: 5, 2: 7}
+    for sid, n in lens.items():
+        cache.allocate(sid, n)
+        k = jnp.asarray(rng.standard_normal((2, n, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, n, 2, 8)), jnp.float32)
+        cache.write_prompt(sid, k, v)
+    kb, vb, out_lens = cache.gather_batch([0, 1, 2], width=4)
+    assert kb.shape == (2, 3, 16, 2, 8)
+    assert out_lens.tolist() == [10, 5, 7]
+    for i, sid in enumerate((0, 1, 2)):
+        ks, vs, ln = cache.gather(sid)
+        assert ln == lens[sid]
+        assert np.array_equal(np.asarray(kb)[:, i, :ln],
+                              np.asarray(ks)[:, :ln])
+        assert np.array_equal(np.asarray(vb)[:, i, :ln],
+                              np.asarray(vs)[:, :ln])
+
+
+def test_pool_grow_preserves_data_and_free_accounting():
+    cache = PagedKVCache(1, 4, 4, 1, 8)
+    cache.allocate(0, 8)
+    k = jnp.ones((1, 8, 1, 8))
+    cache.write_prompt(0, k, k)
+    free_before = cache.free_blocks
+    cache.grow(4)
+    assert cache.num_blocks == 8
+    assert cache.free_blocks == free_before + 4
+    ks, _, ln = cache.gather(0)
+    assert ln == 8 and np.asarray(ks)[:, :8].sum() == 8 * 8
+
+
+# --- measured step-time prior ------------------------------------------------
+
+
+def test_measured_step_time_recovers_synthetic_surface():
+    truth = lambda b, c: 2e-3 + 4e-4 * b + 1e-7 * b * c    # noqa: E731
+    samples = [(b, c, truth(b, c))
+               for b in (1, 2, 4, 8) for c in (128.0, 512.0, 2048.0)]
+    fit = MeasuredStepTime.fit(samples)
+    assert fit.rel_err(samples) < 1e-6
+    pred = DecodeStepPredictor.from_profile(samples)
+    assert pred.step_time(3, 300.0) == pytest.approx(truth(3, 300.0),
+                                                     rel=1e-6)
+    # EMA calibration still layers on top of the measured prior
+    pred.observe(3, 300.0, 2.0 * truth(3, 300.0))
+    assert pred.scale > 1.0
+
+
+def test_measured_step_time_stays_monotone_on_noisy_profile():
+    """A noisy profile where larger batches happened to measure faster must
+    NOT fit a surface that decreases with B or ctx — negative slope terms
+    are clamped at fit time (a bigger-is-faster latency model would invert
+    S-EDF slack ranking)."""
+    noisy = [(1, 128.0, 5e-3), (2, 128.0, 4e-3), (4, 128.0, 3e-3),
+             (8, 128.0, 2.5e-3)]
+    fit = MeasuredStepTime.fit(noisy)
+    assert fit.c1 >= 0.0 and fit.c2 >= 0.0
+    for ctx in (64.0, 512.0):
+        ts = [fit(b, ctx) for b in (1, 2, 4, 8)]
+        assert ts == sorted(ts)
+    assert fit(4, 1024.0) >= fit(4, 64.0)
+
+
+def test_profile_step_times_feeds_predictor(model):
+    samples = profile_step_times(model, CFG, batch_sizes=(1, 2),
+                                 ctx=64, decode_tokens=3, warmup=1,
+                                 kv_block_size=64)
+    assert [b for b, _, _ in samples] == [1, 2]
+    assert all(t > 0 for _, _, t in samples)
+    pred = DecodeStepPredictor.from_profile(samples)
+    assert pred.step_time(2, 64.0) > 0

@@ -210,10 +210,14 @@ def test_unbounded_sedf_is_plain_processor_sharing():
     assert runs["fcfs"] == runs["s-edf"]
 
 
-def test_one_decode_instance_cluster_parity_with_standalone_sim(monkeypatch):
+@pytest.mark.parametrize("policy", ["fcfs", "s-edf"])
+def test_one_decode_instance_cluster_parity_with_standalone_sim(monkeypatch,
+                                                                policy):
     """ClusterSim with ONE decode instance must reproduce a standalone
     DecodeSim fed the same join schedule exactly — the cluster layer adds
-    routing, not decode semantics."""
+    routing, not decode semantics (checked at decode_max_batch > 1 for both
+    admission policies: the slot-capped continuous-batching model the real
+    runtime now implements)."""
     joins = []
 
     class Recorder(DecodeSim):
@@ -226,7 +230,7 @@ def test_one_decode_instance_cluster_parity_with_standalone_sim(monkeypatch):
                                 output_mean=128, tbt_slo=0.02))
     res = simulate_cluster("flowprefill", reqs, num_instances=2,
                            dispatch="least-loaded", decode_instances=1,
-                           decode_policy="s-edf", decode_max_batch=4)
+                           decode_policy=policy, decode_max_batch=4)
     assert res.decoded == len(reqs) and joins
     cluster_out = {r.rid: (r.finish_time, r.mean_tpot) for r in res.requests}
 
@@ -239,7 +243,8 @@ def test_one_decode_instance_cluster_parity_with_standalone_sim(monkeypatch):
         r.decode_preemptions = 0
     heap = []
     dec = DecodeSim(DEC_COST, heap, itertools.count(10 ** 6), max_batch=4,
-                    scheduler=DecodeSchedulerCore(policy="s-edf"))
+                    scheduler=DecodeSchedulerCore(
+                        policy=policy, preempt=(policy == "s-edf")))
     _drive(dec, heap, [(t, by_rid[rid]) for t, rid in joins])
     assert len(dec.finished) == len(reqs)
     for r in by_rid.values():
@@ -330,9 +335,13 @@ def test_runtime_decode_instance_sedf_preempts_at_token_boundary(monkeypatch):
     from repro.core.predictor import DecodeStepPredictor
 
     di = _install_stub(monkeypatch)
+    # ema_alpha=0 pins the calibration scale: under machine load the sleepy
+    # stub's measured steps overshoot, which would inflate t_step until the
+    # tight stream ranks as doomed (doomed streams never preempt)
     inst = di.DecodeInstance(
         None, None, decode_tokens=15, policy="s-edf",
-        step_predictor=DecodeStepPredictor(prior=lambda b, c: 0.02))
+        step_predictor=DecodeStepPredictor(prior=lambda b, c: 0.02,
+                                           ema_alpha=0.0))
     try:
         # tight = urgent but FEASIBLE (a doomed stream must never preempt:
         # ~30ms/token calibrated estimate x 15 tokens needs < the TBT budget)
