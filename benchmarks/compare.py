@@ -36,8 +36,9 @@ import sys
 from typing import Dict, List, Tuple
 
 # substrings of metric names that are gated, higher is better ("speedup"
-# covers the fig21 measured decode-batching scaling curve)
-GATED = ("goodput", "attainment", "_vs_", "share", "speedup")
+# covers the fig21/fig22 measured wall-clock curves, "hit_rate" the fig22
+# prefix-cache residency outcomes)
+GATED = ("goodput", "attainment", "_vs_", "share", "speedup", "hit_rate")
 # substrings of metric names that are gated, LOWER is better (error families)
 GATED_LOWER = ("rel_err",)
 # metric-name substrings never gated (runner-speed or error bookkeeping)

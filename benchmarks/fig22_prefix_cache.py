@@ -1,0 +1,193 @@
+"""Fig. 22 (prefix-sharing extension) — skip recomputing shared prompt
+prefixes end-to-end: goodput/TTFT vs prefix-cache hit rate, and the measured
+real-runtime speedup of a cached prefill.
+
+Production prompts share massive prefixes (per-task system prompts,
+multi-turn resubmission), yet without sharing every request prefills from
+token 0 — the single largest avoidable cost on the TTFT path FlowPrefill
+optimizes. This figure evaluates the full stack built on block-level prefix
+sharing: the `PrefixBlockManager` residency model (refcounts + trie + LRU),
+`PrefillCostModel.op_durations(prefix=...)` suffix-only pricing, and the
+`prefix-affinity` dispatch policy that routes a request to the instance
+holding its prefix KV unless queue pressure outweighs the saving
+(docs/SCHEDULING.md).
+
+Panels:
+
+  a) headline sweep — 4xA800 prefill pool on a ~60%-hit-rate trace
+     (class-shared system prompts + multi-turn resubmission,
+     `TraceConfig.shared_prefix_frac` / `multi_turn_prob`), TTFT goodput of:
+       * no-sharing        (capacity-weighted, the pre-sharing system),
+       * sharing + blind   (capacity-weighted: hits only by luck of routing),
+       * sharing + prefix-affinity.
+     Acceptance (CI-gated): prefix-affinity >= 2x no-sharing goodput, AND
+     prefix-affinity > blind (the dispatch policy matters, not just the
+     cache — an affinity-blind router scatters multi-turn follow-ups away
+     from their conversation's KV).
+  b) hit-rate sweep — the same three-way comparison across trace mixes from
+     no sharing to heavy multi-turn: goodput gain vs achieved hit rate.
+  c) real runtime — a `PrefillInstance` with a prefix-sharing `PagedKVCache`
+     on the tiny bench model: measured prefill latency of a fully-cached
+     prompt (suffix-only compute: trie probe -> pinned prefix ->
+     `SegmentedPrefill` resumes at the cached operator offset) vs the same
+     prompt cold. Acceptance (CI-gated): warm >= 3x faster. Wall-clock
+     convention (docs/BENCHMARKS.md): the committed baseline is the
+     conservative tolerance-compensated threshold, not one machine's
+     measurement (steady-state CPU measures 20-40x).
+"""
+import dataclasses
+import time
+
+from repro.core.metrics import max_goodput
+from repro.sim.cluster import simulate_cluster
+from repro.traces.qwentrace import TraceConfig, generate, oracle_hit_rate
+
+RATES = [8, 16, 24, 32, 48, 64]
+N_INSTANCES = 4
+CACHE_BLOCKS = 2048                  # per-instance residency (x128 tokens)
+HEADLINE = dict(shared_prefix_frac=0.25, multi_turn_prob=0.75)  # ~60% hit
+HIT_PROBE_RATE = 16                  # rate the achieved hit rate is read at
+DURATION = 30
+SEED = 3
+
+# (label, trace mix) for the hit-rate sweep — no sharing to heavy multi-turn
+SWEEP = (
+    ("mix0", dict(shared_prefix_frac=0.0, multi_turn_prob=0.0)),
+    ("mix1", dict(shared_prefix_frac=0.15, multi_turn_prob=0.3)),
+    ("mix2", dict(shared_prefix_frac=0.25, multi_turn_prob=0.55)),
+    ("mix3", HEADLINE),
+)
+
+VARIANTS = (
+    ("no-sharing", dict(dispatch="capacity-weighted")),
+    ("blind", dict(dispatch="capacity-weighted",
+                   prefix_cache_blocks=CACHE_BLOCKS)),
+    ("prefix-affinity", dict(dispatch="prefix-affinity",
+                             prefix_cache_blocks=CACHE_BLOCKS)),
+)
+
+
+def _trace(rate, mix):
+    return generate(TraceConfig(rate=rate, duration=DURATION, seed=SEED,
+                                **mix))
+
+
+def _goodput(mix, variant_kw):
+    atts, hits = [], {}
+    for rate in RATES:
+        res = simulate_cluster("flowprefill", _trace(rate, mix),
+                               num_instances=N_INSTANCES, **variant_kw)
+        atts.append(res.attainment)
+        hits[rate] = res.prefix_hit_rate
+    return max_goodput(RATES, atts), atts, hits
+
+
+def run(model="llama3-8b"):
+    rows = []
+    # (a) headline: three variants on the ~60%-hit trace
+    goodputs, hit_at = {}, {}
+    for name, kw in VARIANTS:
+        g, atts, hits = _goodput(HEADLINE, kw)
+        goodputs[name], hit_at[name] = g, hits[HIT_PROBE_RATE]
+        rows.append((f"fig22/{model}/{name}/goodput_req_s", round(g, 2),
+                     "TTFT att@rates=" + "|".join(f"{a:.2f}" for a in atts)))
+    rows.append((f"fig22/{model}/hit_rate",
+                 round(hit_at["prefix-affinity"], 3),
+                 f"prefix-affinity achieved hit rate at {HIT_PROBE_RATE} "
+                 f"req/s (trace oracle "
+                 f"{oracle_hit_rate(_trace(HIT_PROBE_RATE, HEADLINE)):.3f})"))
+    rows.append((f"fig22/{model}/blind_hit_rate",
+                 round(hit_at["blind"], 3),
+                 "affinity-blind dispatch achieved hit rate (same trace/"
+                 "cache): the routing, not just the cache, makes the hits"))
+    ns = goodputs["no-sharing"]
+    if ns > 0:
+        rows.append((f"fig22/{model}/prefix-affinity_vs_no-sharing",
+                     round(goodputs["prefix-affinity"] / ns, 2),
+                     "TTFT-goodput ratio (acceptance: >= 2.0 at the ~60% "
+                     "hit-rate trace)"))
+    if goodputs["blind"] > 0:
+        rows.append((f"fig22/{model}/prefix-affinity_vs_blind",
+                     round(goodputs["prefix-affinity"] / goodputs["blind"],
+                           2),
+                     "goodput ratio over affinity-blind capacity-weighted "
+                     "dispatch with the SAME cache (acceptance: > 1.0)"))
+
+    # (b) hit-rate sweep: goodput gain vs achieved hit rate
+    for label, mix in SWEEP:
+        g_ns, _, _ = _goodput(mix, dict(VARIANTS[0][1]))
+        g_aff, _, hits = _goodput(mix, dict(VARIANTS[2][1]))
+        ratio = g_aff / g_ns if g_ns > 0 else 0.0
+        rows.append((f"fig22/{model}/sweep/{label}/gain_vs_hit_rate",
+                     round(ratio, 2),
+                     f"affinity/no-sharing goodput at achieved hit rate "
+                     f"{hits[HIT_PROBE_RATE]:.2f} "
+                     f"(oracle {oracle_hit_rate(_trace(HIT_PROBE_RATE, mix)):.2f})"))
+
+    # (c) real runtime: measured warm-vs-cold prefill on the bench model
+    rows.extend(run_runtime(model))
+    return rows
+
+
+def run_runtime(model="llama3-8b", *, prompt_tokens=2048, chunk=512,
+                repeats=3):
+    """Measured `PrefillInstance` latency: identical prompt cold (first
+    submission: full prefill + cache insert) vs warm (second submission:
+    trie hit, suffix-only compute — here a single live token). Shapes are
+    warmed first so the numbers are steady-state, not compile time."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_tiny_config
+    from repro.core import Request, SchedulerCore, TTFTPredictor
+    from repro.models import init_params
+    from repro.serving.prefill_instance import PrefillInstance
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pred = TTFTPredictor(coeffs=np.array([1e-6, 0.0]), floor=0.0)
+    inst = PrefillInstance(
+        params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
+        max_seq=prompt_tokens, chunk_tokens=chunk, prefix_share=True,
+        prefix_cache_blocks=16 * (repeats + 2) * 2)
+    rng = np.random.default_rng(0)
+
+    def run_once(toks):
+        req = Request(num_tokens=len(toks), slo=600.0,
+                      arrival=time.monotonic())
+        t0 = time.monotonic()
+        inst.submit_request(req, toks)
+        assert inst.drain(600.0)
+        return time.monotonic() - t0, req
+
+    try:
+        warmup = rng.integers(0, cfg.vocab_size, prompt_tokens)
+        run_once(warmup)                       # compile cold shapes
+        run_once(warmup)                       # compile warm (suffix) shapes
+        colds, warms = [], []
+        hit = 0
+        for _ in range(repeats):
+            toks = rng.integers(0, cfg.vocab_size, prompt_tokens)
+            c, _ = run_once(toks)
+            w, wr = run_once(toks)
+            colds.append(c)
+            warms.append(w)
+            hit = wr.prefix_hit
+    finally:
+        inst.shutdown()
+    cold = float(np.median(colds))
+    warm = float(np.median(warms))
+    return [
+        (f"fig22/{model}/real/cold_ms", round(cold * 1e3, 1),
+         f"median full prefill of {prompt_tokens} tokens (measured, "
+         f"runner-speed dependent — not gated)"),
+        (f"fig22/{model}/real/warm_ms", round(warm * 1e3, 1),
+         f"median cached-prefix prefill, hit={hit} tokens (suffix-only "
+         f"compute; measured — not gated)"),
+        (f"fig22/{model}/real/warm_vs_cold_speedup",
+         round(cold / warm, 2),
+         "measured prefill speedup on a fully-cached prefix (acceptance: "
+         ">= 3.0; committed baseline is the tolerance-compensated "
+         "conservative threshold, steady-state CPU measures 20-40x)"),
+    ]

@@ -10,9 +10,13 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
           [--hetero a800,a800,a100,a100]   # mixed-hardware pool
           [--decode-sched s-edf] [--decode-max-batch 16]
           [--decode-migration]             # TBT-slack-aware decode stage
+          [--prefix-share]                 # shared-prefix trace + per-
+          [--prefix-cache-blocks 2048]     # instance prefix KV caches
 
   --real  — a tiny REAL model on CPU: Proxy + N threaded PrefillInstances +
-            a DecodeInstance, load-aware dispatch against live backlog:
+            a DecodeInstance, load-aware dispatch against live backlog
+            (--prefix-share turns on the real prefix-sharing PagedKVCache:
+            repeated prompts prefill suffix-only):
       PYTHONPATH=src python examples/serve_cluster.py --real [--requests 10]
 """
 import argparse
@@ -21,7 +25,7 @@ from repro.sim.cluster import simulate_cluster
 from repro.traces.qwentrace import TraceConfig, generate
 
 POLICIES = ["round-robin", "least-loaded", "deflection",
-            "capacity-weighted", "decode-aware"]
+            "capacity-weighted", "decode-aware", "prefix-affinity"]
 
 
 def run_sim(args):
@@ -30,15 +34,21 @@ def run_sim(args):
     pool = " hetero[" + args.hetero + "]" if hardware else ""
     print(f"== ClusterSim: {n} prefill + {n} decode instances{pool}, "
           f"rate={args.rate} req/s, burstiness={args.burstiness} ==")
+    share = dict(shared_prefix_frac=0.25, multi_turn_prob=0.75) \
+        if args.prefix_share else {}
     reqs = generate(TraceConfig(rate=args.rate, duration=args.duration,
                                 seed=args.seed, burstiness=args.burstiness,
-                                output_mean=200, tbt_slo=args.tbt_slo))
+                                output_mean=200, tbt_slo=args.tbt_slo,
+                                **share))
+    cache_blocks = args.prefix_cache_blocks if args.prefix_share else 0
     print(f"{len(reqs)} requests "
-          f"({sum(r.num_tokens for r in reqs)} prefill tokens)")
+          f"({sum(r.num_tokens for r in reqs)} prefill tokens)"
+          + (f", prefix caches {cache_blocks} blocks/instance"
+             if cache_blocks else ""))
     policies = POLICIES if args.policy == "all" else [args.policy]
     print(f"{'dispatch':>17s} | {'TTFT att':>8s} {'e2e att':>8s} "
           f"{'imbalance':>9s} {'preempts':>8s} {'dec-pre':>7s} "
-          f"{'migr':>4s} | per-instance dispatched")
+          f"{'migr':>4s} {'hit':>5s} | per-instance dispatched")
     for policy in policies:
         res = simulate_cluster("flowprefill", reqs,
                                num_instances=n, dispatch=policy,
@@ -46,11 +56,13 @@ def run_sim(args):
                                decode_hardware=hardware,
                                decode_policy=args.decode_sched,
                                decode_max_batch=args.decode_max_batch,
-                               decode_migration=args.decode_migration)
+                               decode_migration=args.decode_migration,
+                               prefix_cache_blocks=cache_blocks)
         print(f"{policy:>17s} | {res.attainment:8.3f} "
               f"{res.e2e_attainment:8.3f} {res.imbalance:9.2f} "
               f"{res.preemptions:8d} {res.decode_preemptions:7d} "
-              f"{res.migrations:4d} | {res.dispatched}")
+              f"{res.migrations:4d} {res.prefix_hit_rate:5.2f} "
+              f"| {res.dispatched}")
 
 
 def run_real(args):
@@ -88,9 +100,15 @@ def run_real(args):
     pred = TTFTPredictor.fit(xs, ys)
 
     policy = args.policy if args.policy != "all" else "least-loaded"
+    # --prefix-share: per-instance prefix-sharing PagedKVCache (each
+    # instance keeps its own trie; the executor itself is stateless and
+    # stays shared) — resubmitted prompts prefill suffix-only
     insts = [PrefillInstance(
         params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
-        max_seq=max_seq, executor=ex) for _ in range(args.instances)]
+        max_seq=max_seq, executor=ex,
+        prefix_share=args.prefix_share,
+        prefix_cache_blocks=args.prefix_cache_blocks)
+        for _ in range(args.instances)]
     # the decode flags apply here too: --decode-sched picks the instances'
     # admission policy, --decode-max-batch the continuous-batching slot cap
     # (the REAL batched jitted step, paged KV), --decode-migration needs
@@ -161,6 +179,15 @@ def main():
     ap.add_argument("--decode-migration", action="store_true",
                     help="cost-gated migration of queued decodes off "
                     "instances past the TBT knee")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="block-level prefix sharing: sim mode generates a "
+                    "shared-prefix trace (system prompts + multi-turn) and "
+                    "gives every instance a prefix cache; real mode turns "
+                    "on the prefix-sharing PagedKVCache (pair with "
+                    "--policy prefix-affinity to route onto cached KV)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=2048,
+                    help="prefix cache capacity per instance, in KV blocks "
+                    "of 128 tokens (with --prefix-share)")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--requests", type=int, default=10,

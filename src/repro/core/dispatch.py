@@ -29,6 +29,15 @@ the arriving request* and picks the instance for it:
     prefills are deflected away from instances whose decode batch would blow
     the token-by-token SLO right after handoff (the load-aware prefill
     deflection direction of arXiv 2607.02043 applied to downstream pressure).
+  * ``prefix-affinity`` — the decode-aware score MINUS the predicted TTFT
+    saved by the instance's prefix cache (`InstanceLoad.ttft_saved`, priced
+    by the owner from its per-instance predictor/residency model): route a
+    request to the instance already holding its prompt prefix's KV — unless
+    that instance's queue pressure outweighs the recompute saved. Affinity
+    deliberately concentrates load where prefixes live, so the queue term
+    (drain time, which grows with backlog) is what keeps it from re-creating
+    the hotspot problem load-aware deflection exists to solve; with no hits
+    anywhere the score degrades exactly to decode-aware/capacity-weighted.
 
 The load measure matters: under S-EDF with cheap operator-level preemption,
 a long or already-doomed (negative-slack) request in an instance's queue does
@@ -75,6 +84,11 @@ class InstanceLoad:
     # downstream decode TBT pressure were this request's decode to join now:
     # predicted step time / TBT SLO (1.0 = exactly at the SLO knee)
     decode_pressure: float = 0.0
+    # prefix sharing: tokens of THIS request's prompt cached at the
+    # instance, and the predicted seconds of prefill service time that hit
+    # would save (owner-priced: predictor(n) - predictor(n - hit))
+    prefix_hit: int = 0
+    ttft_saved: float = 0.0
 
     @property
     def outstanding_tokens(self) -> float:
@@ -142,6 +156,8 @@ class DispatchPolicy:
     needs_loads = True        # False: owner may pass zeroed load snapshots
     needs_decode_pressure = False  # True: owner attaches decode_pressure
                                    # (and pairs prefill->decode instances)
+    needs_prefix = False      # True: owner attaches prefix_hit/ttft_saved
+                              # from its per-instance residency model
 
     def __init__(self, predictor: Optional[TTFTPredictor] = None):
         self.predictor = predictor
@@ -254,10 +270,40 @@ class DecodeAwareDispatch(DispatchPolicy):
                                           ld.instance_id)).instance_id
 
 
+class PrefixAffinityDispatch(DecodeAwareDispatch):
+    """Prefix-cache-affinity dispatch: the decode-aware score minus the
+    predicted TTFT saved by each instance's cached prefix of THIS prompt.
+
+    score(i) = drain_time * (1 + penalty * decode excess)
+               - affinity_weight * ttft_saved(i)
+
+    Both terms are seconds (drain time is capacity-normalized backlog;
+    ttft_saved is predictor-priced recompute), so `affinity_weight` is a
+    pure preference knob: 1.0 trades a second of queueing for a second of
+    saved prefill. The subtraction — not a hard affinity pin — is the
+    load-aware deflection tension: once the prefix-holding instance's
+    backlog exceeds the saving, colder instances win and the affinity
+    stream SPILLS, spreading the hot prefix to a second cache instead of
+    melting the first (cf. load-aware prefill deflection, arXiv 2607.02043).
+    With zero hits everywhere this IS decode-aware dispatch (and, with no
+    decode pressure attached, capacity-weighted JSQ)."""
+    name = "prefix-affinity"
+    needs_prefix = True
+
+    def __init__(self, predictor: Optional[TTFTPredictor] = None,
+                 knee: float = 0.85, penalty: float = 8.0,
+                 affinity_weight: float = 1.0):
+        super().__init__(predictor, knee=knee, penalty=penalty)
+        self.affinity_weight = affinity_weight
+
+    def _score(self, req: Request, ld: InstanceLoad) -> float:
+        return super()._score(req, ld) - self.affinity_weight * ld.ttft_saved
+
+
 DISPATCH_POLICIES = {
     p.name: p for p in
     (RoundRobinDispatch, LeastLoadedDispatch, DeflectionDispatch,
-     CapacityWeightedDispatch, DecodeAwareDispatch)
+     CapacityWeightedDispatch, DecodeAwareDispatch, PrefixAffinityDispatch)
 }
 
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 _rid_counter = itertools.count()
 
@@ -35,6 +35,16 @@ class Request:
     # batching: rids co-executing with this request (paper Alg. 1)
     batch_members: List[int] = field(default_factory=list)
     batch_tokens: int = 0                # aggregate token count of the batch
+
+    # prefix sharing: the prompt's block hash chain (one key per FULL
+    # kv-cache block, repro.core.prefixcache.block_keys semantics) — the
+    # dispatch-visible signal prefix-affinity routes on. None = opaque
+    # prompt (no sharing possible). Populated by the trace generator (sim)
+    # or derived from token ids (runtime).
+    prefix_hash: Optional[Tuple[int, ...]] = None
+    # tokens of this prompt served from the prefix cache of the instance it
+    # was dispatched to (set at dispatch; 0 = cold). Runtime-owned.
+    prefix_hit: int = 0
 
     # decode phase (cluster-level end-to-end accounting; 0 = prefill-only)
     output_tokens: int = 0               # tokens to decode after prefill

@@ -44,6 +44,15 @@ def main():
                     help="continuous-batching decode slot cap (batched "
                     "jitted step + paged KV; families without a dense "
                     "per-layer KV cache fall back to 1)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="prefix-sharing prompt KV cache: resubmitted "
+                    "prompt prefixes (this launcher's mix reuses a few "
+                    "fixed lengths of random tokens, so exact repeats "
+                    "occur) are served from cache and prefilled "
+                    "suffix-only")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=512,
+                    help="prefix cache capacity in 128-token KV blocks "
+                    "(with --prefix-share)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -71,7 +80,9 @@ def main():
     core = SchedulerCore(predictor=pred, policy=args.policy,
                          batch_budget=args.batch_budget)
     inst = PrefillInstance(params, cfg, core, max_seq=args.max_seq,
-                           executor=executor)
+                           executor=executor,
+                           prefix_share=args.prefix_share,
+                           prefix_cache_blocks=args.prefix_cache_blocks)
     from repro.models.model import supports_ragged_decode
     dmb = args.decode_max_batch if supports_ragged_decode(cfg) else 1
     dec = DecodeInstance(params, cfg, decode_tokens=args.decode_tokens,
@@ -81,6 +92,12 @@ def main():
     try:
         mix = [(256, 1.5, "text", 0.7), (args.max_seq // 2, 15.0, "search", 0.2),
                (args.max_seq, 25.0, "file", 0.1)]
+        # with --prefix-share: each task class gets a fixed system-prompt
+        # template covering half its prompt — repeat submissions hit the
+        # prefix cache and prefill only the random tail
+        templates = {task: rng.integers(0, cfg.vocab_size, tokens // 2)
+                     for tokens, _, task, _ in mix} if args.prefix_share \
+            else {}
         for _ in range(args.requests):
             r = rng.random()
             acc = 0.0
@@ -90,7 +107,11 @@ def main():
                     break
             req = Request(num_tokens=tokens, slo=slo, task_type=task,
                           arrival=time.monotonic())
-            proxy.submit(req, rng.integers(0, cfg.vocab_size, tokens))
+            tail = rng.integers(0, cfg.vocab_size,
+                                tokens - len(templates.get(task, ())))
+            toks = np.concatenate([templates[task], tail]) \
+                if args.prefix_share else tail
+            proxy.submit(req, toks)
             time.sleep(float(rng.exponential(0.5)))
         proxy.drain(600.0)
         time.sleep(0.5)
@@ -101,6 +122,10 @@ def main():
         print(f"rounds={rep['scheduling_rounds']} "
               f"blocking_mean={rep['blocking_mean']*1e3:.1f}ms "
               f"decoded={len(dec.finished)}")
+        if args.prefix_share:
+            print(f"prefix hits={rep['prefix_hits']} "
+                  f"({rep['prefix_hit_tokens']} prompt tokens served "
+                  f"from cache)")
     finally:
         proxy.shutdown()
 

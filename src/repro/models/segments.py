@@ -17,6 +17,14 @@ reproduce the paper's Fig. 12 operator-vs-layer comparison.
 Supports chunked prefill (Fig. 15 interplay): `chunk_tokens > 0` splits the
 prompt; each chunk runs all layers with q_offset resumption via the flash
 kernel's kv_len/q_offset scalars.
+
+Prefix-cache resumption: ``start(..., prefix_len=P, prefix_k/v=...)`` seeds
+the first P cache positions with KV gathered from a shared prefix cache and
+starts the chunk loop at operator offset P — the same q_offset mechanism
+chunking already uses, so a P-token prefix hit is pure skipped compute
+(attention still reads the seeded prefix through kv_len). P is capped at
+prompt_len - 1 by callers: the last position must be computed live for the
+first-token logits.
 """
 from __future__ import annotations
 
@@ -136,6 +144,8 @@ class PrefillTask:
     n_chunks: int
     chunk: int
     total_segments: int
+    start_offset: int = 0        # first token computed (prefix-cache hit:
+                                 # positions < start_offset were seeded)
     cursor: int = 0
     logits: Optional[jax.Array] = None
     # representative output of the last dispatched segment — the Execution
@@ -224,22 +234,43 @@ class SegmentedPrefill:
         self._head_fn = head_fn
 
     # --- plan geometry -------------------------------------------------------
-    def n_chunks(self, prompt_len: int) -> int:
+    def n_chunks(self, prompt_len: int, prefix_len: int = 0) -> int:
+        todo = prompt_len - prefix_len
         if not self.chunk_tokens:
             return 1
-        return (prompt_len + self.chunk_tokens - 1) // self.chunk_tokens
+        return (todo + self.chunk_tokens - 1) // self.chunk_tokens
 
-    def segments_for(self, prompt_len: int) -> int:
-        return self.n_chunks(prompt_len) * self._segments_per_chunk + 1  # +head
+    def segments_for(self, prompt_len: int, prefix_len: int = 0) -> int:
+        return self.n_chunks(prompt_len, prefix_len) \
+            * self._segments_per_chunk + 1                          # +head
 
     # --- lifecycle -------------------------------------------------------------
-    def start(self, tokens: jax.Array, vision_embeds=None,
-              lens=None) -> PrefillTask:
+    def start(self, tokens: jax.Array, vision_embeds=None, lens=None,
+              prefix_len: int = 0, prefix_k=None,
+              prefix_v=None) -> PrefillTask:
+        """Begin a prefill. ``prefix_len > 0`` resumes over a cached prompt
+        prefix: `prefix_k`/`prefix_v` (nL, B, prefix_len, K, hd) seed the
+        first positions of the KV cache and the chunk loop starts at
+        operator offset `prefix_len` — suffix-only compute. Requires
+        prefix_len < min(lens) (the last token's logits need a live pass)
+        and no vision embeds (a VLM's vision span must be recomputed)."""
         B, S = tokens.shape
         cfgc = self.cfg
         K, hd = cfgc.num_kv_heads, cfgc.resolved_head_dim
         nL = cfgc.num_layers
         kc = jnp.zeros((nL, B, self.max_seq, K, hd), self.cache_dtype)
+        vc = jnp.zeros_like(kc)
+        if prefix_len:
+            if vision_embeds is not None:
+                raise ValueError("prefix resumption over vision embeds is "
+                                 "not supported (recompute the vision span)")
+            if prefix_len >= S:
+                raise ValueError(f"prefix_len={prefix_len} must leave at "
+                                 f"least one live token (prompt {S})")
+            kc = kc.at[:, :, :prefix_len].set(
+                prefix_k.astype(self.cache_dtype))
+            vc = vc.at[:, :, :prefix_len].set(
+                prefix_v.astype(self.cache_dtype))
         state: State = {
             "tokens": tokens,
             "lens": (jnp.full((B,), S, jnp.int32) if lens is None
@@ -247,20 +278,20 @@ class SegmentedPrefill:
             "h": None,                    # set per-chunk
             "tmp": None,
             "k_cache": kc,
-            "v_cache": jnp.zeros_like(kc),
+            "v_cache": vc,
             "h_full": jnp.zeros((B, S, cfgc.d_model), jnp.float32),
         }
         if vision_embeds is not None:
             state["vision_embeds"] = vision_embeds
-        chunk = self.chunk_tokens or S
+        chunk = self.chunk_tokens or (S - prefix_len)
         task = PrefillTask(
-            state=state, prompt_len=S,
-            n_chunks=self.n_chunks(S), chunk=chunk,
-            total_segments=self.segments_for(S))
+            state=state, prompt_len=S, start_offset=prefix_len,
+            n_chunks=self.n_chunks(S, prefix_len), chunk=chunk,
+            total_segments=self.segments_for(S, prefix_len))
         return task
 
     def _chunk_bounds(self, task: PrefillTask, chunk_idx: int) -> Tuple[int, int]:
-        lo = chunk_idx * task.chunk
+        lo = task.start_offset + chunk_idx * task.chunk
         hi = min(lo + task.chunk, task.prompt_len)
         return lo, hi
 

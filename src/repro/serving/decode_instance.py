@@ -91,7 +91,9 @@ class DecodeInstance:
                  decode_max_batch: int = 1,
                  batch_buckets: Sequence[int] = (1, 2, 4, 8),
                  kv_block_size: int = 128,
-                 attn_impl: str = "naive"):
+                 attn_impl: str = "naive",
+                 prefix_share: bool = False,
+                 kv_max_blocks: int = 0):
         if decode_max_batch > 1 and not supports_ragged_decode(cfg):
             raise ValueError(
                 f"decode_max_batch={decode_max_batch} needs the batched "
@@ -108,6 +110,16 @@ class DecodeInstance:
         self.step_pred = step_predictor
         self.attn_impl = attn_impl
         self.kv_block_size = kv_block_size
+        self.prefix_share = prefix_share   # pool created in share mode:
+                                           # free() decrements refcounts and
+                                           # parks trie-registered blocks in
+                                           # the LRU cache instead of eagerly
+                                           # freeing
+        self.kv_max_blocks = kv_max_blocks  # admission-growth cap (0 = un-
+                                            # bounded, the pre-cap behavior):
+                                            # a leak then surfaces as
+                                            # declined admissions instead of
+                                            # unbounded pool doubling
         # batch-size buckets: padded shapes the jitted step may see — bounds
         # recompiles to len(buckets) x len(width buckets)
         self._b_buckets = sorted(
@@ -361,7 +373,9 @@ class DecodeInstance:
         if self.kv is None:
             blocks = max((2 * self.decode_max_batch + 1) * need_blocks + 1, 8)
             self.kv = PagedKVCache(L_, blocks, self.kv_block_size, K, hd,
-                                   dtype=k.dtype)
+                                   dtype=k.dtype,
+                                   prefix_share=self.prefix_share,
+                                   max_blocks=self.kv_max_blocks)
             # scratch sequence: the slot padding rows of the batched step
             # write into / gather from (never read through a kv_len mask)
             self.kv.allocate(_SCRATCH_SEQ, 1)
@@ -395,7 +409,17 @@ class DecodeInstance:
                 can_ever_fit = need_blocks <= self.kv.num_blocks - 1
                 if can_ever_fit and self._in_pool and not force:
                     return False
-                self.kv.grow(max(need_blocks, self.kv.num_blocks))
+                try:
+                    # capped doubling (same growth as before when no
+                    # kv_max_blocks is set)
+                    self.kv.grow_for(need_blocks)
+                except MemoryError:
+                    if not force:
+                        return False    # cap reached: stream stays queued
+                                        # (visible backlog, not silent OOM)
+                    # the no-resident deadlock guard must make progress:
+                    # exceed the cap rather than wedge the instance
+                    self.kv.grow(max(need_blocks, self.kv.num_blocks))
             self.kv.allocate(rid, need_tokens)
             self.kv.write_prompt(rid, job.cache["k"][:, 0, :pos],
                                  job.cache["v"][:, 0, :pos])
@@ -535,6 +559,10 @@ class DecodeInstance:
                 self._finish(j, now)
                 self._resident.pop(rid, None)
                 with self._kv_lock:
+                    # a refcount DECREMENT, not an eager free: on a
+                    # prefix-sharing pool blocks other streams still
+                    # reference stay live, and trie-registered prompt
+                    # blocks stay cached for the next matching prompt
                     self.kv.free(rid)
                 self._in_pool.discard(rid)
             if done:

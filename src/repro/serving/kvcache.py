@@ -13,9 +13,22 @@ and the continuous-batching decode runtime uses the BATCHED pool I/O:
     whole resident set as (L, B, T_pad, K, hd) dense views for the batched
     decode step, rows padded to a common block count.
 
-Tested standalone (tests/test_property.py, tests/test_decode_batched.py)
-incl. hypothesis properties: no double allocation, free-list conservation,
-data round-trip.
+PREFIX SHARING (``prefix_share=True``): block accounting is delegated to a
+`repro.core.prefixcache.PrefixBlockManager` — per-block refcounts, a prefix
+trie keyed on token-id block hashes (`block_keys`), LRU retention of
+refcount-0 blocks instead of eager free, and copy-on-divergence when a write
+lands in a shared or cached block. ``allocate(seq, n, keys=...)`` then pins
+the cached prefix and allocates only the suffix; `free` becomes a refcount
+decrement (blocks whose content is registered in the trie stay CACHED for
+the next prompt that starts the same way). The default (``prefix_share=
+False``) keeps the original allocator bit-for-bit: same LIFO free list, same
+eager free, pinned by tests/test_prefix_cache.py.
+
+Tested standalone (tests/test_property.py, tests/test_decode_batched.py,
+tests/test_prefix_cache.py) incl. hypothesis properties: no double
+allocation, free-list conservation under share/free interleavings, no block
+reachable from two diverged suffixes, eviction never dropping a pinned
+block, data round-trip.
 """
 from __future__ import annotations
 
@@ -26,6 +39,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.prefixcache import PrefixBlockManager, block_keys
+
+__all__ = ["BlockTable", "PagedKVCache", "block_keys"]
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -68,60 +85,147 @@ class BlockTable:
     seq_id: int
     blocks: List[int] = field(default_factory=list)
     length: int = 0                      # tokens currently stored
+    prefix_blocks: int = 0               # leading blocks served from the
+                                         # shared cache (prefix_share only)
 
 
 class PagedKVCache:
-    """Block pool shared by all sequences on one decode instance.
+    """Block pool shared by all sequences on one instance.
 
     Storage layout: k/v pools of shape (L, num_blocks, block_size, K, hd).
+
+    ``prefix_share=True`` turns on block-level prefix sharing (module
+    docstring); ``max_blocks`` caps `extend`'s geometric pool growth
+    (0 = unbounded — growth doubles the pool, so shapes occur O(log) times).
     """
 
     def __init__(self, num_layers: int, num_blocks: int, block_size: int,
-                 num_kv_heads: int, head_dim: int, dtype=jnp.float32):
+                 num_kv_heads: int, head_dim: int, dtype=jnp.float32,
+                 prefix_share: bool = False, max_blocks: int = 0):
         self.num_layers = num_layers
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.max_blocks = max_blocks
         shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
         self.k_pool = jnp.zeros(shape, dtype)
         self.v_pool = jnp.zeros(shape, dtype)
-        self._free: List[int] = list(range(num_blocks))
+        self.prefix_share = prefix_share
+        self._mgr: Optional[PrefixBlockManager] = \
+            PrefixBlockManager(num_blocks) if prefix_share else None
+        self._free: List[int] = [] if prefix_share \
+            else list(range(num_blocks))
         self._tables: Dict[int, BlockTable] = {}
 
     # ------------------------------------------------------------ allocation
     @property
     def free_blocks(self) -> int:
+        if self._mgr is not None:
+            return self._mgr.free_blocks
         return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks retained for prefix reuse (share mode only)."""
+        return self._mgr.cached_blocks if self._mgr is not None else 0
 
     def blocks_needed(self, num_tokens: int) -> int:
         return (num_tokens + self.block_size - 1) // self.block_size
 
     def can_allocate(self, num_tokens: int) -> bool:
+        if self._mgr is not None:
+            return self.blocks_needed(num_tokens) <= self._mgr.available()
         return self.blocks_needed(num_tokens) <= len(self._free)
 
-    def allocate(self, seq_id: int, num_tokens: int) -> BlockTable:
+    def probe(self, keys: Sequence[int]) -> int:
+        """Cached-prefix length in TOKENS for a prompt whose block hash
+        chain is `keys` (see `repro.core.prefixcache.block_keys`).
+        0 without prefix sharing."""
+        if self._mgr is None:
+            return 0
+        return self._mgr.probe_len(keys) * self.block_size
+
+    def allocate(self, seq_id: int, num_tokens: int,
+                 keys: Optional[Sequence[int]] = None) -> BlockTable:
+        """Allocate a sequence's block chain. With prefix sharing and a hash
+        chain (`keys`), the longest cached prefix is PINNED (shared blocks,
+        refcount bumped — their KV data is already in the pool) and only the
+        suffix gets fresh blocks; the returned table's ``prefix_blocks`` /
+        ``length`` reflect the tokens already present."""
         need = self.blocks_needed(num_tokens)
+        if seq_id in self._tables:
+            raise ValueError(f"seq {seq_id} already allocated")
+        if self._mgr is not None:
+            hit = self._mgr.acquire(seq_id, keys or (), need)
+            table = BlockTable(seq_id=seq_id,
+                               blocks=self._mgr.blocks_of(seq_id),
+                               length=hit * self.block_size,
+                               prefix_blocks=hit)
+            self._tables[seq_id] = table
+            return table
         if need > len(self._free):
             raise MemoryError(f"KV pool exhausted: need {need}, "
                               f"free {len(self._free)}")
-        if seq_id in self._tables:
-            raise ValueError(f"seq {seq_id} already allocated")
         blocks = [self._free.pop() for _ in range(need)]
         table = BlockTable(seq_id=seq_id, blocks=blocks, length=0)
         self._tables[seq_id] = table
         return table
 
+    def insert(self, seq_id: int, keys: Sequence[int]) -> int:
+        """Register a completed sequence's leading blocks in the prefix trie
+        (share mode): its prompt KV becomes hittable by later prompts with
+        the same hash chain. No-op without sharing. Returns blocks added."""
+        if self._mgr is None:
+            return 0
+        return self._mgr.register(seq_id, keys)
+
+    def grow_for(self, need_blocks: int) -> None:
+        """Geometric growth backing `extend` (and the decode runtime's
+        admission growth): at least double the pool (so jitted
+        scatter/gather shapes occur O(log) times), clamped to `max_blocks`.
+        Raises MemoryError at the cap — the fail-fast backstop that makes a
+        block leak surface as an error instead of unbounded device-memory
+        doubling."""
+        extra = max(need_blocks, self.num_blocks)
+        if self.max_blocks > 0:
+            extra = min(extra, self.max_blocks - self.num_blocks)
+        if extra < need_blocks:
+            raise MemoryError(
+                f"KV pool at max_blocks={self.max_blocks} cap "
+                f"(need {need_blocks} more)")
+        self.grow(extra)
+
     def extend(self, seq_id: int, extra_tokens: int = 1) -> BlockTable:
-        """Grow a sequence (decode appends); allocates blocks on demand."""
+        """Grow a sequence (decode appends); allocates blocks on demand.
+        An exhausted free list GROWS the pool geometrically (`grow_for`,
+        capped by ``max_blocks``) instead of raising — in share mode only
+        after LRU eviction of refcount-0 cached blocks came up short."""
         table = self._tables[seq_id]
         target = table.length + extra_tokens
-        while len(table.blocks) * self.block_size < target:
-            if not self._free:
-                raise MemoryError("KV pool exhausted on extend")
+        need = self.blocks_needed(target) - len(table.blocks)
+        if need <= 0:
+            return table
+        if self._mgr is not None:
+            if self._mgr.available() < need:
+                self.grow_for(need - self._mgr.available())
+            table.blocks.extend(self._mgr.extend_seq(seq_id, need))
+            return table
+        if len(self._free) < need:
+            self.grow_for(need - len(self._free))
+        for _ in range(need):
             table.blocks.append(self._free.pop())
         return table
 
     def free(self, seq_id: int) -> None:
+        """Release a sequence — in share mode a refcount DECREMENT per block
+        (the decode instance's free): blocks still referenced by other
+        sequences stay live, refcount-0 blocks registered in the trie stay
+        CACHED (LRU-evictable), only unregistered ones return to the free
+        list. Without sharing every block is exclusively held, so this is
+        the original eager free."""
         table = self._tables.pop(seq_id)
+        if self._mgr is not None:
+            self._mgr.release(seq_id)
+            return
         self._free.extend(table.blocks)
 
     def grow(self, extra_blocks: int) -> None:
@@ -133,35 +237,82 @@ class PagedKVCache:
         pad[1] = (0, extra_blocks)
         self.k_pool = jnp.pad(self.k_pool, pad)
         self.v_pool = jnp.pad(self.v_pool, pad)
-        self._free.extend(range(self.num_blocks,
-                                self.num_blocks + extra_blocks))
+        if self._mgr is not None:
+            self._mgr.grow(extra_blocks)
+        else:
+            self._free.extend(range(self.num_blocks,
+                                    self.num_blocks + extra_blocks))
         self.num_blocks += extra_blocks
 
     def table(self, seq_id: int) -> Optional[BlockTable]:
         return self._tables.get(seq_id)
 
+    def accounting(self) -> Tuple[int, int, int, int]:
+        """(free, live, cached, num_blocks) — the leak-free invariant is
+        free + live + cached == num_blocks (asserted by tests after draining
+        traces). Live counts DISTINCT blocks reachable from tables."""
+        if self._mgr is not None:
+            self._mgr.check()
+            return (self._mgr.free_blocks, self._mgr.live_blocks,
+                    self._mgr.cached_blocks, self.num_blocks)
+        live = {b for t in self._tables.values() for b in t.blocks}
+        return (len(self._free), len(live), 0, self.num_blocks)
+
+    # ------------------------------------------------- copy-on-divergence
+    def _writable_block(self, table: BlockTable, block_index: int) -> int:
+        """Block id safe to WRITE at `block_index` of `table`'s chain. In
+        share mode a shared block (refcount > 1) is replaced by a fresh
+        private copy (data duplicated — the diverging writer must not
+        clobber the other readers' prefix), and an exclusively-held but
+        trie-registered block is unregistered (its cached content is about
+        to change). Plain mode: the block itself."""
+        b = table.blocks[block_index]
+        if self._mgr is None:
+            return b
+        nb, copied = self._mgr.make_private(table.seq_id, block_index)
+        if copied:
+            self.k_pool = self.k_pool.at[:, nb].set(self.k_pool[:, b])
+            self.v_pool = self.v_pool.at[:, nb].set(self.v_pool[:, b])
+            table.blocks[block_index] = nb
+            if block_index < table.prefix_blocks:
+                table.prefix_blocks = block_index
+        return nb
+
     # ------------------------------------------------------------------ data
     def write(self, seq_id: int, pos: int, k: jax.Array, v: jax.Array) -> None:
-        """Write one token's K/V at absolute position pos.
-        k/v: (L, K, hd)."""
+        """Write one token's K/V at absolute position pos. k/v: (L, K, hd).
+
+        Scalar reference path: each functional ``.at[].set`` copies the
+        ENTIRE pool — the batched equivalent `write_tokens` (one donated
+        scatter for every resident stream) is the hot-path version, and in
+        share mode both route the target block through copy-on-divergence
+        (`_writable_block`) before touching it."""
         table = self._tables[seq_id]
-        blk = table.blocks[pos // self.block_size]
+        blk = self._writable_block(table, pos // self.block_size)
         off = pos % self.block_size
         self.k_pool = self.k_pool.at[:, blk, off].set(k.astype(self.k_pool.dtype))
         self.v_pool = self.v_pool.at[:, blk, off].set(v.astype(self.v_pool.dtype))
         table.length = max(table.length, pos + 1)
 
-    def write_prompt(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+    def write_prompt(self, seq_id: int, k: jax.Array, v: jax.Array,
+                     start: int = 0) -> None:
         """Bulk write a prefilled prompt in ONE jitted, donated scatter.
-        k/v: (L, T, K, hd). The final partial block's tail is zero-filled —
-        positions past `length` are dead until a later write claims them
-        (readers mask by kv_len), so this is equivalent to leaving them
-        stale."""
+        k/v: (L, T, K, hd) covering positions [start, start + T); `start`
+        must be block-aligned — the prefix-sharing suffix write passes
+        ``start = hit_tokens`` so the pinned shared blocks are never
+        scattered into (their data is the hit). The final partial block's
+        tail is zero-filled — positions past `length` are dead until a later
+        write claims them (readers mask by kv_len), so this is equivalent to
+        leaving them stale."""
         table = self._tables[seq_id]
         T = k.shape[1]
         if T == 0:
             return
         bs = self.block_size
+        if start % bs != 0:
+            raise ValueError(f"write_prompt start={start} must be a "
+                             f"multiple of block_size={bs}")
+        b0 = start // bs
         nb = (T + bs - 1) // bs
         if nb * bs != T:
             pad = [(0, 0)] * k.ndim
@@ -170,13 +321,21 @@ class PagedKVCache:
         L_ = k.shape[0]
         k = k.reshape(L_, nb, bs, *k.shape[2:])
         v = v.reshape(L_, nb, bs, *v.shape[2:])
-        blocks = jnp.asarray(table.blocks[:nb], jnp.int32)
+        if self._mgr is not None:
+            for bi in range(b0, b0 + nb):
+                self._writable_block(table, bi)
+        blocks = jnp.asarray(table.blocks[b0:b0 + nb], jnp.int32)
         self.k_pool, self.v_pool = _scatter_prompt(
             self.k_pool, self.v_pool, blocks, k, v)
-        table.length = max(table.length, T)
+        table.length = max(table.length, start + T)
 
     def gather(self, seq_id: int):
-        """Contiguous (L, T_padded, K, hd) view via the block table."""
+        """Contiguous (L, T_padded, K, hd) view via the block table.
+
+        Scalar reference path (one sequence); `gather_batch` is the batched
+        equivalent for the resident set. Works unchanged under prefix
+        sharing: a table's chain interleaves shared and private block ids
+        transparently."""
         table = self._tables[seq_id]
         idx = jnp.asarray(table.blocks, dtype=jnp.int32)
         k = self.k_pool[:, idx]                     # (L, nb, bs, K, hd)
@@ -200,7 +359,7 @@ class PagedKVCache:
         off = np.empty(n, np.int32)
         for i, (sid, pos) in enumerate(zip(seq_ids, positions)):
             table = self._tables[sid]
-            blk[i] = table.blocks[pos // self.block_size]
+            blk[i] = self._writable_block(table, pos // self.block_size)
             off[i] = pos % self.block_size
             table.length = max(table.length, pos + 1)
         self.k_pool, self.v_pool = _scatter_tokens(

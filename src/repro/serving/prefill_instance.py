@@ -2,20 +2,33 @@
 Pool, wired event-driven. The Scheduler thread blocks on the Event Monitor;
 each ARRIVAL/COMPLETION event triggers exactly one SchedulerCore round whose
 Decision is enacted as submit / preempt / resume commands on the pool.
+
+Prefix sharing (``prefix_share=True``): the instance owns a prefix-sharing
+`PagedKVCache` holding completed prompts' KV. On ARRIVAL the prompt's block
+hash chain probes the trie and the sequence is allocated with the cached
+prefix pinned (only the suffix gets fresh blocks); at SUBMIT the pinned
+prefix KV is gathered from the pool and `SegmentedPrefill.start` resumes at
+operator offset ``prefix_len`` — a hit is pure skipped compute. On
+COMPLETION the computed suffix KV is scattered into the fresh blocks, the
+full blocks are registered in the trie, and the sequence is released
+(refcount decrement: its blocks stay CACHED for the next matching prompt,
+LRU-evicted only under capacity pressure).
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.events import Event, EventKind, EventMonitor
+from repro.core.prefixcache import block_keys
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import Action, SchedulerCore
 from repro.models.segments import SegmentedPrefill
+from repro.serving.kvcache import PagedKVCache
 from repro.serving.pool import ExecTask, ExecutionPool
 
 
@@ -26,7 +39,10 @@ class PrefillInstance:
                  clock: Callable[[], float] = time.monotonic,
                  on_prefill_done: Optional[Callable] = None,
                  executor: Optional[SegmentedPrefill] = None,
-                 dispatch_depth: int = 2):
+                 dispatch_depth: int = 2,
+                 prefix_share: bool = False,
+                 prefix_cache_blocks: int = 512,
+                 kv_block_size: int = 128):
         self.cfg = cfg
         self.scheduler = scheduler
         self.clock = clock
@@ -36,6 +52,22 @@ class PrefillInstance:
         self.executor = executor or SegmentedPrefill(
             params, cfg, max_seq=max_seq, granularity=granularity,
             chunk_tokens=chunk_tokens, attn_impl=attn_impl)
+
+        # prefix-sharing prompt KV cache (None = disabled, the default)
+        self.kv: Optional[PagedKVCache] = None
+        self.kv_block_size = kv_block_size
+        if prefix_share:
+            self.kv = PagedKVCache(
+                cfg.num_layers, prefix_cache_blocks, kv_block_size,
+                cfg.num_kv_heads, cfg.resolved_head_dim,
+                dtype=self.executor.cache_dtype, prefix_share=True)
+        # guards self.kv: the scheduler thread mutates it on every
+        # arrival/completion while the Proxy probes it for affinity routing
+        self._kv_lock = threading.Lock()
+        self._prefix: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        # rid -> (pool hit tokens, hash chain) for sequences holding blocks
+        self.prefix_hits = 0                 # requests with a nonzero hit
+        self.prefix_hit_tokens = 0           # prompt tokens served cached
 
         self.monitor = EventMonitor()
         self.pool = ExecutionPool(step_fn=self._step, on_complete=self._complete,
@@ -49,6 +81,10 @@ class PrefillInstance:
         self.completed: List[Request] = []
         self.completed_tasks: List[ExecTask] = []
         self._lock = threading.Lock()
+        # drain() waits here; the scheduler thread notifies after any event
+        # that may have emptied the instance (no polling — PR 4's
+        # DecodeInstance.drain fix applied to the prefill side)
+        self._idle_cv = threading.Condition(self._lock)
 
         self._shutdown = False
         self._thread = threading.Thread(target=self._scheduler_loop,
@@ -62,18 +98,37 @@ class PrefillInstance:
         self.monitor.publish(Event(time=self.clock(), kind=EventKind.ARRIVAL,
                                    payload=req))
 
+    def probe_prefix(self, tokens: np.ndarray) -> int:
+        """Cached-prefix tokens this instance's pool holds for `tokens` —
+        the affinity signal the Proxy's prefix-affinity dispatch routes on.
+        0 without prefix sharing. Capped at len-1: the last position is
+        always computed live (first-token logits)."""
+        if self.kv is None:
+            return 0
+        tokens = np.asarray(tokens)
+        return self.probe_keys(block_keys(tokens, self.kv_block_size),
+                               int(tokens.size))
+
+    def probe_keys(self, keys, num_tokens: int) -> int:
+        """`probe_prefix` for a pre-hashed chain: the Proxy hashes the
+        prompt ONCE per dispatch and probes every instance with the same
+        chain — only the trie walk runs under each instance's lock."""
+        if self.kv is None:
+            return 0
+        with self._kv_lock:
+            hit = self.kv.probe(keys)
+        return min(hit, max(num_tokens - 1, 0))
+
     def drain(self, timeout: float = 60.0) -> bool:
-        """Wait until all submitted requests completed."""
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            with self._lock:
-                busy = (self._waiting or self._preempted
+        """Wait until all submitted requests completed. Waits on the
+        instance condition variable — the scheduler thread notifies after
+        every processed event — instead of the old 2 ms busy-wait poll."""
+        def idle() -> bool:
+            return not (self._waiting or self._preempted
                         or self._running is not None
                         or self.monitor.qsize() > 0)
-            if not busy:
-                return True
-            time.sleep(0.002)
-        return False
+        with self._idle_cv:
+            return self._idle_cv.wait_for(idle, timeout)
 
     def shutdown(self) -> None:
         self._shutdown = True
@@ -105,16 +160,66 @@ class PrefillInstance:
             with self._lock:
                 self._handle_event(ev)
                 self._round()
+                if not (self._waiting or self._preempted
+                        or self._running is not None
+                        or self.monitor.qsize() > 0):
+                    self._idle_cv.notify_all()
+
+    def _acquire_prefix(self, req: Request, tokens: np.ndarray) -> None:
+        """ARRIVAL-time trie probe + allocation: pin the cached prefix and
+        reserve fresh suffix blocks, so eviction cannot touch the hit while
+        the request waits/executes. A full pool (even after LRU eviction)
+        just means this prompt goes uncached — never an error."""
+        n = len(tokens)
+        keys = block_keys(tokens, self.kv_block_size)
+        with self._kv_lock:
+            try:
+                table = self.kv.allocate(req.rid, n, keys=keys)
+            except MemoryError:
+                return
+            hit = min(table.length, max(n - 1, 0))
+        self._prefix[req.rid] = (hit, keys)
+        req.prefix_hit = hit
+        if hit:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hit
+
+    def _publish_prefix(self, task: ExecTask) -> None:
+        """COMPLETION-time insert: scatter each member's computed suffix KV
+        into its fresh blocks, register the full blocks in the trie, release
+        the sequence (refcount decrement — blocks stay cached, LRU-ordered).
+        The prefill state's cache rows are fully valid (< prefix seeded,
+        >= prefix computed), so the slice is always well-defined."""
+        st = task.prefill_task.state
+        with self._kv_lock:
+            for i, req in enumerate(task.requests):
+                entry = self._prefix.pop(req.rid, None)
+                if entry is None:
+                    continue                      # pool was full at arrival
+                _, keys = entry
+                table = self.kv.table(req.rid)
+                start = table.prefix_blocks * self.kv_block_size
+                n = int(st["lens"][i])
+                if start < n:
+                    self.kv.write_prompt(
+                        req.rid, st["k_cache"][:, i, start:n],
+                        st["v_cache"][:, i, start:n], start=start)
+                self.kv.insert(req.rid, keys)
+                self.kv.free(req.rid)
 
     def _handle_event(self, ev: Event) -> None:
         if ev.kind == EventKind.ARRIVAL:
             req: Request = ev.payload
             req.state = RequestState.WAITING
+            if self.kv is not None:
+                self._acquire_prefix(req, self._tokens[req.rid])
             self._waiting.append(req)
         elif ev.kind == EventKind.COMPLETION:
             task: ExecTask = ev.payload
             if self._running is not None and task.task_id == self._running.task_id:
                 self._running = None
+            if self.kv is not None:
+                self._publish_prefix(task)
             self.completed.extend(task.requests)
             self.completed_tasks.append(task)
             if self.on_prefill_done is not None:
@@ -171,7 +276,28 @@ class PrefillInstance:
         arr = np.zeros((len(batch), S), dtype=np.int32)
         for i, t in enumerate(toks):
             arr[i, :len(t)] = t
-        pt = self.executor.start(jnp.asarray(arr), lens=jnp.asarray(lens))
+        # prefix-cache resumption: the batch shares one operator offset, so
+        # it starts at the MINIMUM member hit (rows with longer hits just
+        # recompute a little — single-request tasks, the common case, use
+        # their full hit). Capped at min(lens) - 1: the head needs a live
+        # last position.
+        P = 0
+        if self.kv is not None and batch:
+            P = min(self._prefix.get(r.rid, (0, ()))[0] for r in batch)
+            P = min(P, min(lens) - 1)
+        if P > 0:
+            with self._kv_lock:
+                ks, vs = [], []
+                for r in batch:
+                    k, v, _ = self.kv.gather(r.rid)
+                    ks.append(k[:, :P])
+                    vs.append(v[:, :P])
+            pk = jnp.stack(ks, axis=1)           # (L, B, P, K, hd)
+            pv = jnp.stack(vs, axis=1)
+            pt = self.executor.start(jnp.asarray(arr), lens=jnp.asarray(lens),
+                                     prefix_len=P, prefix_k=pk, prefix_v=pv)
+        else:
+            pt = self.executor.start(jnp.asarray(arr), lens=jnp.asarray(lens))
         return ExecTask(prefill_task=pt, requests=list(batch))
 
     # ------------------------------------------------------------- metrics

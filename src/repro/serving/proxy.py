@@ -15,6 +15,14 @@ dispatch from each decode instance's live backlog. When the wired predictor
 exposes `observe()` (OnlineTTFTPredictor), the proxy feeds measured prefill
 latencies back on every completion — online refit against real hardware.
 
+Prefix affinity: with a `needs_prefix` policy (``dispatch="prefix-
+affinity"``) each dispatch decision probes every instance's prefix-sharing
+KV cache for the arriving prompt (`PrefillInstance.probe_prefix`) and
+attaches the hit plus its predictor-priced `ttft_saved` to the load
+snapshot, so requests route to the instance already holding their prefix KV
+unless its queue pressure outweighs the recompute saved
+(docs/SCHEDULING.md).
+
 Decode migration (``decode_migration=True``, needs `decode_cost`): after each
 handoff the proxy re-plans with the SAME cost-gated planner the cluster
 simulator uses (`repro.core.dispatch.plan_decode_migrations`) and moves
@@ -35,6 +43,7 @@ import numpy as np
 from repro.core.dispatch import (DispatchPolicy, InstanceLoad,
                                  competing_tokens, make_dispatch,
                                  plan_decode_migrations)
+from repro.core.prefixcache import block_keys
 from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
@@ -101,33 +110,65 @@ class Proxy:
         load = dec.snapshot_load(prefill_idx, self.decode_cost.step_time)
         return load.effective_step(1, float(req.num_tokens)) / req.tbt_slo
 
-    def _snapshot_loads(self, req: Request, now: float) -> List[InstanceLoad]:
+    def _ttft_saved(self, idx: int, req: Request, hit: int) -> float:
+        """Predicted prefill seconds instance `idx`'s cached prefix would
+        save this request: predictor-priced recompute of the hit tokens,
+        falling back to capacity-normalized tokens (same units as drain
+        time) when no predictor is wired."""
+        if hit <= 0:
+            return 0.0
+        predict = getattr(self.dispatch.predictor, "predict", None)
+        if predict is not None:
+            return max(predict(req.num_tokens)
+                       - predict(req.num_tokens - hit), 0.0)
+        return hit / max(self.capacities[idx], 1e-9)
+
+    def _snapshot_loads(self, req: Request, now: float,
+                        tokens=None) -> List[InstanceLoad]:
         """Per-instance competing-work snapshots for one dispatch decision
         (see repro.core.dispatch). Remaining tokens come from the requests'
-        own progress counters, which the instances update as ops complete."""
+        own progress counters, which the instances update as ops complete.
+        Prefix-affinity policies additionally get each instance's cached-
+        prefix hit for THIS prompt (`PrefillInstance.probe_prefix`) and its
+        predictor-priced ttft_saved."""
         if not self.dispatch.needs_loads:
             return [InstanceLoad(instance_id=i)
                     for i in range(len(self._outstanding))]
         predict = getattr(self.dispatch.predictor, "predict", None)
         want_pressure = self.dispatch.needs_decode_pressure
+        want_prefix = self.dispatch.needs_prefix and tokens is not None
+        keys_by_bs: dict = {}
+        if want_prefix:
+            # hash the prompt ONCE per block size (instances normally share
+            # one); each instance then only walks its trie
+            tokens = np.asarray(tokens)
+            for inst in self.prefill_instances:
+                bs = inst.kv_block_size
+                if bs not in keys_by_bs:
+                    keys_by_bs[bs] = block_keys(tokens, bs)
         loads = []
         for i, outstanding in enumerate(self._outstanding):
             items = [(max(r.remaining_tokens(), 0.0), r.deadline)
                      for r in outstanding.values()]
+            inst = self.prefill_instances[i]
+            hit = inst.probe_keys(keys_by_bs[inst.kv_block_size],
+                                  int(tokens.size)) if want_prefix else 0
             loads.append(InstanceLoad(
                 instance_id=i,
                 queued_tokens=competing_tokens(items, req, now, predict),
                 n_outstanding=len(outstanding),
                 capacity=self.capacities[i],
                 decode_pressure=self._decode_pressure(i, req)
-                if want_pressure else 0.0))
+                if want_pressure else 0.0,
+                prefix_hit=hit,
+                ttft_saved=self._ttft_saved(i, req, hit)))
         return loads
 
     def submit(self, req: Request, tokens: np.ndarray) -> None:
         with self._load_lock:
             self.requests.append(req)
             idx = self.dispatch.select(req, self._snapshot_loads(
-                req, self.clock()), self.clock())
+                req, self.clock(), tokens), self.clock())
             self._outstanding[idx][req.rid] = req
             self.dispatched[idx] += 1
         self.prefill_instances[idx].submit_request(req, tokens)
@@ -248,6 +289,10 @@ class Proxy:
                                       for d in self.decode_instances),
             "decode_steps": sum(getattr(d, "steps", 0)
                                 for d in self.decode_instances),
+            "prefix_hits": sum(getattr(i, "prefix_hits", 0)
+                               for i in self.prefill_instances),
+            "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)
+                                     for i in self.prefill_instances),
             "scheduling_rounds": sum(i.scheduling_rounds
                                      for i in self.prefill_instances),
             "blocking_mean": float(np.mean(

@@ -37,6 +37,7 @@ from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
                                  plan_decode_migrations)
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
+from repro.core.prefixcache import PrefixBlockManager
 from repro.core.request import Request
 from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
 from repro.sim.costmodel import (DecodeCostModel, HardwareSpec,
@@ -235,6 +236,9 @@ class ClusterResult:
     decoded: int = 0
     decode_preemptions: int = 0           # token-boundary batch displacements
     migrations: int = 0                   # decode streams moved cross-instance
+    prefix_hit_tokens: int = 0            # prompt tokens served from prefix
+                                          # caches (skipped recompute)
+    prefix_evictions: int = 0             # cache blocks LRU-evicted
 
     @property
     def attainment(self) -> float:
@@ -260,6 +264,13 @@ class ClusterResult:
         """max/mean dispatched requests across instances (1.0 = perfect)."""
         mean = sum(self.dispatched) / max(len(self.dispatched), 1)
         return max(self.dispatched) / max(mean, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from per-instance prefix caches
+        (0.0 with sharing disabled)."""
+        total = sum(r.num_tokens for r in self.requests)
+        return self.prefix_hit_tokens / max(total, 1)
 
 
 class ClusterSim:
@@ -310,7 +321,9 @@ class ClusterSim:
                  decode_preempt: Optional[bool] = None,
                  decode_migration: bool = False,
                  migration_knee: float = 0.85,
-                 max_migrations: int = 1):
+                 max_migrations: int = 1,
+                 prefix_cache_blocks: int = 0,
+                 prefix_block: int = 128):
         if hardware is not None:
             hardware = [resolve_hardware(hw) for hw in hardware]
             num_instances = len(hardware)
@@ -373,6 +386,13 @@ class ClusterSim:
         self.decode_migration = decode_migration and self.num_decode > 1
         self.migration_knee = migration_knee
         self.max_migrations = max_migrations
+        # prefix sharing: per-instance cache-residency model (the SAME
+        # PrefixBlockManager the real PagedKVCache delegates to — evaluated
+        # is deployed), `prefix_cache_blocks` capacity each, keyed on
+        # Request.prefix_hash at `prefix_block` tokens per block. 0 = no
+        # sharing: every request prefills from token 0 (the original model).
+        self.prefix_cache_blocks = prefix_cache_blocks
+        self.prefix_block = prefix_block
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
@@ -401,6 +421,12 @@ class ClusterSim:
                                    capacity=e.capacity)
                       for e in engines]
         with_pressure = self.policy.needs_decode_pressure and decodes
+        # per-instance prefix-cache residency (None = sharing disabled);
+        # exposed as `prefix_managers` for leak/invariant inspection
+        mgrs = [PrefixBlockManager(self.prefix_cache_blocks)
+                for _ in engines] if self.prefix_cache_blocks > 0 else None
+        self.prefix_managers = mgrs
+        bs = self.prefix_block
 
         # streams mid-KV-transfer, per destination: [count, ctx tokens].
         # They are invisible to the destination's snapshot until DECODE_JOIN
@@ -451,8 +477,31 @@ class ClusterSim:
                         ld, decode_pressure=decodes[
                             i % len(decodes)].pressure(req, now))
                         for i, ld in enumerate(loads)]
-                engines[self.policy.select(req, loads, now)].on_arrival(
-                    req, now)
+                hits = None
+                if mgrs is not None:
+                    # per-instance cached-prefix length of THIS prompt,
+                    # capped so at least one token is always computed (the
+                    # first output token needs a live forward pass)
+                    keys = req.prefix_hash or ()
+                    cap = max(req.num_tokens - 1, 0)
+                    hits = [min(m.probe_len(keys) * bs, cap) for m in mgrs]
+                    if self.policy.needs_prefix:
+                        n = req.num_tokens
+                        loads = [replace(
+                            ld, prefix_hit=hits[i],
+                            ttft_saved=max(
+                                predictors[i].predict(n)
+                                - predictors[i].predict(n - hits[i]), 0.0))
+                            for i, ld in enumerate(loads)]
+                idx = self.policy.select(req, loads, now)
+                if hits is not None:
+                    # pin the hit until the dependent prefill completes —
+                    # eviction must never pull KV out from under it
+                    req.prefix_hit = hits[idx]
+                    mgrs[idx].lock_prefix(
+                        req.rid, req.prefix_hash or (),
+                        max_blocks=(hits[idx] + bs - 1) // bs)
+                engines[idx].on_arrival(req, now)
             elif kind == DECODE_DONE:
                 dec: DecodeSim = payload[0]
                 if dec.on_decode_done(payload, now) and self.decode_migration:
@@ -468,6 +517,12 @@ class ClusterSim:
             else:
                 engine: InstanceEngine = payload[0]
                 for r in handle_event(kind, payload, now):
+                    if mgrs is not None:
+                        # completion: the prompt's KV now exists on this
+                        # instance — cache it (best-effort under capacity)
+                        # and drop the arrival-time pins
+                        mgrs[engine.instance_id].commit(
+                            r.rid, r.prefix_hash or ())
                     if decodes and r.output_tokens > 0:
                         if self.decode_affinity:
                             # paired handoff: prefill i -> decode i mod D
@@ -491,6 +546,8 @@ class ClusterSim:
             decoded=sum(len(d.finished) for d in decodes),
             decode_preemptions=sum(d.preemptions for d in decodes),
             migrations=n_migrations,
+            prefix_hit_tokens=sum(r.prefix_hit for r in requests),
+            prefix_evictions=sum(m.evictions for m in mgrs) if mgrs else 0,
         )
 
 
@@ -508,13 +565,16 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      decode_migration: bool = False,
                      migration_knee: float = 0.85,
                      max_migrations: int = 1,
+                     prefix_cache_blocks: int = 0,
+                     prefix_block: int = 128,
                      **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
     presets, same fresh-copy semantics, plus instance count, dispatch,
     heterogeneous pool layout (`hardware` / `decode_hardware` accept
-    HardwareSpecs or names like "a800"), and decode scheduling
+    HardwareSpecs or names like "a800"), decode scheduling
     (`decode_max_batch` / `decode_policy` / `decode_preempt` /
-    `decode_migration`)."""
+    `decode_migration`), and prefix-cache sharing (`prefix_cache_blocks`
+    per-instance residency capacity + the `prefix-affinity` dispatch)."""
     import copy
 
     from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
@@ -533,5 +593,7 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      decode_preempt=decode_preempt,
                      decode_migration=decode_migration,
                      migration_knee=migration_knee,
-                     max_migrations=max_migrations)
+                     max_migrations=max_migrations,
+                     prefix_cache_blocks=prefix_cache_blocks,
+                     prefix_block=prefix_block)
     return sim.run([copy.copy(r) for r in requests])

@@ -199,27 +199,36 @@ class PrefillCostModel:
                        by / tp / (self.hw.hbm_bw * self.hw.eff_b))
         return t + self.hw.launch_overhead
 
-    def _chunk_grid(self, tokens: int,
-                    chunk_tokens: int) -> Tuple[np.ndarray, np.ndarray]:
-        """(sizes, offsets) of every chunk of a `tokens`-long prefill."""
-        chunk = chunk_tokens or tokens
-        o = np.arange(0, tokens, chunk, dtype=np.float64)
+    def _chunk_grid(self, tokens: int, chunk_tokens: int,
+                    prefix: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        """(sizes, offsets) of every chunk of a `tokens`-long prefill whose
+        first `prefix` tokens are served from a prefix cache: chunks cover
+        only [prefix, tokens), each at its true KV offset — the attention
+        term still reads the cached prefix (o grows from `prefix`), but its
+        compute/weight traffic is skipped entirely."""
+        chunk = chunk_tokens or (tokens - prefix)
+        o = np.arange(prefix, tokens, chunk, dtype=np.float64)
         c = np.minimum(float(chunk), tokens - o)
         return c, o
 
-    def op_durations(self, tokens: int, chunk_tokens: int = 0) -> np.ndarray:
-        """Per-operator durations for a full prefill (all layers x all chunks),
+    def op_durations(self, tokens: int, chunk_tokens: int = 0,
+                     prefix: int = 0) -> np.ndarray:
+        """Per-operator durations for a prefill (all layers x all chunks),
         in execution order. Shape: (n_chunks * L * n_ops,).
 
         Batched over all (chunk, layer, op) triples — the simulator hot path
         (every SUBMIT builds one of these arrays); bit-identical to the scalar
-        reference `op_durations_scalar`."""
+        reference `op_durations_scalar`. ``prefix`` > 0 prices a
+        prefix-cache hit: the first `prefix` tokens' chunks vanish and the
+        suffix chunks run at their cached-KV offsets (`_chunk_grid`).
+        ``prefix=0`` (default) is the exact original path."""
         m = self.m
-        c, o = self._chunk_grid(tokens, chunk_tokens)
+        prefix = min(max(int(prefix), 0), max(tokens - 1, 0))
+        c, o = self._chunk_grid(tokens, chunk_tokens, prefix)
         if c.size <= 1:
             # numpy overhead loses on a single chunk (the unchunked presets):
             # the scalar reference is bit-identical and faster there
-            return self.op_durations_scalar(tokens, chunk_tokens)
+            return self.op_durations_scalar(tokens, chunk_tokens, prefix)
         # (n_chunks, n_ops): one column per operator, rows in chunk order
         per_chunk = np.stack(
             [self._op_duration_vec(nm, c, o) for nm in m.op_names], axis=1)
@@ -227,14 +236,15 @@ class PrefillCostModel:
         return np.tile(per_chunk[:, None, :],
                        (1, m.num_layers, 1)).reshape(-1)
 
-    def op_durations_scalar(self, tokens: int,
-                            chunk_tokens: int = 0) -> np.ndarray:
+    def op_durations_scalar(self, tokens: int, chunk_tokens: int = 0,
+                            prefix: int = 0) -> np.ndarray:
         """Reference implementation (per-chunk Python loop) kept as the ground
         truth the vectorized `op_durations` is pinned against."""
         m = self.m
-        chunk = chunk_tokens or tokens
+        prefix = min(max(int(prefix), 0), max(tokens - 1, 0))
+        chunk = chunk_tokens or (tokens - prefix)
         out: List[float] = []
-        o = 0
+        o = prefix
         while o < tokens:
             c = min(chunk, tokens - o)
             per_layer = [self.op_duration(nm, c, o) for nm in m.op_names]
@@ -242,8 +252,9 @@ class PrefillCostModel:
             o += c
         return np.asarray(out)
 
-    def prefill_time(self, tokens: int, chunk_tokens: int = 0) -> float:
-        return float(self.op_durations(tokens, chunk_tokens).sum())
+    def prefill_time(self, tokens: int, chunk_tokens: int = 0,
+                     prefix: int = 0) -> float:
+        return float(self.op_durations(tokens, chunk_tokens, prefix).sum())
 
     def throughput(self, tokens: int, chunk_tokens: int = 0) -> float:
         return tokens / self.prefill_time(tokens, chunk_tokens)

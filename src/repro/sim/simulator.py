@@ -160,7 +160,10 @@ class InstanceEngine:
         filtered by deadline + feasibility; the running task included when its
         batch deadline is earlier (it finishes first — otherwise it yields
         within one boundary)."""
-        items = [(float(r.num_tokens), r.deadline) for r in self.waiting]
+        # a waiting request's actual work is its suffix: the dispatched-on
+        # prefix hit is never recomputed (prefix_hit = 0 without sharing)
+        items = [(float(r.num_tokens - r.prefix_hit), r.deadline)
+                 for r in self.waiting]
         items += [(t.preempted_tokens, t.min_deadline)
                   for t in self.preempted.values()]
         queued = competing_tokens(items, candidate, now, self.predictor.predict)
@@ -194,8 +197,15 @@ class InstanceEngine:
 
     def _make_task(self, batch: List[Request], now: float) -> SimTask:
         tokens = sum(r.num_tokens for r in batch)
+        # prefix-cache hits (set at dispatch): the cached leading tokens'
+        # chunks are skipped outright — the batch executes as one prefill
+        # starting at the aggregate cached offset (suffix-only compute,
+        # attention still reading the cached prefix KV). prefix=0 (no
+        # sharing, the default) is the exact original path.
+        prefix = min(sum(r.prefix_hit for r in batch), tokens - 1)
         op_ends = np.cumsum(self.cost.op_durations(tokens,
-                                                   self.cfg.chunk_tokens))
+                                                   self.cfg.chunk_tokens,
+                                                   prefix))
         op_ends = op_ends + self.cfg.submit_overhead
         boundaries = self._boundaries(op_ends, tokens)
         if self.cfg.check_overhead:
@@ -203,12 +213,12 @@ class InstanceEngine:
             op_ends = op_ends + self.cfg.check_overhead * (
                 1 + np.searchsorted(boundaries, op_ends - 1e-12))
             boundaries = self._boundaries(op_ends, tokens)
-        t = SimTask(requests=batch, tokens=tokens, op_ends=op_ends,
+        t = SimTask(requests=batch, tokens=tokens - prefix, op_ends=op_ends,
                     boundary_ends=boundaries, resume_time=now)
         for r in batch:
             r.ops_total = len(op_ends)
             r.ops_done = 0
-            r.batch_tokens = tokens      # remaining-work basis for S-EDF
+            r.batch_tokens = tokens - prefix  # remaining-work basis (S-EDF)
         return t
 
     # ------------------------------------------------------------ execution
@@ -361,6 +371,7 @@ def reset_requests(requests: Sequence[Request]) -> None:
         r.ops_done = 0
         r.ops_total = 0
         r.batch_tokens = r.num_tokens
+        r.prefix_hit = 0
         r.decode_start = None
         r.decode_migrations = 0
         r.decode_preemptions = 0

@@ -6,15 +6,27 @@ the Table 1 prompt-length distributions (lognormal fits to mean/std — the fit
 reproduces the published P99s within ~5%), mixture ratios, Poisson (or bursty
 Gamma) arrivals, and the Table 2 TTFT SLOs. The paper itself uses randomly
 generated token IDs of the specified lengths, so content is immaterial.
+
+Shared-prefix structure (prefix-cache workloads, benchmarks/fig22): real
+production prompts share massive prefixes — per-task system prompts /
+few-shot templates, and multi-turn conversations that resubmit the whole
+history. ``shared_prefix_frac`` gives every request of a task class a common
+leading template (sized as that fraction of the class's mean length);
+``multi_turn_prob`` makes a request a follow-up that extends an earlier
+conversation's full prompt. Both populate `Request.prefix_hash` — the block
+hash chain (`repro.core.prefixcache.chain_extend` semantics) that the
+cache-residency model and prefix-affinity dispatch key on: equal leading
+keys == equal leading tokens.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.prefixcache import chain_extend
 from repro.core.request import Request
 
 # Table 1: prompt length stats per task type
@@ -68,6 +80,15 @@ class TraceConfig:
     # loose for search/file agents) — the workload where slack-aware decode
     # admission wins; unlisted tasks fall back to `tbt_slo`
     tbt_slo_by_task: Optional[Dict[str, float]] = None
+    # shared-prefix structure (0.0/0.0 = the original trace, prefix_hash
+    # left None — bit-identical requests)
+    shared_prefix_frac: float = 0.0   # of each class's MEAN length: the
+                                      # class-wide system-prompt template
+    multi_turn_prob: float = 0.0      # P(request extends a prior same-class
+                                      # conversation's full prompt)
+    prefix_block: int = 128           # hash-chain block granularity (tokens)
+    multi_turn_window: int = 32       # recent conversations eligible as
+                                      # parents (live sessions, not all time)
 
 
 def generate(cfg: TraceConfig) -> List[Request]:
@@ -77,6 +98,21 @@ def generate(cfg: TraceConfig) -> List[Request]:
     probs = np.asarray([ratios[t] for t in tasks], dtype=np.float64)
     probs = probs / probs.sum()
     slos = TABLE2_SLO[cfg.model]
+
+    sharing = cfg.shared_prefix_frac > 0 or cfg.multi_turn_prob > 0
+    bs = cfg.prefix_block
+    # per-class system-prompt template: a fixed-content (fixed hash chain)
+    # leading segment every request of the class shares
+    tpl_keys: Dict[str, tuple] = {}
+    tpl_len: Dict[str, int] = {}
+    if sharing:
+        for ti, task in enumerate(tasks):
+            n = int(cfg.shared_prefix_frac * TABLE1[task]["mean"])
+            tpl_len[task] = n
+            tpl_keys[task] = chain_extend((), range(n // bs), salt=1000 + ti)
+    # recent conversations per class: (prompt_len, full-block hash chain)
+    history: Dict[str, List] = {task: [] for task in tasks}
+    uid = 0
 
     out: List[Request] = []
     t = 0.0
@@ -98,15 +134,69 @@ def generate(cfg: TraceConfig) -> List[Request]:
                                           cfg.output_std or cfg.output_mean)
             out_tokens = int(np.clip(int(rng.lognormal(mu, sigma)), 1, 8192))
         tbt = (cfg.tbt_slo_by_task or {}).get(task, cfg.tbt_slo)
+        n_tok = sample_length(task, rng, max_len=cfg.max_len)
+        keys = None
+        if sharing:
+            uid += 1
+            hist = history[task]
+            if hist and rng.random() < cfg.multi_turn_prob:
+                # follow-up turn: the parent's whole prompt is the prefix,
+                # the new sample is the appended user turn + response recap
+                parent_len, parent_keys = hist[
+                    int(rng.integers(len(hist)))]
+                n_tok = parent_len + max(n_tok // 2, 16)
+                base_keys, base_len = parent_keys, parent_len
+            else:
+                # fresh conversation: class template + unique remainder
+                base_keys, base_len = tpl_keys[task], tpl_len[task]
+                n_tok = max(n_tok, base_len + 16)
+            # max_len binds the TOTAL prompt, template included — a tight
+            # max_len truncates the shared base rather than exceeding the
+            # length contract callers size max_seq from
+            n_tok = min(n_tok, cfg.max_len)
+            n_full = n_tok // bs
+            # blocks fully inside the shared base keep its chain; the
+            # boundary block (base tail + unique start) and everything
+            # after hash uniquely for this request
+            shared_full = min(base_len // bs, len(base_keys), n_full)
+            keys = chain_extend(base_keys[:shared_full],
+                                range(n_full - shared_full), salt=uid)
+            hist.append((n_tok, keys))
+            del hist[:-cfg.multi_turn_window]
         out.append(Request(
-            num_tokens=sample_length(task, rng, max_len=cfg.max_len),
+            num_tokens=n_tok,
             slo=slos[task] * cfg.slo_scale,
             arrival=t,
             task_type=task,
             output_tokens=out_tokens,
             tbt_slo=tbt if out_tokens else float("inf"),
+            prefix_hash=keys,
         ))
     return out
+
+
+def oracle_hit_rate(requests: Sequence[Request],
+                    prefix_block: int = 128) -> float:
+    """Trace-intrinsic prefix-cache hit rate: the fraction of prompt tokens
+    an UNBOUNDED single cache would serve from blocks already produced by
+    earlier requests (arrival order). The upper bound any finite,
+    partitioned (per-instance) cache can approach — fig22 sweeps traces by
+    this number."""
+    seen: set = set()
+    hit_tokens = 0
+    total = 0
+    for r in sorted(requests, key=lambda r: r.arrival):
+        total += r.num_tokens
+        if not r.prefix_hash:
+            continue
+        run = 0
+        for k in r.prefix_hash:
+            if k not in seen:
+                break
+            run += 1
+        hit_tokens += min(run * prefix_block, r.num_tokens)
+        seen.update(r.prefix_hash)
+    return hit_tokens / max(total, 1)
 
 
 def sharegpt_like(n: int = 500, rate: float = 2.0, slo: float = 0.25,

@@ -80,6 +80,14 @@ def test_gated_metric_selection():
     assert is_gated("fig19/llama3-8b/a800-tpu/capacity-weighted/fast_share")
     assert is_gated("fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs")
     assert is_gated("fig21/llama3-8b/b8_vs_b1_speedup")
+    # fig22 prefix-cache families: goodput, ratios, hit rates, real speedup
+    assert is_gated("fig22/llama3-8b/prefix-affinity/goodput_req_s")
+    assert is_gated("fig22/llama3-8b/prefix-affinity_vs_no-sharing")
+    assert is_gated("fig22/llama3-8b/hit_rate")
+    assert is_gated("fig22/llama3-8b/real/warm_vs_cold_speedup")
+    # absolute latencies are runner-speed dependent, deliberately ungated
+    assert not is_gated("fig22/llama3-8b/real/cold_ms")
+    assert not is_gated("fig22/llama3-8b/real/warm_ms")
     assert not is_gated("fig9/_elapsed_s")
     assert not is_gated("fig9/_error")
     # absolute tokens/s is runner-speed dependent, deliberately ungated
@@ -120,6 +128,42 @@ def test_gate_trips_on_fig21_scaling_regression(dirs):
                   **{"fig21/llama3-8b/measured_prior_rel_err": 0.5})
     write_bench(fresh, "fig21", misfit)
     assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+
+
+def test_gate_trips_on_fig22_prefix_cache_regression(dirs):
+    """The prefix-sharing acceptance: the committed >= 2x goodput ratio and
+    the conservative real-runtime speedup threshold (3.34 * 0.9 ~= floor
+    3.0) must trip when sharing stops paying (e.g. the trie silently always
+    missing), and pass when the fresh run holds the line."""
+    base, fresh = dirs
+    fig22_base = {
+        "fig22/llama3-8b/prefix-affinity/goodput_req_s": 24.86,
+        "fig22/llama3-8b/prefix-affinity_vs_no-sharing": 2.64,
+        "fig22/llama3-8b/prefix-affinity_vs_blind": 1.2,
+        "fig22/llama3-8b/hit_rate": 0.594,
+        "fig22/llama3-8b/real/warm_vs_cold_speedup": 3.34,
+        "fig22/llama3-8b/real/cold_ms": 454.1,       # ungated wall clock
+    }
+    write_bench(base, "fig22", fig22_base)
+    write_bench(fresh, "fig9", BASE)
+    # sharing silently broken: hit rate and the goodput ratio collapse
+    broken = dict(fig22_base, **{
+        "fig22/llama3-8b/hit_rate": 0.02,
+        "fig22/llama3-8b/prefix-affinity_vs_no-sharing": 1.01})
+    write_bench(fresh, "fig22", broken)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # runtime speedup under the conservative floor trips too
+    slow = dict(fig22_base,
+                **{"fig22/llama3-8b/real/warm_vs_cold_speedup": 1.4})
+    write_bench(fresh, "fig22", slow)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # at/above the thresholds — and with a slower runner's absolute
+    # latencies — passes
+    ok = dict(fig22_base, **{
+        "fig22/llama3-8b/real/warm_vs_cold_speedup": 25.0,
+        "fig22/llama3-8b/real/cold_ms": 2400.0})
+    write_bench(fresh, "fig22", ok)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
 def test_gate_trips_on_rel_err_rise(dirs):
@@ -169,15 +213,24 @@ def test_committed_baselines_are_wellformed():
     from benchmarks.compare import load_dir
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
-    assert {"fig9", "fig18", "fig19", "fig20", "fig21"} <= set(baselines)
+    assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22"} \
+        <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
-    assert len(gated) >= 25
+    assert len(gated) >= 35
     # the decode-scheduling acceptance ratio is committed and actually holds
     assert baselines["fig20"]["fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs"] \
         >= 1.15
     # the decode-batching acceptance floor is committed and actually holds
     assert baselines["fig21"]["fig21/llama3-8b/b8_vs_b1_speedup"] >= 3.0
+    # the prefix-sharing acceptances are committed and actually hold:
+    # >= 2x goodput over no-sharing at the ~60% hit-rate trace, affinity
+    # beating blind dispatch, and the conservative >= 3x runtime speedup
+    fig22 = baselines["fig22"]
+    assert fig22["fig22/llama3-8b/prefix-affinity_vs_no-sharing"] >= 2.0
+    assert fig22["fig22/llama3-8b/prefix-affinity_vs_blind"] > 1.0
+    assert fig22["fig22/llama3-8b/hit_rate"] >= 0.55
+    assert fig22["fig22/llama3-8b/real/warm_vs_cold_speedup"] >= 3.0
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]

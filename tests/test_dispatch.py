@@ -129,7 +129,7 @@ def test_decode_aware_penalizes_saturated_decode():
 def test_make_dispatch_registry_and_passthrough():
     assert set(DISPATCH_POLICIES) == {"round-robin", "least-loaded",
                                       "deflection", "capacity-weighted",
-                                      "decode-aware"}
+                                      "decode-aware", "prefix-affinity"}
     for name in DISPATCH_POLICIES:
         pol = make_dispatch(name, PRED)
         assert pol.name == name and pol.predictor is PRED

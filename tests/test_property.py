@@ -1,6 +1,7 @@
 """Hypothesis property tests on system invariants: S-EDF ordering, SLO-aware
 batching budget/deadline safety, predictor monotonicity-ish sanity, paged KV
-cache allocator conservation, and goodput-metric monotonicity."""
+cache allocator conservation (plain AND refcounted prefix-sharing modes),
+and goodput-metric monotonicity."""
 import numpy as np
 import pytest
 
@@ -9,6 +10,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Request, SchedulerCore, TTFTPredictor, max_goodput
+from repro.core.prefixcache import PrefixBlockManager, chain_extend
 from repro.core.scheduler import slo_aware_batching
 from repro.serving.kvcache import PagedKVCache
 
@@ -123,6 +125,94 @@ def test_kvcache_data_roundtrip():
     kg, vg, length = cache.gather(0)
     assert length == 11
     np.testing.assert_array_equal(np.asarray(kg[:, 10]), np.asarray(k1))
+
+
+# --- prefix-sharing block manager -------------------------------------------
+
+_CHAINS = [chain_extend((), range(8), salt=s) for s in range(4)]
+# chains 4..5 diverge from chain 0 after 3 blocks (shared prefix, unique tail)
+_CHAINS += [chain_extend(_CHAINS[0][:3], range(5), salt=40 + s)
+            for s in range(2)]
+
+_ops = st.lists(
+    st.tuples(st.sampled_from(["acquire", "release", "commit", "cow"]),
+              st.integers(0, len(_CHAINS) - 1), st.integers(1, 8)),
+    min_size=1, max_size=40)
+
+
+@given(_ops)
+@settings(max_examples=60, deadline=None)
+def test_prefix_manager_conservation_under_share_free_interleavings(ops):
+    """After EVERY operation: free + live + cached == num_blocks, the three
+    sets disjoint, refcounts exactly matching held references — under
+    arbitrary share/free/commit/copy-on-divergence interleavings, including
+    rolled-back allocation failures. Eviction never touches a held block
+    (check() would catch a pinned block leaving the live set)."""
+    mgr = PrefixBlockManager(16)
+    held = {}
+    sid = 0
+    for kind, chain, nblocks in ops:
+        keys = _CHAINS[chain][:nblocks]
+        if kind == "acquire":
+            try:
+                mgr.acquire(sid, keys, nblocks)
+                held[sid] = (keys, nblocks)
+                sid += 1
+            except MemoryError:
+                pass                      # full: the rollback must be clean
+        elif kind == "release" and held:
+            k = next(iter(held))
+            mgr.register(k, held[k][0])   # share-then-free: park in LRU
+            mgr.release(k)
+            del held[k]
+        elif kind == "commit" and held:
+            k = next(iter(held))
+            mgr.commit(k, held[k][0])
+            del held[k]
+        elif kind == "cow" and held:
+            k = next(iter(held))
+            try:
+                mgr.make_private(k, held[k][1] - 1)
+            except MemoryError:
+                pass
+        mgr.check()
+    for k in list(held):
+        mgr.release(k)
+    mgr.check()
+    assert mgr.live_blocks == 0           # every reference dropped
+
+
+@given(st.lists(st.tuples(st.integers(0, len(_CHAINS) - 1),
+                          st.integers(1, 6)),
+                min_size=1, max_size=25))
+@settings(max_examples=60, deadline=None)
+def test_prefix_manager_eviction_never_drops_pinned_blocks(allocs):
+    """Under permanent capacity pressure, LRU eviction reclaims only
+    refcount-0 blocks: every chain still held keeps its exact blocks, and
+    no two diverged suffixes ever alias a block."""
+    mgr = PrefixBlockManager(12)
+    pinned = {}
+    sid = 0
+    for chain, nblocks in allocs:
+        keys = _CHAINS[chain][:nblocks]
+        try:
+            hit = mgr.acquire(sid, keys, nblocks)
+        except MemoryError:
+            continue
+        blocks = mgr.blocks_of(sid)
+        # beyond the cached hit, fresh blocks are private to this chain
+        fresh = set(blocks[hit:])
+        for s, (other, oh) in pinned.items():
+            assert not fresh & set(other[oh:]), \
+                "two diverged suffixes share a block"
+        if sid % 2 == 0:
+            pinned[sid] = (blocks, hit)
+        else:
+            mgr.commit(sid, keys)         # becomes evictable
+        sid += 1
+        mgr.check()
+        for s, (blocks_, _) in pinned.items():
+            assert mgr.blocks_of(s) == blocks_, "pinned chain mutated"
 
 
 # --- goodput metric -------------------------------------------------------------
