@@ -23,6 +23,18 @@ def cached_trace(*, rate, duration, seed, model="llama3-8b", burstiness=1.0,
         tbt_slo_by_task=dict(tbt_slo_by_task) if tbt_slo_by_task else None))
 
 
+@lru_cache(maxsize=None)
+def cached_scenario_trace(*, scenario, rate, duration, seed,
+                          model="llama3-8b"):
+    """Memoized fitted-scenario generation (`TraceConfig.scenario` path):
+    every policy variant at a given (scenario, rate) replays the SAME trace
+    — `simulate_cluster` copies requests before running, so the cached list
+    is never mutated."""
+    from repro.traces.qwentrace import TraceConfig, generate
+    return generate(TraceConfig(scenario=scenario, rate=rate,
+                                duration=duration, seed=seed, model=model))
+
+
 def time_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
     for _ in range(warmup):
         fn()

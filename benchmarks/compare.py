@@ -9,9 +9,13 @@ Two gated families (see docs/BENCHMARKS.md):
 
   * higher-is-better SLO outcomes (name contains ``goodput``,
     ``attainment``, ``_vs_`` ratios, or ``share``): a drop beyond tolerance
-    fails;
-  * lower-is-better error metrics (name contains ``rel_err``, e.g. the
-    fig19 online-refit prediction errors): a RISE beyond tolerance fails.
+    fails — this includes the fig23 ``p99_goodput`` frontier rows;
+  * lower-is-better metrics: error families (name contains ``rel_err``,
+    e.g. the fig19 online-refit prediction errors) and the ``p99`` tail
+    family (``p99_norm`` / ``ttft_p99`` / ``tbt_p99`` — SLO-normalized
+    tail latencies from the fig23 scenario suite): a RISE beyond tolerance
+    fails. Production SLOs gate on tails; a regression that leaves the
+    mean alone but fattens the p99 must trip.
 
 Wall-clock and harness bookkeeping rows are ignored (they vary with runner
 speed — the simulator metrics themselves are deterministic, seeded
@@ -39,8 +43,13 @@ from typing import Dict, List, Tuple
 # covers the fig21/fig22 measured wall-clock curves, "hit_rate" the fig22
 # prefix-cache residency outcomes)
 GATED = ("goodput", "attainment", "_vs_", "share", "speedup", "hit_rate")
-# substrings of metric names that are gated, LOWER is better (error families)
-GATED_LOWER = ("rel_err",)
+# substrings of metric names that are gated, LOWER is better: error families
+# and the p99 tail family (SLO-normalized tail latencies). NOTE: checked
+# before GATED, so a name matching both is lower-is-better — which is why
+# the fig23 frontier rows are named `p99_goodput_req_s` (matches `goodput`
+# only: the frontier is a rate, higher is better) while raw tail rows end
+# in `p99_norm` / `ttft_p99` / `tbt_p99`.
+GATED_LOWER = ("rel_err", "p99_norm", "ttft_p99", "tbt_p99")
 # metric-name substrings never gated (runner-speed or error bookkeeping)
 SKIPPED = ("_elapsed_s", "/_error", "/_real_error")
 

@@ -1,0 +1,149 @@
+"""Fig. 23 (production-traffic extension) — p99-goodput frontier per stress
+scenario: the tail-gated counterpart of every mean/attainment-gated figure.
+
+The paper's goodput claim is an *attainment* claim evaluated on production
+traces where tail TTFT, not mean TTFT, decides SLO violations. This figure
+re-characterizes the scheduling stack at the tail on the fitted scenario
+suite (`repro.traces.scenarios`, docs/TRACES.md): for each scenario, the
+policy the scenario is designed to punish vs the robust alternative, both
+measured two ways on the SAME traces —
+
+  * ``p99_goodput_req_s`` — max rate whose p99 SLO-normalized end-to-end
+    latency stays <= 1 (`percentile_goodput`; unfinished requests count as
+    +inf tail events). CI-gated, higher is better.
+  * ``att_goodput_req_s`` — the classic 90%-attainment goodput
+    (`max_goodput`) on the same attainment samples, reported so the
+    mean-vs-tail ORDERING gap is visible in one artifact: aggregate
+    attainment can sit above 0.9 while the p99 tail is several SLOs out
+    (the flood scenario is built to produce exactly that).
+  * ``e2e_p99_norm`` at the probe rate — the raw tail statistic. CI-gated,
+    LOWER is better (the `p99` gate family in benchmarks/compare.py).
+
+Cluster under test: 4 prefill + 4 decode instances, decode slot cap 16,
+per-instance prefix caches — the full production stack PR 2-5 built, so
+every prior policy (S-EDF prefill, decode S-EDF, prefix-affinity) is
+exercised against traffic engineered to find its tail."""
+from benchmarks.common import cached_scenario_trace
+from repro.core.metrics import max_goodput, percentile_goodput
+from repro.sim.cluster import simulate_cluster
+
+PROBE_RATE = 8                        # rate the raw p99 rows are read at
+N_INSTANCES = 4
+MAX_BATCH = 16                        # decode KV slot cap
+CACHE_BLOCKS = 2048                   # per-instance prefix cache (x128 tok)
+DURATION = 60                         # p99 needs samples: >=~240 reqs/rate
+SEED = 3
+
+# per-scenario rate grid, bracketing where that scenario's p99 frontier
+# actually crosses 1.0 (the chat mixtures hold their tail to ~30+ req/s on
+# this cluster; the adversarial scenarios collapse far earlier). PROBE_RATE
+# must appear in every grid.
+RATES_BY = {
+    "fitted-chat": [8, 16, 24, 32, 48],
+    "diurnal": [8, 16, 24, 32, 48],
+    "heavy-tail": [4, 8, 12, 16, 24],
+    "prefix-adversary": [4, 8, 12, 16, 24],
+    "flood": [4, 6, 8, 12, 16],
+}
+
+BASE_KW = dict(num_instances=N_INSTANCES, decode_instances=N_INSTANCES,
+               decode_max_batch=MAX_BATCH, prefix_cache_blocks=CACHE_BLOCKS)
+
+# per-scenario matchup: (variant name, simulate_cluster kwargs — merged
+# over BASE_KW, so a matchup can also shrink the cluster to saturate the
+# resource its scenario targets, or override the per-instance prefill
+# `policy`). The first variant is the policy the scenario punishes, the
+# second the robust alternative (docs/TRACES.md names the intent per
+# scenario); the gated ratio row is second_vs_first.
+MATCHUPS = {
+    "fitted-chat": (
+        ("round-robin", dict(dispatch="round-robin", decode_policy="s-edf")),
+        ("least-loaded", dict(dispatch="least-loaded",
+                              decode_policy="s-edf")),
+    ),
+    "diurnal": (
+        ("round-robin", dict(dispatch="round-robin", decode_policy="s-edf")),
+        ("deflection", dict(dispatch="deflection", decode_policy="s-edf")),
+    ),
+    # 2 decode instances (not 4): the Pareto output tail must actually
+    # contend for KV slots, or admission order is irrelevant and both
+    # decode policies coincide
+    "heavy-tail": (
+        ("fcfs-decode", dict(dispatch="least-loaded", decode_policy="fcfs",
+                             decode_instances=2)),
+        ("s-edf-decode", dict(dispatch="least-loaded", decode_policy="s-edf",
+                              decode_instances=2)),
+    ),
+    "prefix-adversary": (
+        ("prefix-affinity", dict(dispatch="prefix-affinity")),
+        ("capacity-weighted", dict(dispatch="capacity-weighted")),
+    ),
+    # deadline-blind FCFS prefill admission vs S-EDF on the same flooded
+    # cluster ("policy" reaches the per-instance scheduler via preset
+    # overrides): the flood's tight-SLO burst collapses FCFS outright
+    "flood": (
+        ("fcfs-prefill", dict(dispatch="least-loaded", decode_policy="s-edf",
+                              policy="fcfs")),
+        ("s-edf-prefill", dict(dispatch="least-loaded",
+                               decode_policy="s-edf")),
+    ),
+}
+
+
+def _frontier(scenario, kw, model):
+    """(p99 goodput, attainment goodput, p99 norms, attainments)."""
+    norms, atts = [], []
+    for rate in RATES_BY[scenario]:
+        reqs = cached_scenario_trace(scenario=scenario, rate=rate,
+                                     duration=DURATION, seed=SEED,
+                                     model=model)
+        res = simulate_cluster("flowprefill", reqs, model=model,
+                               **{**BASE_KW, **kw})
+        norms.append(res.e2e_p99_norm)
+        atts.append(res.e2e_attainment)
+    rates = RATES_BY[scenario]
+    return (percentile_goodput(rates, norms), max_goodput(rates, atts),
+            norms, atts)
+
+
+def run(model="llama3-8b"):
+    rows = []
+    for scenario, matchup in MATCHUPS.items():
+        rates = RATES_BY[scenario]
+        goodputs = {}
+        for name, kw in matchup:
+            p99_g, att_g, norms, atts = _frontier(scenario, kw, model)
+            goodputs[name] = p99_g
+            rows.append((f"fig23/{model}/{scenario}/{name}/p99_goodput_req_s",
+                         round(p99_g, 2),
+                         "p99(e2e/SLO)@" + "|".join(
+                             f"r{r}:{v:.2f}" for r, v in zip(rates, norms))))
+            rows.append((f"fig23/{model}/{scenario}/{name}/att_goodput_req_s",
+                         round(att_g, 2),
+                         "mean-gated goodput on the SAME runs; e2e att@"
+                         + "|".join(f"r{r}:{a:.2f}"
+                                    for r, a in zip(rates, atts))))
+            probe = norms[rates.index(PROBE_RATE)]
+            rows.append((f"fig23/{model}/{scenario}/{name}/e2e_p99_norm",
+                         round(probe, 3),
+                         f"p99 SLO-normalized e2e latency at {PROBE_RATE} "
+                         f"req/s (p99 gate family: LOWER is better)"))
+            if p99_g > 0:
+                # how far the mean-gated capacity claim overstates what
+                # the tail can sustain — the motivating number for tail
+                # gating (docs/BENCHMARKS.md). Deliberately NOT a gated
+                # name: a tail IMPROVEMENT shrinks it, which must not
+                # read as a regression.
+                rows.append((
+                    f"fig23/{model}/{scenario}/{name}/mean_tail_gap_x",
+                    round(att_g / p99_g, 2),
+                    "attainment-gated / p99-gated goodput (>1: the mean "
+                    "hides a tail this many times worse; informational)"))
+        (punished, _), (robust, _) = matchup
+        if goodputs[punished] > 0:
+            rows.append((f"fig23/{model}/{scenario}/{robust}_vs_{punished}",
+                         round(goodputs[robust] / goodputs[punished], 2),
+                         "p99-goodput ratio (the scenario is built to "
+                         f"punish {punished}; a 0-capacity punished "
+                         "variant suppresses this row)"))
+    return rows

@@ -15,7 +15,8 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig13_predictor, fig14_single_slo,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
                         fig18_cluster, fig19_hetero, fig20_decode,
-                        fig21_decode_batching, fig22_prefix_cache, roofline)
+                        fig21_decode_batching, fig22_prefix_cache,
+                        fig23_scenarios, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -34,6 +35,7 @@ MODULES = [
     ("fig20", fig20_decode),
     ("fig21", fig21_decode_batching),
     ("fig22", fig22_prefix_cache),
+    ("fig23", fig23_scenarios),
     ("roofline", roofline),
 ]
 

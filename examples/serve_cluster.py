@@ -7,6 +7,7 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
   default — calibrated discrete-event ClusterSim (fast, no model needed):
       PYTHONPATH=src python examples/serve_cluster.py [--instances 4]
           [--rate 24] [--burstiness 3] [--policy all]
+          [--scenario fitted-chat]         # fitted/stress scenario trace
           [--hetero a800,a800,a100,a100]   # mixed-hardware pool
           [--decode-sched s-edf] [--decode-max-batch 16]
           [--decode-migration]             # TBT-slack-aware decode stage
@@ -16,7 +17,8 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
   --real  — a tiny REAL model on CPU: Proxy + N threaded PrefillInstances +
             a DecodeInstance, load-aware dispatch against live backlog
             (--prefix-share turns on the real prefix-sharing PagedKVCache:
-            repeated prompts prefill suffix-only):
+            repeated prompts prefill suffix-only; add --scenario to replay
+            a scenario's arrival pacing + hash-chained prompts against it):
       PYTHONPATH=src python examples/serve_cluster.py --real [--requests 10]
 """
 import argparse
@@ -28,27 +30,47 @@ POLICIES = ["round-robin", "least-loaded", "deflection",
             "capacity-weighted", "decode-aware", "prefix-affinity"]
 
 
+def _scenario_trace(args):
+    from repro.traces.scenarios import SCENARIOS, scenario_names
+    sc = SCENARIOS.get(args.scenario)
+    if sc is None:
+        raise SystemExit(f"unknown scenario {args.scenario!r}; "
+                         f"known: {scenario_names()}")
+    print(f"scenario {sc.name!r}: {sc.summary}")
+    print(f"  punishes: {sc.punishes}")
+    return generate(TraceConfig(scenario=args.scenario, rate=args.rate,
+                                duration=args.duration, seed=args.seed))
+
+
 def run_sim(args):
     hardware = args.hetero.split(",") if args.hetero else None
     n = len(hardware) if hardware else args.instances
     pool = " hetero[" + args.hetero + "]" if hardware else ""
     print(f"== ClusterSim: {n} prefill + {n} decode instances{pool}, "
           f"rate={args.rate} req/s, burstiness={args.burstiness} ==")
-    share = dict(shared_prefix_frac=0.25, multi_turn_prob=0.75) \
-        if args.prefix_share else {}
-    reqs = generate(TraceConfig(rate=args.rate, duration=args.duration,
-                                seed=args.seed, burstiness=args.burstiness,
-                                output_mean=200, tbt_slo=args.tbt_slo,
-                                **share))
-    cache_blocks = args.prefix_cache_blocks if args.prefix_share else 0
+    if args.scenario:
+        # scenario traces bring their own fitted output/TBT/prefix shape;
+        # they always carry hash chains, so the prefix caches go live
+        reqs = _scenario_trace(args)
+        cache_blocks = args.prefix_cache_blocks
+    else:
+        share = dict(shared_prefix_frac=0.25, multi_turn_prob=0.75) \
+            if args.prefix_share else {}
+        reqs = generate(TraceConfig(rate=args.rate, duration=args.duration,
+                                    seed=args.seed,
+                                    burstiness=args.burstiness,
+                                    output_mean=200, tbt_slo=args.tbt_slo,
+                                    **share))
+        cache_blocks = args.prefix_cache_blocks if args.prefix_share else 0
     print(f"{len(reqs)} requests "
           f"({sum(r.num_tokens for r in reqs)} prefill tokens)"
           + (f", prefix caches {cache_blocks} blocks/instance"
              if cache_blocks else ""))
     policies = POLICIES if args.policy == "all" else [args.policy]
     print(f"{'dispatch':>17s} | {'TTFT att':>8s} {'e2e att':>8s} "
-          f"{'imbalance':>9s} {'preempts':>8s} {'dec-pre':>7s} "
-          f"{'migr':>4s} {'hit':>5s} | per-instance dispatched")
+          f"{'p99/SLO':>7s} {'imbalance':>9s} {'preempts':>8s} "
+          f"{'dec-pre':>7s} {'migr':>4s} {'hit':>5s} "
+          f"| per-instance dispatched")
     for policy in policies:
         res = simulate_cluster("flowprefill", reqs,
                                num_instances=n, dispatch=policy,
@@ -59,7 +81,8 @@ def run_sim(args):
                                decode_migration=args.decode_migration,
                                prefix_cache_blocks=cache_blocks)
         print(f"{policy:>17s} | {res.attainment:8.3f} "
-              f"{res.e2e_attainment:8.3f} {res.imbalance:9.2f} "
+              f"{res.e2e_attainment:8.3f} {res.e2e_p99_norm:7.2f} "
+              f"{res.imbalance:9.2f} "
               f"{res.preemptions:8d} {res.decode_preemptions:7d} "
               f"{res.migrations:4d} {res.prefix_hit_rate:5.2f} "
               f"| {res.dispatched}")
@@ -130,14 +153,45 @@ def run_real(args):
                                               A800),
                   decode_migration=args.decode_migration)
     rng = np.random.default_rng(args.seed)
+    scen = _scenario_trace(args)[:args.requests] if args.scenario else None
+
+    def scenario_tokens(src, n):
+        # block content derived from the chain key: equal keys -> equal
+        # tokens, so resubmitted prefixes (multi-turn chains, templates)
+        # genuinely hit the real PagedKVCache trie instead of merely
+        # colliding in the sim's residency model
+        toks = rng.integers(0, cfg.vocab_size, n)
+        for bi, key in enumerate((src.prefix_hash or ())[:n // 128]):
+            block_rng = np.random.default_rng(key & 0xFFFFFFFF)
+            toks[bi * 128:(bi + 1) * 128] = \
+                block_rng.integers(0, cfg.vocab_size, 128)
+        return toks
+
     try:
+        prev_arrival = scen[0].arrival if scen else 0.0
         for i in range(args.requests):
-            n = int(rng.choice([256, 256, 1024, 2048]))
-            req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
-                          arrival=time.monotonic(), output_tokens=2,
-                          tbt_slo=2.0)
-            proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
-            time.sleep(float(rng.exponential(0.15)))
+            if scen and i < len(scen):
+                # replay the scenario's task mix, pacing, and hash-chained
+                # prompts (truncated to the tiny model's max_seq); SLOs use
+                # the real-mode convention — the tiny CPU model's latencies
+                # are not A800's, so the scenario's SLOs don't transfer
+                src = scen[i]
+                n = min(src.num_tokens, max_seq)
+                req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
+                              arrival=time.monotonic(),
+                              task_type=src.task_type, output_tokens=2,
+                              tbt_slo=2.0,
+                              prefix_hash=(src.prefix_hash or ())[:n // 128])
+                proxy.submit(req, scenario_tokens(src, n))
+                gap, prev_arrival = src.arrival - prev_arrival, src.arrival
+                time.sleep(min(max(gap, 0.0), 0.5))
+            else:
+                n = int(rng.choice([256, 256, 1024, 2048]))
+                req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
+                              arrival=time.monotonic(), output_tokens=2,
+                              tbt_slo=2.0)
+                proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
+                time.sleep(float(rng.exponential(0.15)))
         assert proxy.drain(300.0)
         time.sleep(0.5)
         rep = proxy.report()
@@ -145,7 +199,8 @@ def run_real(args):
               f"dispatched={rep['dispatched_by_instance']}")
         print(f"  SLO attainment={rep['slo_attainment']:.2f} "
               f"TTFT mean={rep['ttft']['mean']:.3f}s "
-              f"p99={rep['ttft']['p99']:.3f}s")
+              f"p99={rep['ttft']['p99']:.3f}s "
+              f"e2e p99/SLO={rep['percentiles']['e2e_p99_norm']:.2f}")
         print(f"  decoded={sum(len(d.finished) for d in decs)} "
               f"decode_migrations={rep['decode_migrations']} "
               f"decode_preemptions={rep['decode_preemptions']}")
@@ -161,6 +216,15 @@ def main():
     ap.add_argument("--burstiness", type=float, default=3.0)
     ap.add_argument("--policy", default="all",
                     choices=["all"] + POLICIES)
+    ap.add_argument("--scenario", default=None,
+                    help="fitted/stress scenario trace (repro.traces."
+                    "scenarios; see docs/TRACES.md). Sim mode runs the "
+                    "scenario against each dispatch policy with prefix "
+                    "caches on; --real replays its pacing, task mix, and "
+                    "hash-chained prompt content (block tokens derived "
+                    "from chain keys, so shared prefixes hit the real "
+                    "PagedKVCache). Overrides --burstiness/--prefix-share "
+                    "trace shaping")
     ap.add_argument("--hetero", default=None, metavar="HW,HW,...",
                     help="comma-separated per-instance hardware "
                     "(a800 / a100 / tpu-v5e); overrides --instances")

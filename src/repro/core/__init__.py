@@ -3,7 +3,9 @@ from repro.core.dispatch import (DISPATCH_POLICIES, DecodeLoad, DispatchPolicy,
                                  plan_decode_migrations)
 from repro.core.events import Event, EventKind, EventMonitor
 from repro.core.metrics import (attainment_by_task, max_goodput, min_slo_scale,
-                                slo_attainment, ttft_stats)
+                                percentile_goodput, percentile_report,
+                                slo_attainment, slo_frac_percentile,
+                                tbt_stats, ttft_stats)
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
 from repro.core.preemption import BlockingStats, PreemptionSignal, SyncCounter

@@ -44,7 +44,8 @@ from repro.core.dispatch import (DispatchPolicy, InstanceLoad,
                                  competing_tokens, make_dispatch,
                                  plan_decode_migrations)
 from repro.core.prefixcache import block_keys
-from repro.core.metrics import attainment_by_task, slo_attainment, ttft_stats
+from repro.core.metrics import (attainment_by_task, percentile_report,
+                                slo_attainment, tbt_stats, ttft_stats)
 from repro.core.predictor import TTFTPredictor
 from repro.core.request import Request
 from repro.serving.decode_instance import DecodeInstance, DecodeJob
@@ -284,6 +285,13 @@ class Proxy:
             "slo_attainment": slo_attainment(self.requests),
             "by_task": attainment_by_task(self.requests),
             "ttft": ttft_stats(self.requests),
+            "tbt": tbt_stats(self.requests),
+            # full percentile families (p50/p90/p99 TTFT & TBT, aggregate +
+            # per task, SLO-normalized p99s) — same shape as
+            # ClusterResult.percentiles(): production SLOs gate on tails,
+            # and a mid-run report counts unfinished requests as +inf tail
+            # events rather than silently dropping them
+            "percentiles": percentile_report(self.requests),
             "decode_migrations": self.decode_migrations,
             "decode_preemptions": sum(d.preemptions
                                       for d in self.decode_instances),

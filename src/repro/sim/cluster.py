@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
                                  InstanceLoad, make_dispatch,
                                  plan_decode_migrations)
+from repro.core.metrics import percentile_report, slo_frac_percentile
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
 from repro.core.prefixcache import PrefixBlockManager
@@ -258,6 +259,30 @@ class ClusterResult:
         """End-to-end goodness: TTFT and decode-TBT SLOs both attained."""
         met = sum(1 for r in self.requests if r.e2e_met)
         return met / max(len(self.requests), 1)
+
+    @property
+    def ttft_p99_norm(self) -> float:
+        """p99 of TTFT/SLO over all requests (<= 1.0: the 99th-percentile
+        request met its TTFT SLO; unfinished requests count as +inf). The
+        tail-gated statistic fig23 frontiers are built from."""
+        return slo_frac_percentile(self.requests, 99.0, "ttft")
+
+    @property
+    def tbt_p99_norm(self) -> float:
+        """p99 of mean-TPOT/tbt_slo over decoding requests."""
+        return slo_frac_percentile(self.requests, 99.0, "tbt")
+
+    @property
+    def e2e_p99_norm(self) -> float:
+        """p99 of max(TTFT/SLO, TPOT/TBT-SLO) per request — the end-to-end
+        tail counterpart of `e2e_attainment`."""
+        return slo_frac_percentile(self.requests, 99.0, "e2e")
+
+    def percentiles(self, by_task: bool = True) -> dict:
+        """Full percentile families (p50/p90/p99 TTFT & TBT, aggregate and
+        per task class) — `repro.core.metrics.percentile_report` shape,
+        identical to `Proxy.report()['percentiles']`."""
+        return percentile_report(self.requests, by_task=by_task)
 
     @property
     def imbalance(self) -> float:

@@ -89,9 +89,22 @@ class TraceConfig:
     prefix_block: int = 128           # hash-chain block granularity (tokens)
     multi_turn_window: int = 32       # recent conversations eligible as
                                       # parents (live sessions, not all time)
+    # named production/stress scenario (repro.traces.scenarios): when set,
+    # generate() delegates to the scenario's fitted generator — lognormal/
+    # Gamma distributions fitted from summary statistics and session-
+    # structured multi-turn chains replace the uniform knobs above. The
+    # sweep knobs (rate/duration/seed/model/slo_scale/max_len/prefix_block)
+    # keep their meaning; docs/TRACES.md specifies each scenario.
+    scenario: Optional[str] = None
 
 
 def generate(cfg: TraceConfig) -> List[Request]:
+    if cfg.scenario is not None:
+        # fitted/stress scenarios own their whole generation path; the
+        # legacy uniform-knob path below stays byte-identical for every
+        # existing trace (committed fig9/18/19/20/22 baselines depend on it)
+        from repro.traces.scenarios import generate_scenario
+        return generate_scenario(cfg)
     rng = np.random.default_rng(cfg.seed)
     ratios = cfg.task_ratios or {k: v["ratio"] for k, v in TABLE1.items()}
     tasks = list(ratios)

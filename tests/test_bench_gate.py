@@ -101,6 +101,23 @@ def test_gated_metric_selection():
     assert is_gated_lower("fig21/llama3-8b/measured_prior_rel_err")
     assert not is_gated_lower("fig9/_elapsed_s")
     assert not is_gated_lower("fig18/llama3-8b/poisson/goodput_req_s")
+    # fig23 tail families: the p99-goodput frontier is a RATE (higher is
+    # better, matches `goodput` only), raw SLO-normalized tails are
+    # lower-is-better, and the matchup ratios gate higher
+    p99_frontier = "fig23/llama3-8b/heavy-tail/s-edf-decode/p99_goodput_req_s"
+    assert is_gated(p99_frontier)
+    assert not is_gated_lower(p99_frontier)
+    assert is_gated("fig23/llama3-8b/flood/s-edf-prefill/att_goodput_req_s")
+    assert is_gated("fig23/llama3-8b/heavy-tail/s-edf-decode_vs_fcfs-decode")
+    tail = "fig23/llama3-8b/flood/s-edf-prefill/e2e_p99_norm"
+    assert is_gated_lower(tail)
+    assert not is_gated(tail)
+    assert is_gated_lower("fig23/llama3-8b/ttft_p99_norm")
+    # mean_tail_gap_x is informational: a tail IMPROVEMENT shrinks it, so
+    # gating it either way would punish getting better
+    gap = "fig23/llama3-8b/flood/s-edf-prefill/mean_tail_gap_x"
+    assert not is_gated(gap)
+    assert not is_gated_lower(gap)
 
 
 def test_gate_trips_on_fig21_scaling_regression(dirs):
@@ -199,6 +216,50 @@ def test_gate_trips_on_rel_err_rise(dirs):
     assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
+def test_gate_trips_on_p99_tail_regression(dirs):
+    """The fig23 acceptance: the p99 family must trip in BOTH directions —
+    a tail latency RISING beyond tolerance and a tail-gated frontier
+    DROPPING beyond tolerance each exit nonzero — while a tail improvement
+    (which also shrinks mean_tail_gap_x) passes."""
+    base, fresh = dirs
+    fig23_base = {
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/p99_goodput_req_s": 17.07,
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/e2e_p99_norm": 0.552,
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/mean_tail_gap_x": 1.41,
+        "fig23/llama3-8b/heavy-tail/s-edf-decode_vs_fcfs-decode": 2.04,
+    }
+    write_bench(base, "fig23", fig23_base)
+    write_bench(fresh, "fig9", BASE)
+    # the p99 tail fattening +50% (attainment could still look fine) trips
+    fat_tail = dict(fig23_base, **{
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/e2e_p99_norm": 0.83})
+    write_bench(fresh, "fig23", fat_tail)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # the tail-gated frontier collapsing -40% trips
+    collapsed = dict(fig23_base, **{
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/p99_goodput_req_s": 10.0})
+    write_bench(fresh, "fig23", collapsed)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # so does the matchup ratio (the robust policy losing its edge)
+    even = dict(fig23_base, **{
+        "fig23/llama3-8b/heavy-tail/s-edf-decode_vs_fcfs-decode": 1.05})
+    write_bench(fresh, "fig23", even)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # a tail IMPROVEMENT passes even though it shrinks mean_tail_gap_x —
+    # that ratio is informational, not gated
+    better = dict(fig23_base, **{
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/e2e_p99_norm": 0.3,
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/p99_goodput_req_s": 22.0,
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/mean_tail_gap_x": 1.02})
+    write_bench(fresh, "fig23", better)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+    # a +5% tail wobble inside tolerance passes
+    wobble = dict(fig23_base, **{
+        "fig23/llama3-8b/heavy-tail/s-edf-decode/e2e_p99_norm": 0.578})
+    write_bench(fresh, "fig23", wobble)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+
+
 def test_run_only_rejects_unknown_figure_names(capsys):
     with pytest.raises(SystemExit) as exc:
         bench_run.main(["--only", "fig9,fig99"])
@@ -213,11 +274,11 @@ def test_committed_baselines_are_wellformed():
     from benchmarks.compare import load_dir
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
-    assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22"} \
+    assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23"} \
         <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
-    assert len(gated) >= 35
+    assert len(gated) >= 50
     # the decode-scheduling acceptance ratio is committed and actually holds
     assert baselines["fig20"]["fig20/llama3-8b/a800-a100/s-edf+mig_vs_fcfs"] \
         >= 1.15
@@ -231,6 +292,27 @@ def test_committed_baselines_are_wellformed():
     assert fig22["fig22/llama3-8b/prefix-affinity_vs_blind"] > 1.0
     assert fig22["fig22/llama3-8b/hit_rate"] >= 0.55
     assert fig22["fig22/llama3-8b/real/warm_vs_cold_speedup"] >= 3.0
+    # the fig23 tail acceptances are committed and actually hold: S-EDF
+    # decode sustains >= 2x FCFS's tail-gated capacity under the heavy-tail
+    # trace, S-EDF prefill keeps nonzero tail-gated capacity under the
+    # flood (FCFS prefill has exactly zero there — the committed honest
+    # collapse), and every committed mean_tail_gap_x shows the attainment-
+    # gated claim overstating what the tail sustains
+    fig23 = baselines["fig23"]
+    assert fig23[
+        "fig23/llama3-8b/heavy-tail/s-edf-decode_vs_fcfs-decode"] >= 2.0
+    assert fig23[
+        "fig23/llama3-8b/flood/s-edf-prefill/p99_goodput_req_s"] > 0.0
+    assert fig23[
+        "fig23/llama3-8b/flood/fcfs-prefill/p99_goodput_req_s"] == 0.0
+    gaps = [v for m, v in fig23.items() if m.endswith("mean_tail_gap_x")]
+    assert gaps and all(g >= 1.0 for g in gaps)
+    # every scenario's tail statistic is gated lower-is-better
+    from repro.traces.scenarios import scenario_names
+    for scen in scenario_names():
+        tails = [m for m in fig23
+                 if f"/{scen}/" in m and is_gated_lower(m)]
+        assert tails, f"no gated tail row for scenario {scen}"
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]

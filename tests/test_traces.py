@@ -1,0 +1,260 @@
+"""The trace determinism contract and the fitted-scenario suite
+(docs/TRACES.md): same-seed traces are element-for-element identical,
+moment-matching fits are exact, scenario shapes (diurnal modulation, Pareto
+output splice, flood burst, length-aware SLO floor) actually hold, and the
+prefix-adversary's hash chains collide for exactly the trunk blocks then
+diverge — the property prefix caches and prefix-affinity dispatch key on."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.traces.qwentrace import TABLE1, TABLE2_SLO, TraceConfig, generate
+from repro.traces.scenarios import (ADVERSARY_FAMILIES,
+                                    ADVERSARY_TRUNK_BLOCKS, CHAT_FIT,
+                                    DEFAULT_OUTPUT_MEAN, FLOOD_WINDOW,
+                                    HEAVY_TAIL_SCALE, SCENARIOS,
+                                    TTFT_SLO_PER_TOKEN, fit_gamma,
+                                    fit_lognormal, scenario_names)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def cfg_for(scenario, **kw):
+    kw.setdefault("rate", 8.0)
+    kw.setdefault("duration", 30.0)
+    kw.setdefault("seed", 0)
+    return TraceConfig(scenario=scenario, **kw)
+
+
+def as_tuples(reqs):
+    """Everything the determinism contract promises, per request."""
+    return [(r.num_tokens, r.slo, r.arrival, r.task_type, r.output_tokens,
+             r.tbt_slo, r.prefix_hash) for r in reqs]
+
+
+# ------------------------------------------------------------- determinism
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_same_seed_same_trace(scenario):
+    a = generate(cfg_for(scenario))
+    b = generate(cfg_for(scenario))
+    assert len(a) > 0
+    assert as_tuples(a) == as_tuples(b)
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_different_seed_different_trace(scenario):
+    a = generate(cfg_for(scenario, seed=0))
+    b = generate(cfg_for(scenario, seed=1))
+    assert as_tuples(a) != as_tuples(b)
+
+
+def test_flood_leaves_base_mixture_unchanged():
+    """The flood tenant draws from a derived seed (cfg.seed + 0x5EED), so
+    the base chat mixture is byte-identical with and without the flood."""
+    base = generate(cfg_for("fitted-chat"))
+    flood = generate(cfg_for("flood"))
+    assert len(flood) > len(base)
+    flood_set = set(as_tuples(flood))
+    for t in as_tuples(base):
+        assert t in flood_set
+
+
+def test_unknown_scenario_is_an_error():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        generate(cfg_for("nope"))
+    assert scenario_names() == sorted(SCENARIOS)
+
+
+def test_arrivals_sorted_and_within_horizon():
+    for scenario in SCENARIOS:
+        reqs = generate(cfg_for(scenario))
+        arrivals = [r.arrival for r in reqs]
+        assert arrivals == sorted(arrivals)
+        assert all(0.0 <= a < 30.0 for a in arrivals)
+
+
+# ------------------------------------------------------------------ fits
+
+def test_fit_lognormal_moments_exact():
+    for mean, std in [(590, 652), (220, 260), (160, 160), (5976, 3456)]:
+        mu, sigma = fit_lognormal(mean, std)
+        m = math.exp(mu + sigma * sigma / 2.0)
+        v = (math.exp(sigma * sigma) - 1.0) * math.exp(2 * mu + sigma * sigma)
+        assert m == pytest.approx(mean, rel=1e-9)
+        assert math.sqrt(v) == pytest.approx(std, rel=1e-9)
+
+
+def test_fit_gamma_moments_exact():
+    for mean, cv in [(8.0, 1.4), (3.0, 1.0), (20.0, 0.5)]:
+        shape, scale = fit_gamma(mean, cv)
+        assert shape * scale == pytest.approx(mean, rel=1e-9)
+        assert 1.0 / math.sqrt(shape) == pytest.approx(cv, rel=1e-9)
+    # cv=1 degenerates to the exponential
+    shape, scale = fit_gamma(5.0, 1.0)
+    assert shape == pytest.approx(1.0)
+    assert scale == pytest.approx(5.0)
+
+
+def test_fitted_chat_trace_moments():
+    """Trace-level sanity on the fitted generator: the request rate lands
+    near cfg.rate (sessions arrive at rate/turns_mean, each contributing
+    ~turns_mean turns), and output lengths track the fitted mean."""
+    cfg = cfg_for("fitted-chat", rate=16.0, duration=60.0)
+    reqs = generate(cfg)
+    rate = len(reqs) / cfg.duration
+    assert 0.5 * cfg.rate < rate < 1.6 * cfg.rate
+    outs = [r.output_tokens for r in reqs]
+    assert all(o >= 1 for o in outs)
+    assert 0.5 * DEFAULT_OUTPUT_MEAN < np.mean(outs) < 2.5 * DEFAULT_OUTPUT_MEAN
+    # per-class TBT SLOs applied (chat defaults)
+    by_task = {r.task_type for r in reqs}
+    assert "text" in by_task
+    assert all(r.tbt_slo == 0.03 for r in reqs if r.task_type == "text")
+
+
+def test_fitted_chat_multi_turn_chains_extend_parents():
+    """Follow-up turns resubmit the conversation's full prompt: some chains
+    are proper prefixes of later chains (genuine multi-turn reuse), and all
+    requests of a class share its system-prompt template blocks."""
+    reqs = generate(cfg_for("fitted-chat", rate=12.0, duration=40.0))
+    chains = {r.prefix_hash for r in reqs}
+    extended = sum(
+        1 for r in reqs
+        for k in range(1, len(r.prefix_hash))
+        if r.prefix_hash[:k] in chains)
+    assert extended > 0
+    # the search-class template is 0.25 * 5976 tokens ~= 11 full blocks
+    tpl_blocks = int(0.25 * TABLE1["search"]["mean"]) // 128
+    assert tpl_blocks >= 2
+    search = [r for r in reqs if r.task_type == "search"]
+    assert len(search) >= 2
+    assert len({r.prefix_hash[:tpl_blocks] for r in search}) == 1
+
+
+# --------------------------------------------------------- scenario shapes
+
+def test_diurnal_concentrates_arrivals_at_peaks():
+    """rate_fn troughs at t=0 and peaks at t=period/2 (DIURNAL_CYCLES=2 ->
+    peaks at 15s and 45s of a 60s trace). Thinning must concentrate
+    arrivals there."""
+    reqs = generate(cfg_for("diurnal", rate=16.0, duration=60.0))
+
+    def count(lo, hi):
+        return sum(1 for r in reqs if lo <= r.arrival < hi)
+
+    peak = count(12, 18) + count(42, 48)
+    trough = count(0, 3) + count(27, 33) + count(57, 60)
+    assert peak > 2 * max(trough, 1)
+
+
+def test_heavy_tail_splices_pareto_outputs():
+    base = generate(cfg_for("fitted-chat", rate=16.0, duration=60.0))
+    tail = generate(cfg_for("heavy-tail", rate=16.0, duration=60.0))
+    frac = np.mean([r.output_tokens >= HEAVY_TAIL_SCALE for r in tail])
+    base_frac = np.mean([r.output_tokens >= HEAVY_TAIL_SCALE for r in base])
+    assert frac > base_frac + 0.03        # ~8% splice minus lognormal tail
+    assert max(r.output_tokens for r in tail) > 2000
+    assert all(r.output_tokens <= 8192 for r in tail)
+
+
+def test_flood_burst_confined_to_window():
+    cfg = cfg_for("flood", rate=8.0, duration=60.0)
+    base = generate(cfg_for("fitted-chat", rate=8.0, duration=60.0))
+    flood = generate(cfg)
+    base_set = set(as_tuples(base))
+    injected = [r for r, t in zip(flood, as_tuples(flood))
+                if t not in base_set]
+    assert injected
+    lo, hi = FLOOD_WINDOW[0] * cfg.duration, FLOOD_WINDOW[1] * cfg.duration
+    assert all(lo <= r.arrival < hi for r in injected)
+    assert all(r.task_type == "text" for r in injected)
+    # one shared 512-token template: 4 leading full blocks in common
+    assert len({r.prefix_hash[:4] for r in injected}) == 1
+    # the burst actually floods: ~6x the base rate inside the window
+    in_window = sum(1 for r in flood if lo <= r.arrival < hi)
+    base_in_window = sum(1 for r in base if lo <= r.arrival < hi)
+    assert in_window > 3 * base_in_window
+
+
+# ------------------------------------------------------ length-aware SLOs
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_length_aware_slo_floor(scenario):
+    """slo = max(class_slo, num_tokens * TTFT_SLO_PER_TOKEN) * slo_scale:
+    every request is feasible unloaded, typical lengths keep the class SLO,
+    and slo_scale multiplies through."""
+    slos = TABLE2_SLO["llama3-8b"]
+    reqs = generate(cfg_for(scenario))
+    for r in reqs:
+        expect = max(slos[r.task_type], r.num_tokens * TTFT_SLO_PER_TOKEN)
+        assert r.slo == pytest.approx(expect)
+    scaled = generate(cfg_for(scenario, slo_scale=2.0))
+    assert [r.slo for r in scaled] == \
+        pytest.approx([2.0 * r.slo for r in reqs])
+
+
+# ------------------------------------------- prefix-adversary collide/diverge
+
+def common_prefix_len(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def check_collide_then_diverge(reqs):
+    """Any two adversary chains share EXACTLY the trunk (same family) or
+    nothing (different families) — never a partial trunk, never a shared
+    tail block. This is what makes the trace adversarial: the trie gets
+    trunk hits only, and every tail block is inserted exactly once."""
+    assert all(len(r.prefix_hash) > ADVERSARY_TRUNK_BLOCKS for r in reqs)
+    families = {}
+    for r in reqs:
+        families.setdefault(r.prefix_hash[0], []).append(r)
+    assert len(families) <= ADVERSARY_FAMILIES
+    chains = [r.prefix_hash for r in reqs]
+    for i, a in enumerate(chains):
+        for b in chains[i + 1:]:
+            n = common_prefix_len(a, b)
+            assert n == (ADVERSARY_TRUNK_BLOCKS if a[0] == b[0] else 0)
+    return len(families)
+
+
+def test_prefix_adversary_collides_for_trunk_then_diverges():
+    reqs = generate(cfg_for("prefix-adversary", rate=4.0, duration=30.0))
+    n_families = check_collide_then_diverge(reqs)
+    assert n_families >= 5                # Zipf still spreads across trunks
+    assert all(r.task_type == "search" for r in reqs)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), rate=st.floats(0.5, 12.0))
+    @settings(max_examples=20, deadline=None)
+    def test_prefix_adversary_property(seed, rate):
+        reqs = generate(TraceConfig(scenario="prefix-adversary", seed=seed,
+                                    rate=rate, duration=20.0))
+        if len(reqs) >= 2:
+            check_collide_then_diverge(reqs)
+else:                                                 # pragma: no cover
+    @pytest.mark.parametrize("seed", [1, 2, 7, 13, 42])
+    def test_prefix_adversary_property(seed):
+        reqs = generate(TraceConfig(scenario="prefix-adversary", seed=seed,
+                                    rate=6.0, duration=20.0))
+        assert len(reqs) >= 2
+        check_collide_then_diverge(reqs)
+
+
+def test_session_fit_defaults_documented():
+    """docs/TRACES.md quotes CHAT_FIT verbatim — keep them honest."""
+    assert (CHAT_FIT.turns_mean, CHAT_FIT.turns_std, CHAT_FIT.max_turns) \
+        == (3.2, 2.6, 12)
+    assert (CHAT_FIT.think_mean, CHAT_FIT.think_cv) == (8.0, 1.4)
+    assert (CHAT_FIT.growth_mean, CHAT_FIT.growth_std) == (220.0, 260.0)
