@@ -23,7 +23,13 @@ discrete-event results, so cross-machine values match exactly and the
 tolerance only absorbs intentional drift).
 
     python -m benchmarks.compare --baseline benchmarks/baselines \
-        --fresh bench-artifacts [--tolerance 0.10]
+        --fresh bench-artifacts [--tolerance 0.10] \
+        [--summary-out "$GITHUB_STEP_SUMMARY"]
+
+``--summary-out`` appends a per-metric markdown table (baseline vs fresh vs
+bound, pass/fail) to the given file — CI points it at
+``$GITHUB_STEP_SUMMARY`` so gate trips are readable on the run page without
+downloading artifacts.
 
 Refreshing baselines after an intentional perf change:
 
@@ -82,15 +88,21 @@ def load_dir(path: str) -> Dict[str, Dict[str, float]]:
 
 def compare(baseline: Dict[str, Dict[str, float]],
             fresh: Dict[str, Dict[str, float]],
-            tolerance: float) -> Tuple[List[str], List[str]]:
-    """Returns (report lines, regression lines)."""
+            tolerance: float) -> Tuple[List[str], List[str], List[dict]]:
+    """Returns (report lines, regression lines, per-metric records).
+    Each record: {name, base, new, bound, delta, ok} — the structured form
+    `write_summary` renders as the CI step-summary table."""
     lines: List[str] = []
     regressions: List[str] = []
+    records: List[dict] = []
     for bench, base_metrics in sorted(baseline.items()):
         if bench not in fresh:
             regressions.append(
                 f"{bench}: no fresh BENCH_{bench}.json (bench vanished "
                 f"or failed — its _error row is not a metric)")
+            records.append({"name": f"{bench} (whole bench)", "base": "—",
+                            "new": "missing", "bound": "—", "delta": "—",
+                            "ok": False})
             continue
         fresh_metrics = fresh[bench]
         for name, base in sorted(base_metrics.items()):
@@ -100,6 +112,8 @@ def compare(baseline: Dict[str, Dict[str, float]],
             if name not in fresh_metrics:
                 regressions.append(f"{name}: gated metric missing from "
                                    f"fresh run (baseline={base})")
+                records.append({"name": name, "base": base, "new": "missing",
+                                "bound": "—", "delta": "—", "ok": False})
                 continue
             new = fresh_metrics[name]
             if lower:
@@ -114,6 +128,8 @@ def compare(baseline: Dict[str, Dict[str, float]],
                 bad = base > 0 and new < floor
                 bound = f"floor {floor:.3g}"
             delta = f"{(new / base - 1.0) * 100:+.1f}%" if base else "n/a"
+            records.append({"name": name, "base": base, "new": new,
+                            "bound": bound, "delta": delta, "ok": not bad})
             if bad:
                 regressions.append(f"{name}: {base} -> {new} "
                                    f"({delta}, {bound})")
@@ -121,7 +137,30 @@ def compare(baseline: Dict[str, Dict[str, float]],
                 lines.append(f"  ok {name}: {base} -> {new} ({delta})")
     for bench in sorted(set(fresh) - set(baseline)):
         lines.append(f"  new bench (no baseline, not gated): {bench}")
-    return lines, regressions
+    return lines, regressions, records
+
+
+def write_summary(path: str, records: List[dict], tolerance: float,
+                  n_benches: int) -> None:
+    """Append the gate outcome as a markdown table (GitHub step summary)."""
+    n_fail = sum(1 for r in records if not r["ok"])
+    verdict = "✅ PASS" if n_fail == 0 else f"❌ FAIL ({n_fail} regression(s))"
+    out = [
+        f"## Benchmark gate: {verdict}",
+        "",
+        f"{n_benches} baseline bench(es), {len(records)} gated metrics, "
+        f"tolerance ±{tolerance:.0%}.",
+        "",
+        "| metric | baseline | fresh | bound | Δ | status |",
+        "|---|---:|---:|---|---:|---|",
+    ]
+    # failures first so a long table never buries the trip
+    for r in sorted(records, key=lambda r: r["ok"]):
+        status = "ok" if r["ok"] else "**FAIL**"
+        out.append(f"| `{r['name']}` | {r['base']} | {r['new']} | "
+                   f"{r['bound']} | {r['delta']} | {status} |")
+    with open(path, "a") as fh:
+        fh.write("\n".join(out) + "\n")
 
 
 def main(argv=None) -> int:
@@ -135,6 +174,9 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative drop for gated metrics "
                     "(default 0.10 = -10%%)")
+    ap.add_argument("--summary-out", default=None, metavar="FILE",
+                    help="append a per-metric markdown table to FILE "
+                    "(CI passes $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
 
     baseline = load_dir(args.baseline)
@@ -143,7 +185,10 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
     fresh = load_dir(args.fresh)
-    lines, regressions = compare(baseline, fresh, args.tolerance)
+    lines, regressions, records = compare(baseline, fresh, args.tolerance)
+    if args.summary_out:
+        write_summary(args.summary_out, records, args.tolerance,
+                      len(baseline))
 
     print(f"benchmark gate: {len(baseline)} baseline bench(es), "
           f"tolerance -{args.tolerance:.0%}")

@@ -1,0 +1,201 @@
+"""Fig. 24 (colocation extension) — MEASURED colocation vs PD-disaggregation
+at equal hardware: the matchup the paper's fig16 only approximates with a
+hard-coded 35% utilization tax.
+
+Three pool shapes over the same 4 cards, same traces, same SLOs
+(`HybridSim` prices prefill chunks + woven decode steps into one
+budget-capped round from the SAME `PrefillCostModel`/`DecodeCostModel` the
+dedicated engines use — the interference is computed, not assumed):
+
+  * ``disagg``    — 2 prefill + 2 decode, decode-aware dispatch (the PR 4/5
+                    production stack: the PD baseline).
+  * ``mixed``     — 1 prefill + 1 decode + 2 hybrids with decode offload:
+                    hybrids absorb prefill bursts weave-free and hand
+                    completed prompts to the decode card, so decode
+                    consolidates where no chunk competes for the device.
+  * ``colocated`` — 4 hybrids, every stream decodes where it prefilled
+                    (no handoff at all; the pure-colocation extreme).
+
+Gated rows per (scenario, rate): e2e/TTFT/TBT attainment per pool, plus the
+``mixed_vs_disagg`` e2e ratio — the headline: under a prefill flood the
+mixed pool BEATS disaggregation (hybrids convert idle decode-card compute
+into prefill absorption), while under steady chat disaggregation holds the
+edge and pure colocation pays the measured weave tax at tight TBT SLOs.
+All sim rows are deterministic (seeded discrete-event results) and safe to
+gate at exact values.
+
+``real/*`` rows drive the REAL runtimes on the tiny bench config (fig21's):
+TBT attainment of `HybridInstance` decode streams WHILE prefill chunks run
+on the same device, against a dedicated `DecodeInstance` on the identical
+workload. The TBT SLO is self-calibrated to the dedicated instance's
+measured step time (runner-speed independent); committed baselines for
+these wall-clock rows are CONSERVATIVE acceptance thresholds, not one
+machine's measurements (docs/BENCHMARKS.md convention).
+"""
+import dataclasses
+
+from benchmarks.common import cached_scenario_trace
+from repro.sim.cluster import simulate_cluster
+
+DURATION = 20
+SEED = 3
+GRID = [("fitted-chat", 16), ("fitted-chat", 24), ("flood", 4), ("flood", 8)]
+
+# equal hardware: every pool is 4 cards of the same model
+POOLS = {
+    "disagg": dict(num_instances=2, decode_instances=2, decode_max_batch=16,
+                   dispatch="decode-aware", decode_policy="s-edf"),
+    "mixed": dict(num_instances=1, decode_instances=1, hybrid_instances=2,
+                  decode_max_batch=16, dispatch="least-loaded",
+                  decode_policy="s-edf", hybrid_token_budget=2048,
+                  hybrid_decode_offload=True),
+    "colocated": dict(num_instances=0, decode_instances=0,
+                      hybrid_instances=4, decode_max_batch=0,
+                      dispatch="least-loaded", decode_policy="s-edf",
+                      hybrid_token_budget=2048),
+}
+
+# --- real-runtime panel (tiny bench config, CPU) ---------------------------
+N_STREAMS = 4            # decode streams whose TBT is measured
+OUT_TOKENS = 48          # decoded tokens per measured stream
+PROMPT = 128             # one prompt length everywhere: one compile footprint
+N_PREFILLS = 6           # concurrent prefill pressure on the hybrid
+CHUNK = 64
+SLO_STEPS = 5.0          # TBT SLO = this many dedicated median step times
+CADENCE_STEPS = 2.0      # hybrid weave cadence in dedicated step times
+
+
+def _bench_model():
+    import jax
+
+    from repro.configs.base import get_tiny_config
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    return init_params(cfg, jax.random.PRNGKey(0)), cfg
+
+
+def _sim_rows(model):
+    rows = []
+    for scenario, rate in GRID:
+        reqs = cached_scenario_trace(scenario=scenario, rate=rate,
+                                     duration=DURATION, seed=SEED,
+                                     model=model)
+        att = {}
+        for pool, kw in POOLS.items():
+            # simulate_cluster copies requests before running: every pool
+            # replays the identical trace
+            res = simulate_cluster("flowprefill", reqs, model=model, **kw)
+            att[pool] = res.e2e_attainment
+            tag = f"fig24/{model}/{scenario}@r{rate}/{pool}"
+            rows.append((f"{tag}/e2e_attainment",
+                         round(res.e2e_attainment, 3),
+                         "TTFT and TBT SLOs both met (deterministic sim)"))
+            rows.append((f"{tag}/ttft_attainment",
+                         round(res.attainment, 3),
+                         "TTFT-SLO attainment"))
+            rows.append((f"{tag}/tbt_attainment",
+                         round(res.tbt_attainment, 3),
+                         "decode TBT/TPOT-SLO attainment (weave cadence "
+                         "holds the mean TPOT for colocated streams)"))
+        rows.append((f"fig24/{model}/{scenario}@r{rate}/mixed_vs_disagg",
+                     round(att["mixed"] / max(att["disagg"], 1e-9), 3),
+                     "e2e-attainment ratio at equal hardware (>1: the "
+                     "mixed pool beats PD-disaggregation — the flood rows "
+                     "are the headline win)"))
+    return rows
+
+
+def _measured_tbt(inst, mark):
+    return [s for s in inst.tbt_samples[mark:]]
+
+
+def _real_rows(model):
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.request import Request
+    from repro.models.model import prefill
+    from repro.serving.decode_instance import DecodeInstance, DecodeJob
+    from repro.serving.hybrid_instance import HybridInstance
+
+    params, cfg = _bench_model()
+    rng = np.random.default_rng(0)
+    max_seq = PROMPT + OUT_TOKENS + 8
+
+    def prompt():
+        return rng.integers(0, cfg.vocab_size, PROMPT).astype(np.int32)
+
+    def handoff(toks):
+        logits, cache = prefill(params, cfg, {"tokens": jnp.asarray(
+            toks[None, :], jnp.int32)}, max_seq=max_seq)
+        return int(jnp.argmax(logits, -1)[0]), \
+            {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+
+    def decode_req(slo):
+        return Request(num_tokens=PROMPT, slo=60.0, arrival=0.0,
+                       output_tokens=OUT_TOKENS, tbt_slo=slo)
+
+    # --- dedicated decode reference (warmup pass, then measured pass) ------
+    ded = DecodeInstance(params, cfg, decode_max_batch=N_STREAMS,
+                         decode_tokens=OUT_TOKENS)
+    for phase in ("warmup", "measure"):
+        mark = len(ded.tbt_samples)
+        for _ in range(N_STREAMS):
+            first, cache = handoff(prompt())
+            ded.submit(DecodeJob(request=decode_req(60.0), cache=cache,
+                                 first_token=first))
+        assert ded.drain(300.0), "dedicated decode did not drain"
+    ded_tbt = _measured_tbt(ded, mark)
+    ded.shutdown()
+    median = float(np.median(ded_tbt))
+    slo = SLO_STEPS * median
+
+    # --- hybrid under concurrent prefill (same self-calibrated SLO) --------
+    hyb = HybridInstance(params, cfg, max_seq=max_seq, chunk_tokens=CHUNK,
+                         token_budget=4 * CHUNK,
+                         decode_max_batch=N_STREAMS,
+                         decode_cadence=CADENCE_STEPS * median,
+                         kv_pool_blocks=128, prefix_share=False)
+    for phase in ("warmup", "measure"):
+        for _ in range(N_STREAMS):
+            hyb.submit(decode_req(slo), prompt())
+        # wait until every measured stream is actually decoding, then pile
+        # prefill-only requests onto the same device
+        deadline = time.monotonic() + 300.0
+        while hyb.resident() < N_STREAMS and time.monotonic() < deadline:
+            time.sleep(0.002)
+        mark = len(hyb.tbt_samples)
+        for _ in range(N_PREFILLS):
+            hyb.submit(Request(num_tokens=PROMPT, slo=60.0, arrival=0.0,
+                               output_tokens=0, tbt_slo=slo), prompt())
+        assert hyb.drain(300.0), "hybrid did not drain"
+    hyb_tbt = _measured_tbt(hyb, mark)
+    hyb.shutdown()
+
+    ded_att = sum(1 for s in ded_tbt if s <= slo) / max(len(ded_tbt), 1)
+    hyb_att = sum(1 for s in hyb_tbt if s <= slo) / max(len(hyb_tbt), 1)
+    note = (f"TBT SLO self-calibrated to {SLO_STEPS:.0f}x the dedicated "
+            f"median step ({median * 1e3:.1f} ms); committed baseline is "
+            f"the conservative acceptance threshold, not this measurement")
+    return [
+        (f"fig24/{model}/real/dedicated_tbt_attainment", round(ded_att, 3),
+         f"dedicated DecodeInstance, {N_STREAMS} streams x {OUT_TOKENS} "
+         f"tokens; {note}"),
+        (f"fig24/{model}/real/hybrid_tbt_attainment", round(hyb_att, 3),
+         f"HybridInstance decode TBT while {N_PREFILLS} prefills chunk "
+         f"through the same device (true inter-token gaps incl. weave "
+         f"pauses); {note}"),
+        (f"fig24/{model}/real/hybrid_vs_dedicated",
+         round(hyb_att / max(ded_att, 1e-9), 3),
+         f"TBT-attainment ratio under concurrent prefill — the acceptance "
+         f"criterion: colocated decode stays within tolerance of a "
+         f"dedicated instance; {note}"),
+    ]
+
+
+def run(model="llama3-8b"):
+    return _sim_rows(model) + _real_rows(model)

@@ -11,5 +11,6 @@ from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
 from repro.core.preemption import BlockingStats, PreemptionSignal, SyncCounter
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import (Action, Decision, DecodeEntry,
-                                  DecodeSchedulerCore, SchedulerCore,
+                                  DecodeSchedulerCore, HybridSchedulerCore,
+                                  HybridStepPlan, PrefillSlice, SchedulerCore,
                                   decode_sedf_priority, slo_aware_batching)

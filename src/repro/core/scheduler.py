@@ -31,7 +31,7 @@ from __future__ import annotations
 import enum
 import math
 from dataclasses import dataclass, field
-from typing import (Callable, List, Optional, Sequence, Set, Tuple)
+from typing import (Callable, List, Mapping, Optional, Sequence, Set, Tuple)
 
 import numpy as np
 
@@ -344,3 +344,148 @@ class DecodeSchedulerCore:
         preempted = [e.key for e in ranked
                      if e.key in resident and e.key not in chosen]
         return batch, preempted
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (colocated prefill + decode) scheduling: one token-budget step
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrefillSlice:
+    """One prefill admission in a hybrid step: `n_tokens` of request `key`'s
+    prompt, starting at token `offset` (the request's resume point — a
+    preempted prefill continues exactly where its last admitted slice ended,
+    which the executor maps to an operator offset)."""
+    key: int
+    offset: int
+    n_tokens: int
+
+
+@dataclass
+class HybridStepPlan:
+    """What one budget-capped hybrid step runs: the resident decode batch
+    (one token each) plus the prefill chunk slices that fit in the remaining
+    budget. ``budget_used = len(decode_keys) + sum(slice tokens)`` and never
+    exceeds the configured token budget."""
+    decode_keys: List[int] = field(default_factory=list)
+    preempted_decode: List[int] = field(default_factory=list)
+    prefill_slices: List[PrefillSlice] = field(default_factory=list)
+    budget_used: int = 0
+
+    @property
+    def empty(self) -> bool:
+        return not self.decode_keys and not self.prefill_slices
+
+
+@dataclass
+class HybridSchedulerCore:
+    """Token-budget colocation scheduler: packs all admitted decode tokens
+    plus operator-bounded prefill chunk slices into ONE budget-capped step
+    (the nano-vLLM / Sarathi chunked-prefill shape — decode first, prefill
+    fills the rest — upgraded with S-EDF deadlines on both phases).
+
+    COMPOSES the two standalone policy cores rather than reimplementing
+    them: decode admission is `DecodeSchedulerCore.select_batch` verbatim,
+    prefill ordering is `SchedulerCore.rank` verbatim — so with
+    ``policy="fcfs"`` and ``token_budget <= 0`` (unbounded) the hybrid plan
+    is bit-identical to what the standalone engines would run, which
+    tests/test_hybrid.py asserts property-style.
+
+    Per `plan_step`:
+
+    1. *Decode first* — every resident/queued decode stream costs one budget
+       token. The slot cap is ``min(decode_max_batch, budget)``; when the
+       BUDGET (not the slot cap) is binding, streams squeezed out are
+       recorded and admitted ahead of rank next step, so a resident decode
+       row is never skipped two consecutive steps (guaranteed whenever the
+       skipped set itself fits the budget, i.e. candidates <= 2x budget).
+    2. *Prefill fills the remainder* — waiting prefills ranked by the
+       prefill core's policy (S-EDF by default) each get one chunk-sized
+       slice starting at their resume offset; the last admitted slice is
+       truncated to the remaining budget (the executor rounds truncation to
+       an operator boundary; the budget bound still holds in tokens).
+
+    Preemption falls out of admission: a prefill not sliced this step simply
+    does not run (its offset — and therefore its operator cursor — is
+    untouched), and a decode not selected keeps its KV and progress. Both
+    are the zero-copy preemption semantics of the standalone engines.
+    """
+    prefill: SchedulerCore
+    decode: DecodeSchedulerCore = field(default_factory=DecodeSchedulerCore)
+    token_budget: int = 4096          # G: tokens per hybrid step (<= 0: inf)
+    chunk_tokens: int = 512           # prefill slice quantum (<= 0: whole)
+    decode_max_batch: int = 0         # decode slot cap (<= 0: unbounded)
+    # decode keys the budget squeezed out of the previous step's batch
+    # (resident rows owed an admission — see the fairness rule above)
+    _owed: Set[int] = field(default_factory=set)
+
+    def _select_decode(self, entries: Sequence[DecodeEntry],
+                       resident: Set[int], now: float,
+                       t_step: float) -> Tuple[List[int], List[int]]:
+        """Decode admission under min(slot cap, token budget). Delegates to
+        the standalone `select_batch` whenever the slot cap (or nothing) is
+        binding — bit-identical batches; only a binding BUDGET engages the
+        owed-rows carry."""
+        budget = self.token_budget
+        cap = self.decode_max_batch
+        budget_binding = budget > 0 and (cap <= 0 or budget < cap) \
+            and len(entries) > budget
+        if not budget_binding:
+            self._owed = set()
+            return self.decode.select_batch(entries, resident, cap, now,
+                                            t_step)
+        owed = [e for e in entries if e.key in self._owed]
+        owed = self.decode.rank(owed, now, t_step)[:budget]
+        owed_keys = {e.key for e in owed}
+        rest_cap = budget - len(owed)
+        rest = [e for e in entries if e.key not in owed_keys]
+        fill: List[int] = []
+        if rest_cap > 0 and rest:
+            fill, _ = self.decode.select_batch(
+                rest, resident - owed_keys, rest_cap, now, t_step)
+            fill = fill[:rest_cap]
+        batch = [e.key for e in owed] + fill
+        chosen = set(batch)
+        preempted = [e.key for e in entries
+                     if e.key in resident and e.key not in chosen]
+        self._owed = {e.key for e in entries
+                      if e.key in resident and e.key not in chosen}
+        return batch, preempted
+
+    def plan_step(self, now: float, *,
+                  prefill: Sequence[Request],
+                  prefill_done: Mapping[int, int],
+                  decode_entries: Sequence[DecodeEntry],
+                  decode_resident: Set[int],
+                  t_step: float = 0.0) -> HybridStepPlan:
+        """Plan one hybrid step. ``prefill`` are the waiting/partial prefill
+        requests; ``prefill_done[rid]`` is how many prompt tokens of each are
+        already computed (the resume offset). ``decode_entries`` covers
+        resident AND queued decode streams; ``decode_resident`` the current
+        slot holders; ``t_step`` the predicted per-token decode latency the
+        decode S-EDF ranks with."""
+        plan = HybridStepPlan()
+        budget = self.token_budget if self.token_budget > 0 else 0
+        if decode_entries:
+            plan.decode_keys, plan.preempted_decode = self._select_decode(
+                decode_entries, decode_resident, now, t_step)
+        used = len(plan.decode_keys)
+        left = (budget - used) if budget else float("inf")
+        if prefill and left > 0:
+            quantum = self.chunk_tokens
+            for req in self.prefill.rank(prefill, now):
+                if left <= 0:
+                    break
+                done = int(prefill_done.get(req.rid, 0))
+                remaining = int(req.num_tokens) - done
+                if remaining <= 0:
+                    continue
+                n = remaining if quantum <= 0 else min(quantum, remaining)
+                n = int(min(n, left))
+                plan.prefill_slices.append(
+                    PrefillSlice(key=req.rid, offset=done, n_tokens=n))
+                used += n
+                left -= n
+        plan.budget_used = used
+        return plan

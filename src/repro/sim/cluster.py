@@ -29,23 +29,28 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
-                                 InstanceLoad, make_dispatch,
-                                 plan_decode_migrations)
+                                 InstanceLoad, competing_tokens,
+                                 make_dispatch, plan_decode_migrations)
 from repro.core.metrics import percentile_report, slo_frac_percentile
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
 from repro.core.prefixcache import PrefixBlockManager
-from repro.core.request import Request
-from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import (DecodeEntry, DecodeSchedulerCore,
+                                  HybridSchedulerCore, SchedulerCore)
 from repro.sim.costmodel import (DecodeCostModel, HardwareSpec,
                                  PrefillCostModel, resolve_hardware)
 from repro.sim.simulator import (ARRIVAL, DECODE_DONE, DECODE_JOIN,
                                  InstanceEngine, SimConfig, handle_event,
                                  reset_requests)
+
+# hybrid-instance step completion (the colocated engine self-chains these;
+# prefill/decode event kinds 0..4 live in repro.sim.simulator)
+HYBRID_STEP = 5
 
 # token count at which per-instance peak prefill throughput (the
 # capacity-weighted dispatch normalizer) is probed: long enough to saturate
@@ -227,6 +232,226 @@ class DecodeSim:
 
 
 @dataclass
+class _HybridPrefill:
+    """One prompt mid-prefill on a hybrid instance: `done` tokens computed
+    so far — the resume offset the next admitted slice starts at."""
+    request: Request
+    done: int = 0
+
+
+class HybridSim:
+    """One colocated (prefill + decode) instance: the unified token-budget
+    runtime's cost-model twin (serving/hybrid_instance.py — evaluated is
+    deployed: both drive the SAME `HybridSchedulerCore`).
+
+    Round-driven rather than task-driven: each self-chained HYBRID_STEP event
+    executes one `plan_step` round — the admitted prefill slices run as
+    operator-chunked compute, and decode steps are WOVEN between operators at
+    an SLO-derived cadence (the colocation payoff of operator-level
+    interruption: a prefill chunk yields to decode within ~1 operator, so
+    decode TBT is set by the weave cadence, not by whole-chunk serialization).
+    With C = sum of slice costs, s = DecodeCostModel.step_time(B, mean_ctx),
+    and cadence target tau = margin * min resident tbt_slo (clamped to
+    s + one operator — the true yield latency floor), the round prices as
+
+        k      = ceil(C / (tau - s))     woven decode steps (>= 1)
+        t_round = round_overhead + C + k*s
+
+    so every admitted decode stream advances k tokens with TPOT ~= tau, and
+    phase interference is the measured-model cost of real work serialized at
+    operator granularity — not fig16's hard-coded 0.65 utilization tax. A
+    prefill-completed request joins THIS instance's decode phase directly
+    (its KV is already in the shared pool — no PD handoff, no
+    `kv_transfer_time`)."""
+
+    # decode cadence targets this fraction of the tightest resident TBT SLO,
+    # leaving headroom for round overheads and plan jitter
+    CADENCE_MARGIN = 0.8
+
+    def __init__(self, cost: PrefillCostModel, decode_cost: DecodeCostModel,
+                 heap: List, seq, instance_id: int = 0, *,
+                 token_budget: int = 4096, chunk_tokens: int = 512,
+                 decode_max_batch: int = 0, policy: str = "s-edf",
+                 decode_policy: str = "s-edf",
+                 decode_preempt: Optional[bool] = None,
+                 predictor: Optional[TTFTPredictor] = None,
+                 round_overhead: float = 100e-6, capacity: float = 1.0):
+        self.cost = cost
+        self.decode_cost = decode_cost
+        self.heap = heap
+        self.seq = seq
+        self.instance_id = instance_id
+        self.capacity = capacity
+        self.predictor = predictor
+        self.chunk_tokens = chunk_tokens
+        self.round_overhead = round_overhead
+        self.core = HybridSchedulerCore(
+            prefill=SchedulerCore(predictor=predictor, policy=policy,
+                                  enable_batching=False),
+            decode=DecodeSchedulerCore(
+                policy=decode_policy,
+                preempt=(decode_policy == "s-edf") if decode_preempt is None
+                else decode_preempt),
+            token_budget=token_budget, chunk_tokens=chunk_tokens,
+            decode_max_batch=decode_max_batch)
+        # yield latency floor: the longest single operator of a budget-sized
+        # chunk — decode can interrupt prefill no faster than one operator
+        probe = chunk_tokens if chunk_tokens > 0 else 512
+        self.op_yield = float(max(cost.op_durations(probe, chunk_tokens)))
+        self.prefills: Dict[int, _HybridPrefill] = {}
+        self.jobs: Dict[int, _DecodeJob] = {}     # every local decode stream
+        self.resident: Set[int] = set()           # last step's decode batch
+        self.busy = False
+        self.epoch = 0
+        self.steps = 0
+        self.preemptions = 0                      # decode displacements
+        self.finished: List[Request] = []
+        self.n_dispatched = 0
+        self.blocking: List[float] = []           # kept for result plumbing
+        self._order = itertools.count()
+        # mixed-pool wiring (set by ClusterSim.run when a dedicated decode
+        # pool exists and hybrid_decode_offload is on): completed prefills
+        # hand off instead of decoding locally, so the hybrid stays a
+        # weave-tax-free prefill absorber and decode consolidates on the
+        # dedicated cards
+        self.offload: Optional[Callable[[Request, float], None]] = None
+
+    # ---------------------------------------------------------------- load
+    def snapshot_load(self, candidate: Request, now: float) -> InstanceLoad:
+        items = [(float(p.request.num_tokens - p.done),
+                  p.request.deadline) for p in self.prefills.values()]
+        predict = self.predictor.predict if self.predictor is not None \
+            else None
+        return InstanceLoad(
+            instance_id=self.instance_id,
+            queued_tokens=competing_tokens(items, candidate, now, predict),
+            n_outstanding=len(self.prefills),
+            capacity=self.capacity)
+
+    def pressure(self, req: Request, now: float) -> float:
+        """Predicted TBT pressure were this request decoded here — the SAME
+        `DecodeLoad.effective_step` formula DecodeSim/the migration planner
+        price with, over the local decode population."""
+        if req.tbt_slo <= 0 or not math.isfinite(req.tbt_slo):
+            return 0.0
+        cap = self.core.decode_max_batch
+        n = len(self.jobs)
+        n_res = min(n, cap) if cap > 0 else n
+        load = DecodeLoad(instance_id=self.instance_id, n_resident=n_res,
+                          n_waiting=n - n_res,
+                          ctx_tokens=sum(j.context for j in self.jobs.values()),
+                          max_batch=cap, step_time=self.decode_cost.step_time)
+        return load.effective_step(1, float(req.num_tokens)) / req.tbt_slo
+
+    # --------------------------------------------------------------- events
+    def on_arrival(self, req: Request, now: float) -> None:
+        self.n_dispatched += 1
+        self.prefills[req.rid] = _HybridPrefill(request=req)
+        if not self.busy:
+            self._start_step(now)
+
+    def _decode_entries(self) -> List[DecodeEntry]:
+        return [DecodeEntry(key=rid, remaining_tokens=j.remaining,
+                            deadline=j.request.decode_deadline, order=j.order)
+                for rid, j in self.jobs.items()]
+
+    def _start_step(self, now: float) -> None:
+        """Plan one hybrid step and schedule its completion event."""
+        entries = self._decode_entries()
+        t_hint = 0.0
+        if entries:
+            cap = self.core.decode_max_batch
+            b = min(len(entries), cap) if cap > 0 else len(entries)
+            ctx = sum(j.context for j in self.jobs.values()) / len(self.jobs)
+            t_hint = self.decode_cost.step_time(b, ctx)
+        plan = self.core.plan_step(
+            now, prefill=[p.request for p in self.prefills.values()],
+            prefill_done={rid: p.done for rid, p in self.prefills.items()},
+            decode_entries=entries, decode_resident=self.resident,
+            t_step=t_hint)
+        if plan.empty:
+            self.busy = False
+            return
+        for rid in plan.preempted_decode:
+            self.preemptions += 1
+            self.jobs[rid].request.decode_preemptions += 1
+        s_dec = 0.0
+        if plan.decode_keys:
+            ctx = sum(self.jobs[k].context for k in plan.decode_keys) \
+                / len(plan.decode_keys)
+            s_dec = self.decode_cost.step_time(len(plan.decode_keys), ctx)
+        c_pre = 0.0
+        for s in plan.prefill_slices:
+            # incremental resumed-chunk cost: compute [offset, offset+n)
+            # with the first `offset` tokens' KV already present
+            c_pre += self.cost.prefill_time(s.offset + s.n_tokens,
+                                            self.chunk_tokens, prefix=s.offset)
+        # weave k decode steps through the round's prefill compute at the
+        # SLO-derived cadence (see class docstring); pure decode rounds and
+        # pure prefill rounds degenerate to k=1 / k=0
+        k = 0
+        if plan.decode_keys:
+            if c_pre > 0:
+                tau = self.CADENCE_MARGIN * min(
+                    (self.jobs[key].request.tbt_slo
+                     for key in plan.decode_keys
+                     if math.isfinite(self.jobs[key].request.tbt_slo)
+                     and self.jobs[key].request.tbt_slo > 0),
+                    default=math.inf)
+                gap = max(tau - s_dec, self.op_yield)
+                k = max(1, math.ceil(c_pre / gap)) if math.isfinite(gap) \
+                    else 1
+            else:
+                k = 1
+        t = self.round_overhead + c_pre + k * s_dec
+        self.busy = True
+        self.epoch += 1
+        heapq.heappush(self.heap, (now + t, next(self.seq), HYBRID_STEP,
+                                   (self, self.epoch, plan, k)))
+
+    def on_step(self, payload, now: float) -> None:
+        _, epoch, plan, k = payload
+        if epoch != self.epoch:
+            return                                 # stale (defensive)
+        self.steps += 1
+        done_decode: List[int] = []
+        for key in plan.decode_keys:
+            j = self.jobs[key]
+            j.done += min(float(k), j.remaining)
+            if j.done >= j.request.output_tokens:
+                r = j.request
+                r.finish_time = now
+                r.mean_tpot = (now - j.joined) / max(r.output_tokens, 1)
+                done_decode.append(key)
+                self.finished.append(r)
+        gone = set(done_decode)
+        for key in gone:
+            del self.jobs[key]
+        self.resident = {k for k in plan.decode_keys if k not in gone}
+        for s in plan.prefill_slices:
+            p = self.prefills[s.key]
+            p.done += s.n_tokens
+            r = p.request
+            # remaining-work basis for S-EDF ranking (ops_total stays 0, so
+            # Request.remaining_tokens() reads batch_tokens directly)
+            r.batch_tokens = max(r.num_tokens - p.done, 1)
+            if p.done >= r.num_tokens:
+                r.first_token_time = now
+                r.state = RequestState.DONE
+                del self.prefills[s.key]
+                if r.output_tokens > 0:
+                    if self.offload is not None:
+                        self.offload(r, now)
+                    else:
+                        # local decode join: the KV is already resident —
+                        # no PD handoff, no transfer pricing
+                        r.decode_start = now
+                        self.jobs[r.rid] = _DecodeJob(
+                            request=r, joined=now, order=next(self._order))
+        self._start_step(now)
+
+
+@dataclass
 class ClusterResult:
     requests: List[Request]
     blocking_times: List[float]
@@ -348,12 +573,16 @@ class ClusterSim:
                  migration_knee: float = 0.85,
                  max_migrations: int = 1,
                  prefix_cache_blocks: int = 0,
-                 prefix_block: int = 128):
+                 prefix_block: int = 128,
+                 hybrid_instances: int = 0,
+                 hybrid_token_budget: Optional[int] = None,
+                 hybrid_chunk_tokens: Optional[int] = None,
+                 hybrid_decode_offload: bool = False):
         if hardware is not None:
             hardware = [resolve_hardware(hw) for hw in hardware]
             num_instances = len(hardware)
-        if num_instances < 1:
-            raise ValueError("num_instances must be >= 1")
+        if num_instances < 1 and hybrid_instances < 1:
+            raise ValueError("need at least one prefill or hybrid instance")
         self.cost = cost
         self.cfg = sim_cfg
         chunk = sim_cfg.chunk_tokens
@@ -418,6 +647,24 @@ class ClusterSim:
         # sharing: every request prefills from token 0 (the original model).
         self.prefix_cache_blocks = prefix_cache_blocks
         self.prefix_block = prefix_block
+        # colocated pool: `hybrid_instances` HybridSim engines appended after
+        # the prefill pool in dispatch order (indices num_instances..), each
+        # running prefill chunks + local decode in one token-budget step.
+        # Budget defaults to the sim batch budget, slice quantum to the
+        # prefill chunk size; 0 instances leaves every legacy path untouched.
+        self.num_hybrid = hybrid_instances
+        self.hybrid_token_budget = sim_cfg.batch_budget \
+            if hybrid_token_budget is None else hybrid_token_budget
+        self.hybrid_chunk_tokens = sim_cfg.chunk_tokens \
+            if hybrid_chunk_tokens is None else hybrid_chunk_tokens
+        self.hybrid_decode_cost = decode_cost \
+            or DecodeCostModel(cost.m, cost.hw)
+        self.hybrid_capacity = cost.throughput(CAPACITY_PROBE_TOKENS, chunk) \
+            if hybrid_instances > 0 else 0.0
+        # mixed pools: hand hybrid-prefilled streams to the dedicated decode
+        # pool (requires one) instead of decoding them locally
+        self.hybrid_decode_offload = hybrid_decode_offload \
+            and hybrid_instances > 0 and self.num_decode > 0
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
@@ -437,6 +684,18 @@ class ClusterSim:
                                  policy=self.decode_policy,
                                  preempt=self.decode_preempt))
                    for i in range(self.num_decode)]
+        hybrids = [HybridSim(self.cost, self.hybrid_decode_cost, heap, seq,
+                             instance_id=self.num_instances + i,
+                             token_budget=self.hybrid_token_budget,
+                             chunk_tokens=self.hybrid_chunk_tokens,
+                             decode_max_batch=self.decode_max_batch,
+                             policy=self.cfg.policy,
+                             decode_policy=self.decode_policy,
+                             decode_preempt=self.decode_preempt,
+                             predictor=self.predictor,
+                             round_overhead=self.cfg.round_overhead,
+                             capacity=self.hybrid_capacity)
+                   for i in range(self.num_hybrid)]
         n_migrations = 0
         reset_requests(requests)
         for r in requests:
@@ -445,6 +704,9 @@ class ClusterSim:
         idle_loads = [InstanceLoad(instance_id=e.instance_id,
                                    capacity=e.capacity)
                       for e in engines]
+        idle_hloads = [InstanceLoad(instance_id=h.instance_id,
+                                    capacity=h.capacity)
+                       for h in hybrids]
         with_pressure = self.policy.needs_decode_pressure and decodes
         # per-instance prefix-cache residency (None = sharing disabled);
         # exposed as `prefix_managers` for leak/invariant inspection
@@ -488,6 +750,16 @@ class ClusterSim:
                                       (decodes[dst_id], job)))
             return len(plan)
 
+        if self.hybrid_decode_offload and decodes:
+            def hybrid_offload(r: Request, t: float) -> None:
+                nonlocal n_migrations
+                dec = min(decodes, key=lambda d: (d.backlog, d.instance_id))
+                dec.join(r, t)
+                if self.decode_migration:
+                    n_migrations += migrate_from(dec, t)
+            for h in hybrids:
+                h.offload = hybrid_offload
+
         now = 0.0
         while heap:
             now, _, kind, payload = heapq.heappop(heap)
@@ -518,15 +790,31 @@ class ClusterSim:
                                 predictors[i].predict(n)
                                 - predictors[i].predict(n - hits[i]), 0.0))
                             for i, ld in enumerate(loads)]
+                if hybrids:
+                    # colocated pool joins the dispatch decision after the
+                    # prefill pool: same policy, same load vocabulary (queued
+                    # prefill tokens + own decode pressure)
+                    if self.policy.needs_loads:
+                        hloads = [h.snapshot_load(req, now) for h in hybrids]
+                    else:
+                        hloads = idle_hloads
+                    if self.policy.needs_decode_pressure:
+                        hloads = [replace(ld, decode_pressure=hybrids[
+                            i].pressure(req, now))
+                            for i, ld in enumerate(hloads)]
+                    loads = list(loads) + hloads
                 idx = self.policy.select(req, loads, now)
-                if hits is not None:
+                if hits is not None and idx < len(engines):
                     # pin the hit until the dependent prefill completes —
                     # eviction must never pull KV out from under it
                     req.prefix_hit = hits[idx]
                     mgrs[idx].lock_prefix(
                         req.rid, req.prefix_hash or (),
                         max_blocks=(hits[idx] + bs - 1) // bs)
-                engines[idx].on_arrival(req, now)
+                if idx < len(engines):
+                    engines[idx].on_arrival(req, now)
+                else:
+                    hybrids[idx - len(engines)].on_arrival(req, now)
             elif kind == DECODE_DONE:
                 dec: DecodeSim = payload[0]
                 if dec.on_decode_done(payload, now) and self.decode_migration:
@@ -539,6 +827,8 @@ class ClusterSim:
                 fl[0] -= 1
                 fl[1] -= job.context
                 dec.migrate_in(job, now)
+            elif kind == HYBRID_STEP:
+                payload[0].on_step(payload, now)
             else:
                 engine: InstanceEngine = payload[0]
                 for r in handle_event(kind, payload, now):
@@ -564,12 +854,16 @@ class ClusterSim:
         return ClusterResult(
             requests=list(requests),
             blocking_times=[b for e in engines for b in e.blocking],
-            rounds=sum(e.rounds for e in engines),
+            rounds=sum(e.rounds for e in engines)
+            + sum(h.steps for h in hybrids),
             preemptions=sum(e.preemptions for e in engines),
             makespan=now,
-            dispatched=[e.n_dispatched for e in engines],
-            decoded=sum(len(d.finished) for d in decodes),
-            decode_preemptions=sum(d.preemptions for d in decodes),
+            dispatched=[e.n_dispatched for e in engines]
+            + [h.n_dispatched for h in hybrids],
+            decoded=sum(len(d.finished) for d in decodes)
+            + sum(len(h.finished) for h in hybrids),
+            decode_preemptions=sum(d.preemptions for d in decodes)
+            + sum(h.preemptions for h in hybrids),
             migrations=n_migrations,
             prefix_hit_tokens=sum(r.prefix_hit for r in requests),
             prefix_evictions=sum(m.evictions for m in mgrs) if mgrs else 0,
@@ -592,14 +886,22 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      max_migrations: int = 1,
                      prefix_cache_blocks: int = 0,
                      prefix_block: int = 128,
+                     hybrid_instances: int = 0,
+                     hybrid_token_budget: Optional[int] = None,
+                     hybrid_chunk_tokens: Optional[int] = None,
+                     hybrid_decode_offload: bool = False,
                      **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
     presets, same fresh-copy semantics, plus instance count, dispatch,
     heterogeneous pool layout (`hardware` / `decode_hardware` accept
     HardwareSpecs or names like "a800"), decode scheduling
     (`decode_max_batch` / `decode_policy` / `decode_preempt` /
-    `decode_migration`), and prefix-cache sharing (`prefix_cache_blocks`
-    per-instance residency capacity + the `prefix-affinity` dispatch)."""
+    `decode_migration`), prefix-cache sharing (`prefix_cache_blocks`
+    per-instance residency capacity + the `prefix-affinity` dispatch), and
+    colocated pools (`hybrid_instances` unified prefill+decode engines —
+    pool layouts mix freely: `num_instances=0, hybrid_instances=4` is fully
+    colocated, `num_instances=1, decode_instances=1, hybrid_instances=2`
+    is a mixed pool at the same card count as 2P+2D disaggregation)."""
     import copy
 
     from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
@@ -620,5 +922,9 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      migration_knee=migration_knee,
                      max_migrations=max_migrations,
                      prefix_cache_blocks=prefix_cache_blocks,
-                     prefix_block=prefix_block)
+                     prefix_block=prefix_block,
+                     hybrid_instances=hybrid_instances,
+                     hybrid_token_budget=hybrid_token_budget,
+                     hybrid_chunk_tokens=hybrid_chunk_tokens,
+                     hybrid_decode_offload=hybrid_decode_offload)
     return sim.run([copy.copy(r) for r in requests])

@@ -118,6 +118,13 @@ def test_gated_metric_selection():
     gap = "fig23/llama3-8b/flood/s-edf-prefill/mean_tail_gap_x"
     assert not is_gated(gap)
     assert not is_gated_lower(gap)
+    # fig24 colocation rows: attainments and the equal-hardware ratio gate
+    # higher-is-better, for the sim pools AND the real-runtime panel
+    assert is_gated("fig24/llama3-8b/flood@r4/mixed/e2e_attainment")
+    assert is_gated("fig24/llama3-8b/flood@r4/mixed_vs_disagg")
+    assert is_gated("fig24/llama3-8b/real/hybrid_tbt_attainment")
+    assert is_gated("fig24/llama3-8b/real/hybrid_vs_dedicated")
+    assert not is_gated_lower("fig24/llama3-8b/real/hybrid_vs_dedicated")
 
 
 def test_gate_trips_on_fig21_scaling_regression(dirs):
@@ -260,6 +267,42 @@ def test_gate_trips_on_p99_tail_regression(dirs):
     assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
+def test_gate_trips_on_fig24_colocation_regression(dirs):
+    """The colocation acceptance: the mixed-pool win over PD-disaggregation
+    and the hybrid runtime's TBT attainment under concurrent prefill are
+    both committed thresholds — losing either (dispatch mixing broken, or
+    the weave starving decode) must trip; holding the line passes."""
+    base, fresh = dirs
+    fig24_base = {
+        "fig24/llama3-8b/flood@r4/mixed/e2e_attainment": 0.884,
+        "fig24/llama3-8b/flood@r4/disagg/e2e_attainment": 0.715,
+        "fig24/llama3-8b/flood@r4/mixed_vs_disagg": 1.236,
+        "fig24/llama3-8b/real/hybrid_tbt_attainment": 0.66,
+        "fig24/llama3-8b/real/hybrid_vs_dedicated": 0.66,
+    }
+    write_bench(base, "fig24", fig24_base)
+    write_bench(fresh, "fig9", BASE)
+    # the mixed pool losing its equal-hardware edge trips
+    lost = dict(fig24_base, **{
+        "fig24/llama3-8b/flood@r4/mixed/e2e_attainment": 0.70,
+        "fig24/llama3-8b/flood@r4/mixed_vs_disagg": 0.98})
+    write_bench(fresh, "fig24", lost)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # the weave starving resident decode (TBT attainment collapsing under
+    # concurrent prefill) trips
+    starved = dict(fig24_base, **{
+        "fig24/llama3-8b/real/hybrid_tbt_attainment": 0.3,
+        "fig24/llama3-8b/real/hybrid_vs_dedicated": 0.3})
+    write_bench(fresh, "fig24", starved)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # a fast runner clearing the conservative thresholds passes
+    ok = dict(fig24_base, **{
+        "fig24/llama3-8b/real/hybrid_tbt_attainment": 1.0,
+        "fig24/llama3-8b/real/hybrid_vs_dedicated": 1.0})
+    write_bench(fresh, "fig24", ok)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+
+
 def test_run_only_rejects_unknown_figure_names(capsys):
     with pytest.raises(SystemExit) as exc:
         bench_run.main(["--only", "fig9,fig99"])
@@ -274,8 +317,8 @@ def test_committed_baselines_are_wellformed():
     from benchmarks.compare import load_dir
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
-    assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23"} \
-        <= set(baselines)
+    assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23",
+            "fig24"} <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
     assert len(gated) >= 50
@@ -313,6 +356,17 @@ def test_committed_baselines_are_wellformed():
         tails = [m for m in fig23
                  if f"/{scen}/" in m and is_gated_lower(m)]
         assert tails, f"no gated tail row for scenario {scen}"
+    # the fig24 colocation acceptances are committed and actually hold:
+    # the mixed pool beats PD-disaggregation on e2e attainment at equal
+    # hardware in the flood scenario, and the hybrid runtime's decode TBT
+    # attainment under concurrent prefill clears its conservative threshold
+    # both absolutely and relative to a dedicated decode instance
+    fig24 = baselines["fig24"]
+    assert fig24["fig24/llama3-8b/flood@r4/mixed_vs_disagg"] > 1.0
+    assert fig24["fig24/llama3-8b/flood@r4/mixed/e2e_attainment"] \
+        > fig24["fig24/llama3-8b/flood@r4/disagg/e2e_attainment"]
+    assert fig24["fig24/llama3-8b/real/hybrid_tbt_attainment"] >= 0.66
+    assert fig24["fig24/llama3-8b/real/hybrid_vs_dedicated"] >= 0.66
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]
