@@ -1,0 +1,218 @@
+"""Fig. 25 (tiered-KV extension) — HBM -> host -> disk prefix-cache tiers:
+goodput vs HBM cache capacity, and the measured real-runtime
+promote-vs-recompute crossover.
+
+A single-tier prefix cache collapses the moment the shared-prefix working
+set outgrows HBM residency: LRU eviction *destroys* KV that a follow-up
+will need seconds later, so every capacity miss is a full recompute. The
+tiered cache (`TieredBlockManager` + `PagedKVCache` host/disk tiers)
+demotes evicted blocks down a host tier (then a disk tier) instead, and
+dispatch prices warm/cold/absent as three prices: a cold hit is taken only
+when the promotion copy (host_bw/disk_bw links in `HardwareSpec`) beats
+the predictor-priced recompute — `InstanceLoad.ttft_saved` is already NET
+of the copy.
+
+Panels:
+
+  a) capacity sweep — 4xA800 prefill pool on a session re-entry trace
+     (64 agent sessions, each turn resubmitting the whole history, turns
+     interleaved round-robin across sessions — the production workload
+     motivating KV offload: inter-turn reuse distance spans the WHOLE
+     session population, LRU's cyclic-scan worst case). TTFT goodput of
+     one-tier vs tiered (same HBM residency + host/disk tiers) while
+     per-instance HBM cache blocks shrink 512 -> 64. With residency >=
+     working set the two are identical (the tier is pure fallback); as HBM
+     shrinks, one-tier hit rate collapses toward zero (every block ages
+     out before its session's next turn) while tiered serves the same hits
+     as promotions. Acceptance (CI-gated): tiered >= 1.5x one-tier goodput
+     at the smallest capacity point (ratio floored at the lowest swept
+     rate when one-tier's goodput is 0 — the committed value understates
+     the win), and the promote hit rate there is ~1 (every hit came up a
+     tier).
+  b) real runtime — a `PrefillInstance` with a tiered `PagedKVCache` on
+     the tiny bench model: a prompt is cached, flooded out of HBM into the
+     host tier, then resubmitted. The resubmission promotes (async
+     host->HBM copy, checksum-verified) instead of recomputing.
+     Acceptance (CI-gated): promoted >= 3x faster than the cold prefill.
+     Wall-clock convention (docs/BENCHMARKS.md): the committed baseline is
+     the conservative tolerance-compensated threshold, not one machine's
+     measurement (steady-state CPU measures 5-30x).
+"""
+import dataclasses
+import time
+
+from repro.core.metrics import max_goodput
+from repro.core.prefixcache import chain_extend
+from repro.core.request import Request
+from repro.sim.cluster import simulate_cluster
+
+RATES = [16, 24, 32, 48, 64, 96]
+N_INSTANCES = 4
+CAPACITIES = [512, 256, 128, 64]     # per-instance HBM blocks (x128 tokens)
+HOST_BLOCKS = 4096                   # host tier (per instance)
+DISK_BLOCKS = 4096                   # disk tier behind it
+SESSIONS = 64                        # concurrent agent sessions
+TURNS = 6                            # turns per session (history grows)
+SEG = 512                            # tokens appended per turn
+KV_BLOCK = 128                       # hash-chain block granularity
+SLO = 0.5
+PROBE_RATE = 32                      # rate the hit/promote rates are read at
+
+
+def _trace(rate):
+    """Session re-entry: turn k of session s resubmits the whole history
+    ((k+1) * SEG tokens, a deterministic per-session block hash chain).
+    Turns interleave round-robin across ALL sessions, so the reuse distance
+    between a session's consecutive turns is the entire population's
+    working set — far beyond small HBM residency, well within the host
+    tier."""
+    reqs, t = [], 0.0
+    for k in range(TURNS):
+        for s in range(SESSIONS):
+            n = (k + 1) * SEG
+            keys = chain_extend((), [s * 10_000 + b
+                                     for b in range(n // KV_BLOCK)])
+            reqs.append(Request(num_tokens=n, slo=SLO, arrival=t,
+                                prefix_hash=keys, output_tokens=0))
+            t += 1.0 / rate
+    return reqs
+
+
+def _goodput(cache_blocks, tiered):
+    kw = dict(dispatch="prefix-affinity", prefix_cache_blocks=cache_blocks)
+    if tiered:
+        kw.update(host_cache_blocks=HOST_BLOCKS,
+                  disk_cache_blocks=DISK_BLOCKS)
+    atts, probe = [], None
+    for rate in RATES:
+        res = simulate_cluster("flowprefill", _trace(rate),
+                               num_instances=N_INSTANCES, **kw)
+        atts.append(res.attainment)
+        if rate == PROBE_RATE:
+            probe = res
+    return max_goodput(RATES, atts), atts, probe
+
+
+def run(model="llama3-8b"):
+    rows = []
+    goodputs = {}
+    for tiered in (False, True):
+        name = "tiered" if tiered else "one-tier"
+        for cap in CAPACITIES:
+            g, atts, probe = _goodput(cap, tiered)
+            goodputs[(name, cap)] = g
+            extra = ""
+            if tiered:
+                extra = (f"; promote_rate={probe.promote_hit_rate:.2f} "
+                         f"demotions={probe.tier_demotions}")
+            rows.append((f"fig25/{model}/{name}/cap{cap}/goodput_req_s",
+                         round(g, 2),
+                         "TTFT att@rates="
+                         + "|".join(f"{a:.2f}" for a in atts)
+                         + f"; hit_rate={probe.prefix_hit_rate:.2f}"
+                         + extra))
+    small = CAPACITIES[-1]
+    # one-tier goodput is 0 at the collapse point: floor the denominator at
+    # the lowest swept rate so the gated ratio stays finite & conservative
+    one = max(goodputs[("one-tier", small)], float(RATES[0]))
+    rows.append((f"fig25/{model}/tiered_vs_one-tier",
+                 round(goodputs[("tiered", small)] / one, 2),
+                 f"goodput ratio at the smallest HBM capacity ({small} "
+                 f"blocks/instance; one-tier measured "
+                 f"{goodputs[('one-tier', small)]:.2f}, denominator "
+                 f"floored at {RATES[0]}): the tier keeps the hits the "
+                 f"single-tier cache destroys (acceptance: >= 1.5)"))
+    _, _, probe = _goodput(small, True)
+    rows.append((f"fig25/{model}/promote_hit_rate",
+                 round(probe.promote_hit_rate, 3),
+                 f"fraction of prefix-hit tokens served by host/disk "
+                 f"promotion at cap={small}, {PROBE_RATE} req/s "
+                 f"(hit_rate={probe.prefix_hit_rate:.2f}, promoted "
+                 f"{probe.prefix_promoted_tokens} tokens)"))
+    big = goodputs[("tiered", CAPACITIES[0])]
+    if big > 0:
+        one_ret = goodputs[("one-tier", small)] \
+            / max(goodputs[("one-tier", CAPACITIES[0])], 1e-9)
+        rows.append((f"fig25/{model}/graceful/tiered_min_vs_max",
+                     round(goodputs[("tiered", small)] / big, 2),
+                     f"tiered goodput retained shrinking HBM "
+                     f"{CAPACITIES[0]} -> {small} blocks (graceful "
+                     f"degradation; one-tier retains {one_ret:.2f})"))
+
+    # (b) real runtime: measured promote-vs-recompute crossover
+    rows.extend(run_runtime(model))
+    return rows
+
+
+def run_runtime(model="llama3-8b", *, prompt_tokens=2048, chunk=512):
+    """Measured `PrefillInstance` promote-vs-recompute: an identical prompt
+    cold (full prefill), after HBM eviction to the host tier (promotion:
+    async copy up + 1-token suffix compute), vs recomputed from scratch.
+    The instance's HBM cache is sized so a flood of filler prompts demotes
+    the probe prompt's blocks without dropping them."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_tiny_config
+    from repro.core import Request, SchedulerCore, TTFTPredictor
+    from repro.models import init_params
+    from repro.serving.prefill_instance import PrefillInstance
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pred = TTFTPredictor(coeffs=np.array([1e-6, 0.0]), floor=0.0)
+    blocks = prompt_tokens // 128            # kv_block_size default
+    inst = PrefillInstance(
+        params, cfg, SchedulerCore(predictor=pred, enable_batching=False),
+        max_seq=prompt_tokens, chunk_tokens=chunk, prefix_share=True,
+        # HBM holds ~3 prompts: the flood below evicts the probe prompt
+        prefix_cache_blocks=3 * blocks,
+        host_cache_blocks=16 * blocks)
+    rng = np.random.default_rng(0)
+
+    def run_once(toks):
+        req = Request(num_tokens=len(toks), slo=600.0,
+                      arrival=time.monotonic())
+        t0 = time.monotonic()
+        inst.submit_request(req, toks)
+        assert inst.drain(600.0)
+        return time.monotonic() - t0, req
+
+    try:
+        warmup = rng.integers(0, cfg.vocab_size, prompt_tokens)
+        run_once(warmup)                   # compile cold shapes
+        run_once(warmup)                   # compile warm (suffix) shapes
+        probe = rng.integers(0, cfg.vocab_size, prompt_tokens)
+        cold, _ = run_once(probe)
+        # calibrate the promote-vs-recompute gate to THIS machine's
+        # measured prefill speed (the toy predictor above prices recompute
+        # at ~2us — no real copy could beat that)
+        inst.scheduler.predictor = TTFTPredictor(
+            coeffs=np.array([cold / prompt_tokens, 0.0]), floor=0.0)
+        # flood HBM: filler prompts demote the probe prompt to the host tier
+        for _ in range(4):
+            run_once(rng.integers(0, cfg.vocab_size, prompt_tokens))
+        promoted, wr = run_once(probe)
+        n_promos = inst.prefix_promotions
+        stats = inst.kv.tier_stats()
+    finally:
+        inst.shutdown()
+    assert wr.prefix_hit > 0 and n_promos > 0, \
+        f"promotion did not engage (hit={wr.prefix_hit}, promos={n_promos})"
+    return [
+        (f"fig25/{model}/real/cold_ms", round(cold * 1e3, 1),
+         f"full prefill of {prompt_tokens} tokens (measured, runner-speed "
+         f"dependent — not gated)"),
+        (f"fig25/{model}/real/promoted_ms", round(promoted * 1e3, 1),
+         f"same prompt after HBM eviction: host->HBM promotion of "
+         f"hit={wr.prefix_hit} tokens + suffix compute "
+         f"(demotions={stats['demotions']}, promotions="
+         f"{stats['promotions']}; measured — not gated)"),
+        (f"fig25/{model}/real/promote_vs_recompute_speedup",
+         round(cold / promoted, 2),
+         "measured speedup of promoting the evicted prefix over "
+         "recomputing it (acceptance: >= 3.0; committed baseline is the "
+         "tolerance-compensated conservative threshold, steady-state CPU "
+         "measures 5-30x)"),
+    ]

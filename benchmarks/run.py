@@ -16,7 +16,8 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig15_chunk_interplay, fig16_colocation, fig17_moe,
                         fig18_cluster, fig19_hetero, fig20_decode,
                         fig21_decode_batching, fig22_prefix_cache,
-                        fig23_scenarios, fig24_colocation, roofline)
+                        fig23_scenarios, fig24_colocation, fig25_tiered_kv,
+                        roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -37,6 +38,7 @@ MODULES = [
     ("fig22", fig22_prefix_cache),
     ("fig23", fig23_scenarios),
     ("fig24", fig24_colocation),
+    ("fig25", fig25_tiered_kv),
     ("roofline", roofline),
 ]
 

@@ -86,9 +86,17 @@ class InstanceLoad:
     decode_pressure: float = 0.0
     # prefix sharing: tokens of THIS request's prompt cached at the
     # instance, and the predicted seconds of prefill service time that hit
-    # would save (owner-priced: predictor(n) - predictor(n - hit))
+    # would save (owner-priced: predictor(n) - predictor(n - hit)). With a
+    # tiered cache `prefix_hit` is the EFFECTIVE hit (warm + cold tokens the
+    # owner decided to promote) and `ttft_saved` is already NET of the
+    # promotion copy time — warm, cold, and absent are three prices, not a
+    # binary hit bit, but the policy score needs no tier awareness.
     prefix_hit: int = 0
     ttft_saved: float = 0.0
+    # tier observability: cold (host/disk-resident) tokens behind the warm
+    # run, and the predicted copy time to promote them (0 when untiered)
+    prefix_hit_cold: int = 0
+    promote_time: float = 0.0
 
     @property
     def outstanding_tokens(self) -> float:

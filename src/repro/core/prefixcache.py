@@ -212,6 +212,7 @@ class PrefixBlockManager:
             b = self._take_block()
             if b is None:
                 for fb in fresh:
+                    del self._ref[fb]        # rollback: live -> free, not both
                     self._free.append(fb)
                 for hb in reversed(hit):
                     self._decref(hb)

@@ -64,6 +64,7 @@ class _Prefill:
     hit: int = 0                        # pinned prefix tokens (capped n-1)
     allocated: bool = False             # pool blocks reserved at arrival
     started: float = 0.0                # first slice (predictor refit pair)
+    ticket: Optional[object] = None     # in-flight tier PromotionTicket
 
 
 @dataclass
@@ -107,6 +108,9 @@ class HybridInstance:
                  kv_block_size: int = 128,
                  kv_pool_blocks: int = 512,
                  kv_max_blocks: int = 0,
+                 host_cache_blocks: int = 0,
+                 disk_cache_blocks: int = 0,
+                 promote_wait_s: float = 10.0,
                  prefix_share: bool = True,
                  executor: Optional[SegmentedPrefill] = None,
                  on_decode_ready: Optional[Callable[[DecodeJob], None]]
@@ -161,7 +165,10 @@ class HybridInstance:
             cfg.num_layers, kv_pool_blocks, kv_block_size,
             cfg.num_kv_heads, cfg.resolved_head_dim,
             dtype=self.executor.cache_dtype, prefix_share=prefix_share,
-            max_blocks=kv_max_blocks)
+            max_blocks=kv_max_blocks,
+            host_cache_blocks=host_cache_blocks,
+            disk_cache_blocks=disk_cache_blocks)
+        self.promote_wait_s = promote_wait_s
         self.kv.allocate(_SCRATCH_SEQ, 1)
         # serializes pool access: the worker's gather/scatter (write_tokens
         # DONATES pool buffers) vs. the frontend's arrival-time allocate and
@@ -193,6 +200,8 @@ class HybridInstance:
         self.preemptions = 0                       # decode slot evictions
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
+        self.prefix_promotions = 0                 # blocks re-warmed
+        self.prefix_promoted_tokens = 0
 
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="hybrid-instance")
@@ -225,6 +234,24 @@ class HybridInstance:
             hit = self.kv.probe(keys)
         return min(hit, max(num_tokens - 1, 0))
 
+    def probe_keys_tiers(self, keys, num_tokens: int) -> Tuple[int, int, int]:
+        """(warm, host, disk) cached tokens for this prompt, jointly capped
+        at num_tokens - 1 (same contract as PrefillInstance)."""
+        if not self.prefix_share:
+            return (0, 0, 0)
+        with self._kv_lock:
+            warm, host, disk = self.kv.probe_tiers(keys)
+        cap = max(num_tokens - 1, 0)
+        warm = min(warm, cap)
+        host = min(host, cap - warm)
+        disk = min(disk, cap - warm - host)
+        return warm, host, disk
+
+    def promote_seconds(self, host_tokens: int, disk_tokens: int = 0) -> float:
+        if not getattr(self.kv, "tiered", False):
+            return 0.0
+        return self.kv.promote_seconds(host_tokens, disk_tokens)
+
     def pending(self) -> int:
         with self._cv:
             return len(self._prefills)
@@ -252,6 +279,17 @@ class HybridInstance:
         with self._cv:
             self._cv.notify_all()
         self._thread.join(5.0)
+        if getattr(self.kv, "tiered", False):
+            # settle promotions whose prefill never started (abandoned
+            # requests): abort reservations so the pool stays leak-free
+            with self._cv:
+                pending = [ps for ps in self._prefills.values()
+                           if ps.ticket is not None]
+            for ps in pending:
+                ticket, ps.ticket = ps.ticket, None
+                with self._kv_lock:
+                    self.kv.promote_settle(ticket)
+            self.kv.close()
 
     # --------------------------------------------------------- KV lifecycle
     def _acquire(self, ps: _Prefill) -> None:
@@ -271,6 +309,8 @@ class HybridInstance:
                 self.kv.grow_for(self.kv.blocks_needed(need))
                 table = self.kv.allocate(req.rid, need, keys=keys)
             ps.hit = min(table.length, max(n - 1, 0))
+            if getattr(self.kv, "tiered", False):
+                ps.ticket = self._begin_promotion(keys, n, table.length)
         ps.keys = tuple(keys) if keys else ()
         ps.allocated = True
         req.prefix_hit = ps.hit
@@ -278,9 +318,65 @@ class HybridInstance:
             self.prefix_hits += 1
             self.prefix_hit_tokens += ps.hit
 
+    def _begin_promotion(self, keys, n: int, warm: int):
+        """Under _kv_lock at arrival: start promoting the prompt's cold-tier
+        chain extension when the predicted copy beats the recompute it saves
+        (PrefillInstance._begin_promotion's gate against this instance's
+        own TTFT predictor). Returns a PromotionTicket or None."""
+        _, host_t, disk_t = self.kv.probe_tiers(keys)
+        cap = max(n - 1, 0) - warm
+        cold = min(host_t + disk_t, cap)
+        if cold <= 0:
+            return None
+        pred = self.predictor
+        if pred is not None:
+            saved = max(float(pred.predict(n - warm))
+                        - float(pred.predict(n - warm - cold)), 0.0)
+            host_use = min(host_t, cold)
+            if self.kv.promote_seconds(host_use, cold - host_use) >= saved:
+                return None
+        bs = self.kv_block_size
+        ticket = self.kv.promote_async(keys,
+                                       max_blocks=(cold + bs - 1) // bs)
+        return ticket if ticket.blocks else None
+
+    def _settle_promotion(self, ps: _Prefill) -> None:
+        """First-slice settle: wait for the arrival-time promotion copies
+        OUTSIDE the kv lock (the prefill BLOCKS on a copy still in flight —
+        never crashes into one), then commit under it and re-pin the longer
+        prefix. Failures degrade to the arrival hit: timeouts abort back to
+        their tier, corrupt copies are dropped and recomputed."""
+        ticket, ps.ticket = ps.ticket, None
+        ticket.wait(self.promote_wait_s)
+        req = ps.request
+        n = len(ps.tokens)
+        local = self.on_decode_ready is None
+        need = n + (max(req.output_tokens, 0) if local else 0) + 1
+        with self._kv_lock:
+            committed = self.kv.promote_settle(ticket)
+            if committed <= 0:
+                return
+            old_hit = ps.hit
+            self.kv.free(req.rid)
+            try:
+                table = self.kv.allocate(req.rid, need, keys=ps.keys)
+            except MemoryError:
+                self.kv.grow_for(self.kv.blocks_needed(need))
+                table = self.kv.allocate(req.rid, need, keys=ps.keys)
+            ps.hit = min(table.length, max(n - 1, 0))
+        req.prefix_hit = ps.hit
+        gained = max(ps.hit - old_hit, 0)
+        self.prefix_promotions += committed
+        self.prefix_promoted_tokens += gained
+        if old_hit == 0 and ps.hit > 0:
+            self.prefix_hits += 1
+        self.prefix_hit_tokens += gained
+
     def _start_task(self, ps: _Prefill) -> None:
         """First admitted slice: build the device-resident prefill task,
         seeded from the pinned pool prefix on a hit (suffix-only compute)."""
+        if ps.ticket is not None:
+            self._settle_promotion(ps)
         req = ps.request
         arr = jnp.asarray(ps.tokens[None, :])
         lens = jnp.asarray([len(ps.tokens)])

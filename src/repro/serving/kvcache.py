@@ -32,6 +32,11 @@ block, data round-trip.
 """
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
+import threading
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -41,8 +46,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.prefixcache import PrefixBlockManager, block_keys
+from repro.core.tieredcache import (TIER_HOST, BlockCopyEngine, TierDataError,
+                                    TieredBlockManager, block_checksum)
 
-__all__ = ["BlockTable", "PagedKVCache", "block_keys"]
+__all__ = ["BlockTable", "PagedKVCache", "PromotionTicket", "block_keys"]
+
+
+class PromotionTicket:
+    """Handle for one batch of in-flight tier promotions started by
+    `PagedKVCache.promote_async`. The protocol that keeps this deadlock-free:
+    `wait` OUTSIDE the owner's kv lock (copy workers never take it), then
+    `PagedKVCache.promote_settle(ticket)` UNDER the lock. A prefill that
+    depends on the promoted blocks therefore BLOCKS until the copies land
+    (or time out and abort back to their tier) — it never crashes into a
+    half-copied block."""
+
+    __slots__ = ("items",)
+
+    def __init__(self, items):
+        self.items = items               # [(key, reserved_block, tier, job)]
+
+    @property
+    def blocks(self) -> int:
+        return len(self.items)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """True once every copy job finished (ok or errored) in time."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for _, _, _, job in self.items:
+            t = None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+            if not job.wait(t):
+                return False
+        return True
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -101,7 +137,12 @@ class PagedKVCache:
 
     def __init__(self, num_layers: int, num_blocks: int, block_size: int,
                  num_kv_heads: int, head_dim: int, dtype=jnp.float32,
-                 prefix_share: bool = False, max_blocks: int = 0):
+                 prefix_share: bool = False, max_blocks: int = 0,
+                 host_cache_blocks: int = 0, disk_cache_blocks: int = 0,
+                 disk_cache_dir: Optional[str] = None,
+                 copy_engine: Optional[BlockCopyEngine] = None,
+                 host_bw: float = 25e9, host_latency: float = 5e-4,
+                 disk_bw: float = 3e9, disk_latency: float = 5e-3):
         self.num_layers = num_layers
         self.num_blocks = num_blocks
         self.block_size = block_size
@@ -110,8 +151,37 @@ class PagedKVCache:
         self.k_pool = jnp.zeros(shape, dtype)
         self.v_pool = jnp.zeros(shape, dtype)
         self.prefix_share = prefix_share
-        self._mgr: Optional[PrefixBlockManager] = \
-            PrefixBlockManager(num_blocks) if prefix_share else None
+        self.tiered = host_cache_blocks > 0
+        if self.tiered and not prefix_share:
+            raise ValueError("tiered KV cache requires prefix_share=True")
+        if self.tiered:
+            # demote-on-evict pool: LRU pressure moves cached block content
+            # through host (and optionally disk) storage via the async copy
+            # engine instead of dropping it (module docstring / tieredcache)
+            self._mgr: Optional[PrefixBlockManager] = TieredBlockManager(
+                num_blocks, host_blocks=host_cache_blocks,
+                disk_blocks=disk_cache_blocks,
+                on_demote=self._on_demote, on_drop=self._on_drop)
+            self._engine = copy_engine if copy_engine is not None \
+                else BlockCopyEngine()
+            self._own_engine = copy_engine is None
+            self._store_lock = threading.Lock()
+            self._host_store: Dict[int, Tuple[np.ndarray, np.ndarray, int]] \
+                = {}
+            self._disk_index: Dict[int, str] = {}
+            self._disk_dir = disk_cache_dir
+            self._own_disk_dir = False
+            if disk_cache_blocks > 0 and self._disk_dir is None:
+                self._disk_dir = tempfile.mkdtemp(prefix="repro-kv-disk-")
+                self._own_disk_dir = True
+            self.host_bw, self.host_latency = host_bw, host_latency
+            self.disk_bw, self.disk_latency = disk_bw, disk_latency
+            self._bytes_per_token = (2 * num_layers * num_kv_heads * head_dim
+                                     * jnp.zeros((), dtype).dtype.itemsize)
+        else:
+            self._mgr = PrefixBlockManager(num_blocks) if prefix_share \
+                else None
+            self._engine = None
         self._free: List[int] = [] if prefix_share \
             else list(range(num_blocks))
         self._tables: Dict[int, BlockTable] = {}
@@ -143,6 +213,181 @@ class PagedKVCache:
         if self._mgr is None:
             return 0
         return self._mgr.probe_len(keys) * self.block_size
+
+    # -------------------------------------------------------------- tiering
+    def probe_tiers(self, keys: Sequence[int]) -> Tuple[int, int, int]:
+        """(warm, host, disk) cached-prefix lengths in TOKENS: the
+        HBM-resident run `probe` reports, then the contiguous cold run split
+        by tier. Cold tokens are hittable only through `promote_async`;
+        without tiering this is just (probe(keys), 0, 0) so callers can stay
+        tier-agnostic."""
+        if not self.tiered:
+            return (self.probe(keys), 0, 0)
+        th = self._mgr.probe_tiers(keys)
+        bs = self.block_size
+        return (th.hbm_blocks * bs, th.host_blocks * bs, th.disk_blocks * bs)
+
+    def promote_seconds(self, host_tokens: int, disk_tokens: int = 0) -> float:
+        """Predicted wall-clock to promote that many cold tokens back into
+        HBM — the copy side of the promote-vs-recompute gate (the recompute
+        side is the TTFT predictor's `ttft_saved`, exactly like cost-gated
+        decode migration)."""
+        t = 0.0
+        if host_tokens > 0:
+            t += self.host_latency \
+                + host_tokens * self._bytes_per_token / self.host_bw
+        if disk_tokens > 0:
+            t += self.disk_latency \
+                + disk_tokens * self._bytes_per_token / self.disk_bw
+        return t
+
+    def promote_async(self, keys: Sequence[int],
+                      max_blocks: Optional[int] = None) -> PromotionTicket:
+        """Start promoting the cold extension of `keys`' warm run: reserve
+        HBM blocks (`promote_begin`) and enqueue one verify-and-fetch copy
+        job per block. Call UNDER the owner's kv lock; then `ticket.wait`
+        OUTSIDE it and `promote_settle(ticket)` back under it. Every
+        reserved block is settled exactly once — commit or abort — so the
+        conservation invariant holds through crashes of individual copies."""
+        if not self.tiered:
+            return PromotionTicket([])
+        pairs = self._mgr.promote_begin(keys, max_blocks)
+        items = []
+        for key, block, tier in pairs:
+            job = self._engine.submit("promote", key,
+                                      lambda key=key: self._fetch_cold(key))
+            items.append((key, block, tier, job))
+        return PromotionTicket(items)
+
+    def _fetch_cold(self, key: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy-worker body: pull the key's stored K/V (host store first,
+        then disk), verify the checksum, and hand the arrays to settle.
+        Move semantics — the cold copy is consumed. A lost or corrupt copy
+        raises `TierDataError`: the promotion aborts-with-drop and the
+        prefill recomputes those tokens instead of reading stale KV."""
+        with self._store_lock:
+            entry = self._host_store.pop(key, None)
+            path = None if entry is not None \
+                else self._disk_index.pop(key, None)
+        if entry is not None:
+            k_np, v_np, crc = entry
+        elif path is not None:
+            try:
+                with np.load(path) as z:
+                    k_np, v_np, crc = z["k"], z["v"], int(z["crc"])
+                os.remove(path)
+            except Exception as e:          # unreadable/garbled npz
+                raise TierDataError(f"disk block for key {key:#x} lost: {e}")
+        else:
+            raise TierDataError(f"tier copy for key {key:#x} lost")
+        if block_checksum(k_np, v_np) != crc:
+            raise TierDataError(f"checksum mismatch for key {key:#x}")
+        return k_np, v_np
+
+    def promote_settle(self, ticket: PromotionTicket) -> int:
+        """UNDER the kv lock: commit every landed copy (scatter the data
+        into the reserved block, re-register the key) and abort the rest —
+        a failed/corrupt copy drops its tier entry (recompute fallback), a
+        timed-out one returns the key to its tier for a later try. Returns
+        blocks committed."""
+        if not self.tiered:
+            return 0
+        committed = 0
+        for key, _block, _tier, job in ticket.items:
+            if key not in self._mgr._promoting:
+                continue                     # settled via an earlier ticket
+            if job.done.is_set() and job.error is None \
+                    and job.result is not None:
+                k_np, v_np = job.result
+                b = self._mgr.promote_commit(key)
+                if b is not None:            # None: a twin re-registered key
+                    self.k_pool = self.k_pool.at[:, b].set(
+                        jnp.asarray(k_np, self.k_pool.dtype))
+                    self.v_pool = self.v_pool.at[:, b].set(
+                        jnp.asarray(v_np, self.v_pool.dtype))
+                    committed += 1
+            else:
+                corrupt = isinstance(job.error, TierDataError)
+                self._mgr.promote_abort(key, corrupt=corrupt)
+        return committed
+
+    def _on_demote(self, key: int, block: Optional[int], tier: int) -> None:
+        """Manager demotion hook. HBM->host: slice the block's K/V NOW —
+        an eager jax slice is an independent buffer, so the pool block can
+        be reused (even via donated scatters) while the worker does the
+        D2H copy + checksum off the critical path. Host->disk: the worker
+        moves the host entry into an .npz spill file."""
+        if tier == TIER_HOST:
+            k_dev = self.k_pool[:, block]
+            v_dev = self.v_pool[:, block]
+
+            def snap(key=key, k_dev=k_dev, v_dev=v_dev):
+                k_np, v_np = np.asarray(k_dev), np.asarray(v_dev)
+                crc = block_checksum(k_np, v_np)
+                with self._store_lock:
+                    self._host_store[key] = (k_np, v_np, crc)
+
+            self._engine.submit("demote", key, snap)
+        else:
+            def spill(key=key):
+                with self._store_lock:
+                    entry = self._host_store.pop(key, None)
+                if entry is None:
+                    return
+                k_np, v_np, crc = entry
+                path = os.path.join(self._disk_dir, f"kvblk_{key:08x}.npz")
+                np.savez(path, k=k_np, v=v_np, crc=np.uint32(crc))
+                with self._store_lock:
+                    self._disk_index[key] = path
+
+            self._engine.submit("spill", key, spill)
+
+    def _on_drop(self, key: int, tier: int) -> None:
+        """Manager drop hook: a cold entry aged out (or was corrupt) — free
+        its stored data. Queued behind any pending snapshot/spill for the
+        same key (single-worker FIFO), so a drop never races its own write."""
+        def drop(key=key):
+            with self._store_lock:
+                self._host_store.pop(key, None)
+                path = self._disk_index.pop(key, None)
+            if path is not None:
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+
+        self._engine.submit("drop", key, drop)
+
+    def tier_stats(self) -> Dict[str, int]:
+        """Tier observability counters (benchmarks + tests)."""
+        if not self.tiered:
+            return {}
+        m = self._mgr
+        return {"demotions": m.demotions, "spills": m.spills,
+                "promotions": m.promotions,
+                "promote_aborts": m.promote_aborts,
+                "tier_drops": m.tier_drops,
+                "host_entries": m.host_entries,
+                "disk_entries": m.disk_entries,
+                "in_flight": m.in_flight,
+                "copies_completed": self._engine.completed,
+                "copies_failed": self._engine.failed}
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain the copy engine, abort any promotion still in flight (its
+        reserved block returns to the pool — no leaks), and clean up an
+        owned disk spill directory. Safe to call twice; no-op untiered."""
+        if not self.tiered:
+            return
+        self._engine.drain(timeout)
+        if self._own_engine:
+            self._engine.shutdown(wait=True)
+        for key in list(self._mgr._promoting):
+            self._mgr.promote_abort(key)
+        if self._own_disk_dir and self._disk_dir \
+                and os.path.isdir(self._disk_dir):
+            shutil.rmtree(self._disk_dir, ignore_errors=True)
+            self._own_disk_dir = False
 
     def allocate(self, seq_id: int, num_tokens: int,
                  keys: Optional[Sequence[int]] = None) -> BlockTable:

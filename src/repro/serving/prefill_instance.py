@@ -42,7 +42,10 @@ class PrefillInstance:
                  dispatch_depth: int = 2,
                  prefix_share: bool = False,
                  prefix_cache_blocks: int = 512,
-                 kv_block_size: int = 128):
+                 kv_block_size: int = 128,
+                 host_cache_blocks: int = 0,
+                 disk_cache_blocks: int = 0,
+                 promote_wait_s: float = 10.0):
         self.cfg = cfg
         self.scheduler = scheduler
         self.clock = clock
@@ -60,7 +63,9 @@ class PrefillInstance:
             self.kv = PagedKVCache(
                 cfg.num_layers, prefix_cache_blocks, kv_block_size,
                 cfg.num_kv_heads, cfg.resolved_head_dim,
-                dtype=self.executor.cache_dtype, prefix_share=True)
+                dtype=self.executor.cache_dtype, prefix_share=True,
+                host_cache_blocks=host_cache_blocks,
+                disk_cache_blocks=disk_cache_blocks)
         # guards self.kv: the scheduler thread mutates it on every
         # arrival/completion while the Proxy probes it for affinity routing
         self._kv_lock = threading.Lock()
@@ -68,6 +73,12 @@ class PrefillInstance:
         # rid -> (pool hit tokens, hash chain) for sequences holding blocks
         self.prefix_hits = 0                 # requests with a nonzero hit
         self.prefix_hit_tokens = 0           # prompt tokens served cached
+        # tiered promotion: rid -> in-flight PromotionTicket, settled by
+        # _make_task before the prefill that depends on the blocks starts
+        self._tickets: Dict[int, object] = {}
+        self.promote_wait_s = promote_wait_s
+        self.prefix_promotions = 0           # blocks re-warmed from a tier
+        self.prefix_promoted_tokens = 0      # hit tokens gained by promotion
 
         self.monitor = EventMonitor()
         self.pool = ExecutionPool(step_fn=self._step, on_complete=self._complete,
@@ -119,6 +130,28 @@ class PrefillInstance:
             hit = self.kv.probe(keys)
         return min(hit, max(num_tokens - 1, 0))
 
+    def probe_keys_tiers(self, keys, num_tokens: int) -> Tuple[int, int, int]:
+        """`probe_keys` with tier-tagged lengths: (warm, host, disk) cached
+        tokens, jointly capped at num_tokens - 1. Warm tokens are free;
+        cold ones cost `promote_seconds` — the Proxy prices both into one
+        net ttft_saved so dispatch sees warm/cold/absent as three prices."""
+        if self.kv is None:
+            return (0, 0, 0)
+        with self._kv_lock:
+            warm, host, disk = self.kv.probe_tiers(keys)
+        cap = max(num_tokens - 1, 0)
+        warm = min(warm, cap)
+        host = min(host, cap - warm)
+        disk = min(disk, cap - warm - host)
+        return warm, host, disk
+
+    def promote_seconds(self, host_tokens: int, disk_tokens: int = 0) -> float:
+        """Predicted copy time to promote that many cold tokens (0 when
+        this instance has no cold tiers)."""
+        if self.kv is None or not getattr(self.kv, "tiered", False):
+            return 0.0
+        return self.kv.promote_seconds(host_tokens, disk_tokens)
+
     def drain(self, timeout: float = 60.0) -> bool:
         """Wait until all submitted requests completed. Waits on the
         instance condition variable — the scheduler thread notifies after
@@ -135,6 +168,15 @@ class PrefillInstance:
         self.monitor.publish(Event(time=self.clock(), kind=EventKind.SHUTDOWN))
         self._thread.join(5.0)
         self.pool.shutdown()
+        if self.kv is not None:
+            # settle any promotion that never reached a SUBMIT (its request
+            # is abandoned): drain the copy engine and abort the in-flight
+            # reservations so the pool accounting stays leak-free
+            for rid, ticket in list(self._tickets.items()):
+                del self._tickets[rid]
+                with self._kv_lock:
+                    self.kv.promote_settle(ticket)
+            self.kv.close()
 
     # ---------------------------------------------------------------- worker
     def _step(self, task: ExecTask) -> bool:
@@ -178,11 +220,38 @@ class PrefillInstance:
             except MemoryError:
                 return
             hit = min(table.length, max(n - 1, 0))
+            ticket = self._begin_promotion(keys, n, table.length)
         self._prefix[req.rid] = (hit, keys)
         req.prefix_hit = hit
+        if ticket is not None and ticket.blocks:
+            self._tickets[req.rid] = ticket
         if hit:
             self.prefix_hits += 1
             self.prefix_hit_tokens += hit
+
+    def _begin_promotion(self, keys, n: int, warm: int):
+        """Under _kv_lock at ARRIVAL: if the prompt's chain extends into a
+        cold tier, start promoting it — but only when the predicted copy
+        time beats the recompute the promotion would save (the scheduler's
+        TTFT predictor prices the save, exactly the transfer-vs-recompute
+        gate decode migration uses). Returns a PromotionTicket or None."""
+        if not getattr(self.kv, "tiered", False):
+            return None
+        _, host_t, disk_t = self.kv.probe_tiers(keys)
+        cap = max(n - 1, 0) - warm         # useful tokens beyond the warm run
+        cold = min(host_t + disk_t, cap)
+        if cold <= 0:
+            return None
+        pred = getattr(self.scheduler, "predictor", None)
+        if pred is not None:
+            saved = max(float(pred.predict(n - warm))
+                        - float(pred.predict(n - warm - cold)), 0.0)
+            host_use = min(host_t, cold)
+            cost = self.kv.promote_seconds(host_use, cold - host_use)
+            if cost >= saved:
+                return None                # cheaper to recompute than copy
+        bs = self.kv_block_size
+        return self.kv.promote_async(keys, max_blocks=(cold + bs - 1) // bs)
 
     def _publish_prefix(self, task: ExecTask) -> None:
         """COMPLETION-time insert: scatter each member's computed suffix KV
@@ -269,7 +338,45 @@ class PrefillInstance:
             self._running = task
             self.pool.resume(task.task_id)
 
+    def _settle_promotion(self, req: Request, ticket) -> None:
+        """SUBMIT-time settle for one batch member: wait for the copies
+        OUTSIDE the kv lock (workers never take it — the prefill BLOCKS on a
+        copy still in flight, it never crashes into one), then commit under
+        the lock and re-pin the now-longer prefix. Every failure mode
+        degrades to the pre-promotion hit: a timed-out copy aborts back to
+        its tier, a corrupt one is dropped (recompute — never stale KV),
+        and a full pool on re-pin just leaves the prompt uncached."""
+        ticket.wait(self.promote_wait_s)
+        entry = self._prefix.get(req.rid)
+        gained = 0
+        with self._kv_lock:
+            committed = self.kv.promote_settle(ticket)
+            if committed > 0 and entry is not None:
+                old_hit, keys = entry
+                n = int(self._tokens[req.rid].size)
+                self.kv.free(req.rid)
+                try:
+                    table = self.kv.allocate(req.rid, n, keys=keys)
+                except MemoryError:
+                    self._prefix.pop(req.rid, None)
+                    req.prefix_hit = 0
+                    return
+                hit = min(table.length, max(n - 1, 0))
+                self._prefix[req.rid] = (hit, keys)
+                req.prefix_hit = hit
+                gained = max(hit - old_hit, 0)
+                self.prefix_promotions += committed
+                self.prefix_promoted_tokens += gained
+                if old_hit == 0 and hit > 0:
+                    self.prefix_hits += 1
+                self.prefix_hit_tokens += gained
+
     def _make_task(self, batch: List[Request]) -> ExecTask:
+        if self.kv is not None:
+            for r in batch:
+                ticket = self._tickets.pop(r.rid, None)
+                if ticket is not None:
+                    self._settle_promotion(r, ticket)
         toks = [self._tokens[r.rid] for r in batch]
         lens = [len(t) for t in toks]
         S = max(lens)

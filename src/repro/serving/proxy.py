@@ -116,13 +116,20 @@ class Proxy:
         save this request: predictor-priced recompute of the hit tokens,
         falling back to capacity-normalized tokens (same units as drain
         time) when no predictor is wired."""
-        if hit <= 0:
+        return self._saved_seconds(idx, req.num_tokens, 0, hit)
+
+    def _saved_seconds(self, idx: int, n: int, warm: int,
+                       extra: int) -> float:
+        """Predicted prefill seconds that `extra` additional cached tokens
+        save, on top of `warm` tokens already served cached — the marginal
+        value of a cold (tiered) run is priced from the warm baseline, not
+        from zero."""
+        if extra <= 0:
             return 0.0
         predict = getattr(self.dispatch.predictor, "predict", None)
         if predict is not None:
-            return max(predict(req.num_tokens)
-                       - predict(req.num_tokens - hit), 0.0)
-        return hit / max(self.capacities[idx], 1e-9)
+            return max(predict(n - warm) - predict(n - warm - extra), 0.0)
+        return extra / max(self.capacities[idx], 1e-9)
 
     def _snapshot_loads(self, req: Request, now: float,
                         tokens=None) -> List[InstanceLoad]:
@@ -152,8 +159,32 @@ class Proxy:
             items = [(max(r.remaining_tokens(), 0.0), r.deadline)
                      for r in outstanding.values()]
             inst = self.prefill_instances[i]
-            hit = inst.probe_keys(keys_by_bs[inst.kv_block_size],
-                                  int(tokens.size)) if want_prefix else 0
+            hit = cold = 0
+            saved = promote_s = 0.0
+            if want_prefix:
+                inst_keys = keys_by_bs[inst.kv_block_size]
+                n = int(tokens.size)
+                probe_tiers = getattr(inst, "probe_keys_tiers", None)
+                if probe_tiers is not None:
+                    # tier-aware affinity: warm tokens are free, cold ones
+                    # pay the promotion copy — the load carries the NET
+                    # saving so warm/cold/absent are three prices to the
+                    # policy, and an unprofitable cold run contributes
+                    # nothing (the instance will recompute it)
+                    warm, host_t, disk_t = probe_tiers(inst_keys, n)
+                    cold = host_t + disk_t
+                    hit = warm
+                    saved = self._saved_seconds(i, n, 0, warm)
+                    if cold > 0:
+                        promote_s = inst.promote_seconds(host_t, disk_t)
+                        net = self._saved_seconds(i, n, warm, cold) \
+                            - promote_s
+                        if net > 0:
+                            saved += net
+                            hit = warm + cold
+                else:
+                    hit = inst.probe_keys(inst_keys, n)
+                    saved = self._ttft_saved(i, req, hit)
             loads.append(InstanceLoad(
                 instance_id=i,
                 queued_tokens=competing_tokens(items, req, now, predict),
@@ -162,7 +193,9 @@ class Proxy:
                 decode_pressure=self._decode_pressure(i, req)
                 if want_pressure else 0.0,
                 prefix_hit=hit,
-                ttft_saved=self._ttft_saved(i, req, hit)))
+                ttft_saved=saved,
+                prefix_hit_cold=cold,
+                promote_time=promote_s))
         return loads
 
     def submit(self, req: Request, tokens: np.ndarray) -> None:
@@ -301,6 +334,9 @@ class Proxy:
                                for i in self.prefill_instances),
             "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)
                                      for i in self.prefill_instances),
+            "prefix_promoted_tokens": sum(
+                getattr(i, "prefix_promoted_tokens", 0)
+                for i in self.prefill_instances),
             "scheduling_rounds": sum(i.scheduling_rounds
                                      for i in self.prefill_instances),
             "blocking_mean": float(np.mean(

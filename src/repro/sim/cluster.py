@@ -39,6 +39,7 @@ from repro.core.metrics import percentile_report, slo_frac_percentile
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
 from repro.core.prefixcache import PrefixBlockManager
+from repro.core.tieredcache import TieredBlockManager
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import (DecodeEntry, DecodeSchedulerCore,
                                   HybridSchedulerCore, SchedulerCore)
@@ -51,6 +52,10 @@ from repro.sim.simulator import (ARRIVAL, DECODE_DONE, DECODE_JOIN,
 # hybrid-instance step completion (the colocated engine self-chains these;
 # prefill/decode event kinds 0..4 live in repro.sim.simulator)
 HYBRID_STEP = 5
+# tiered prefix cache: a request whose cold (host/disk-resident) prefix won
+# the promote-vs-recompute gate arrives at its instance only after the copy
+# lands — TTFT includes the promotion latency by construction
+PROMOTE_DONE = 6
 
 # token count at which per-instance peak prefill throughput (the
 # capacity-weighted dispatch normalizer) is probed: long enough to saturate
@@ -315,6 +320,11 @@ class HybridSim:
         # weave-tax-free prefill absorber and decode consolidates on the
         # dedicated cards
         self.offload: Optional[Callable[[Request, float], None]] = None
+        # tiered prefix residency (set by ClusterSim.run in tiered mode):
+        # called when a prefill finishes so the cluster can commit the
+        # prompt's chain keys to THIS instance's block manager
+        self.on_prefill_done: Optional[Callable[[Request, float],
+                                                None]] = None
 
     # ---------------------------------------------------------------- load
     def snapshot_load(self, candidate: Request, now: float) -> InstanceLoad:
@@ -346,7 +356,13 @@ class HybridSim:
     # --------------------------------------------------------------- events
     def on_arrival(self, req: Request, now: float) -> None:
         self.n_dispatched += 1
-        self.prefills[req.rid] = _HybridPrefill(request=req)
+        # prefix-cache hit (set by the cluster's residency model, 0 without
+        # sharing): those tokens' KV is already resident, so the first
+        # admitted slice resumes past them — same as the runtime's
+        # table.length-seeded chunk offset
+        done = min(int(getattr(req, "prefix_hit", 0)),
+                   max(req.num_tokens - 1, 0))
+        self.prefills[req.rid] = _HybridPrefill(request=req, done=done)
         if not self.busy:
             self._start_step(now)
 
@@ -439,6 +455,8 @@ class HybridSim:
                 r.first_token_time = now
                 r.state = RequestState.DONE
                 del self.prefills[s.key]
+                if self.on_prefill_done is not None:
+                    self.on_prefill_done(r, now)
                 if r.output_tokens > 0:
                     if self.offload is not None:
                         self.offload(r, now)
@@ -465,6 +483,9 @@ class ClusterResult:
     prefix_hit_tokens: int = 0            # prompt tokens served from prefix
                                           # caches (skipped recompute)
     prefix_evictions: int = 0             # cache blocks LRU-evicted
+    prefix_promoted_tokens: int = 0       # hit tokens that had to be copied
+                                          # up from host/disk first (tiered)
+    tier_demotions: int = 0               # blocks demoted HBM -> host tier
 
     @property
     def attainment(self) -> float:
@@ -522,6 +543,13 @@ class ClusterResult:
         total = sum(r.num_tokens for r in self.requests)
         return self.prefix_hit_tokens / max(total, 1)
 
+    @property
+    def promote_hit_rate(self) -> float:
+        """Fraction of prefix-hit tokens that were cold — served by paying
+        a host/disk promotion copy rather than from warm HBM (0.0 when
+        untiered: every hit is warm)."""
+        return self.prefix_promoted_tokens / max(self.prefix_hit_tokens, 1)
+
 
 class ClusterSim:
     """N-instance prefill cluster + dispatch + decode phase, one event heap.
@@ -574,6 +602,8 @@ class ClusterSim:
                  max_migrations: int = 1,
                  prefix_cache_blocks: int = 0,
                  prefix_block: int = 128,
+                 host_cache_blocks: int = 0,
+                 disk_cache_blocks: int = 0,
                  hybrid_instances: int = 0,
                  hybrid_token_budget: Optional[int] = None,
                  hybrid_chunk_tokens: Optional[int] = None,
@@ -647,6 +677,18 @@ class ClusterSim:
         # sharing: every request prefills from token 0 (the original model).
         self.prefix_cache_blocks = prefix_cache_blocks
         self.prefix_block = prefix_block
+        # tiered residency: evicted blocks demote into a `host_cache_blocks`
+        # host tier (then a `disk_cache_blocks` disk tier) instead of
+        # vanishing, and dispatch prices warm/cold/absent as three prices —
+        # a cold hit is taken only when the predictor says the promotion
+        # copy (HardwareSpec.host_bw/disk_bw links) beats recompute. 0 host
+        # blocks = the single-tier model above, byte-identical.
+        if host_cache_blocks > 0 and prefix_cache_blocks <= 0:
+            raise ValueError("host_cache_blocks requires prefix sharing "
+                             "(prefix_cache_blocks > 0)")
+        self.host_cache_blocks = host_cache_blocks
+        self.disk_cache_blocks = disk_cache_blocks
+        self.tiered = prefix_cache_blocks > 0 and host_cache_blocks > 0
         # colocated pool: `hybrid_instances` HybridSim engines appended after
         # the prefill pool in dispatch order (indices num_instances..), each
         # running prefill chunks + local decode in one token-budget step.
@@ -709,11 +751,26 @@ class ClusterSim:
                        for h in hybrids]
         with_pressure = self.policy.needs_decode_pressure and decodes
         # per-instance prefix-cache residency (None = sharing disabled);
-        # exposed as `prefix_managers` for leak/invariant inspection
-        mgrs = [PrefixBlockManager(self.prefix_cache_blocks)
-                for _ in engines] if self.prefix_cache_blocks > 0 else None
+        # exposed as `prefix_managers` for leak/invariant inspection.
+        # Tiered mode swaps in TieredBlockManagers (eviction demotes through
+        # host/disk instead of dropping) and extends coverage to the hybrid
+        # pool — colocated instances share the same residency vocabulary.
+        mgrs = None
+        if self.tiered:
+            mgrs = [TieredBlockManager(self.prefix_cache_blocks,
+                                       host_blocks=self.host_cache_blocks,
+                                       disk_blocks=self.disk_cache_blocks)
+                    for _ in range(len(engines) + len(hybrids))]
+            for hi, h in enumerate(hybrids):
+                h.on_prefill_done = (
+                    lambda r, t, m=mgrs[len(engines) + hi]:
+                    m.commit(r.rid, r.prefix_hash or ()))
+        elif self.prefix_cache_blocks > 0:
+            mgrs = [PrefixBlockManager(self.prefix_cache_blocks)
+                    for _ in engines]
         self.prefix_managers = mgrs
         bs = self.prefix_block
+        n_promoted = 0
 
         # streams mid-KV-transfer, per destination: [count, ctx tokens].
         # They are invisible to the destination's snapshot until DECODE_JOIN
@@ -775,7 +832,7 @@ class ClusterSim:
                             i % len(decodes)].pressure(req, now))
                         for i, ld in enumerate(loads)]
                 hits = None
-                if mgrs is not None:
+                if mgrs is not None and not self.tiered:
                     # per-instance cached-prefix length of THIS prompt,
                     # capped so at least one token is always computed (the
                     # first output token needs a live forward pass)
@@ -803,18 +860,97 @@ class ClusterSim:
                             i].pressure(req, now))
                             for i, ld in enumerate(hloads)]
                     loads = list(loads) + hloads
+                colds = promos = None
+                if self.tiered:
+                    # three prices per instance: warm tokens are free,
+                    # cold (host/disk) tokens cost a promotion copy and are
+                    # counted only when that copy beats recompute, absent
+                    # tokens cost full recompute. `ttft_saved` is already
+                    # NET of the copy; `prefix_hit_cold`/`promote_time` are
+                    # the observability split.
+                    keys = req.prefix_hash or ()
+                    cap = max(req.num_tokens - 1, 0)
+                    n = req.num_tokens
+                    hits, colds, promos, saveds = [], [], [], []
+                    for i, m in enumerate(mgrs):
+                        th = m.probe_tiers(keys)
+                        warm = min(th.hbm_blocks * bs, cap)
+                        host_t = min(th.host_blocks * bs, cap - warm)
+                        disk_t = min(th.disk_blocks * bs,
+                                     max(cap - warm - host_t, 0))
+                        pred = predictors[i] if i < len(engines) \
+                            else self.predictor
+                        cost_i = self.instance_costs[i] \
+                            if i < len(engines) else self.cost
+                        saved = max(pred.predict(n)
+                                    - pred.predict(n - warm), 0.0)
+                        cold = host_t + disk_t
+                        promote_s = 0.0
+                        if cold > 0:
+                            promote_s = cost_i.promote_time(host_t, disk_t)
+                            gain = max(pred.predict(n - warm)
+                                       - pred.predict(n - warm - cold), 0.0)
+                            if gain > promote_s:
+                                saved += gain - promote_s
+                            else:            # recompute is cheaper: skip it
+                                cold, promote_s = 0, 0.0
+                        hits.append(warm)
+                        colds.append(cold)
+                        promos.append(promote_s)
+                        saveds.append(saved)
+                    if self.policy.needs_prefix:
+                        loads = [replace(
+                            ld, prefix_hit=hits[i] + colds[i],
+                            ttft_saved=saveds[i],
+                            prefix_hit_cold=colds[i],
+                            promote_time=promos[i])
+                            for i, ld in enumerate(loads)]
                 idx = self.policy.select(req, loads, now)
-                if hits is not None and idx < len(engines):
-                    # pin the hit until the dependent prefill completes —
-                    # eviction must never pull KV out from under it
-                    req.prefix_hit = hits[idx]
-                    mgrs[idx].lock_prefix(
-                        req.rid, req.prefix_hash or (),
-                        max_blocks=(hits[idx] + bs - 1) // bs)
-                if idx < len(engines):
-                    engines[idx].on_arrival(req, now)
+                if self.tiered:
+                    m = mgrs[idx]
+                    keys = req.prefix_hash or ()
+                    cap = max(req.num_tokens - 1, 0)
+                    warm = hits[idx]
+                    if colds[idx] > 0:
+                        # residency flips instantly; the copy's latency is
+                        # priced by delaying the arrival (PROMOTE_DONE
+                        # below), mirroring the runtime where the promotion
+                        # ticket settles before the prefill resumes
+                        for key, _b, _t in m.promote_begin(
+                                keys,
+                                max_blocks=(colds[idx] + bs - 1) // bs):
+                            m.promote_commit(key)
+                    # re-probe: promotion may have landed fewer blocks than
+                    # planned (pool pressure) — pin what actually exists
+                    hit = min(m.probe_len(keys) * bs, cap)
+                    req.prefix_hit = hit
+                    n_promoted += max(hit - warm, 0)
+                    m.lock_prefix(req.rid, keys,
+                                  max_blocks=(hit + bs - 1) // bs)
+                    target = engines[idx] if idx < len(engines) \
+                        else hybrids[idx - len(engines)]
+                    if hit > warm and promos[idx] > 0:
+                        # the promoted blocks stay pinned while the copy is
+                        # in flight (lock_prefix above); the request itself
+                        # is invisible to later load snapshots until it
+                        # lands — same convention as mid-transfer decode
+                        # streams
+                        heapq.heappush(heap, (now + promos[idx], next(seq),
+                                              PROMOTE_DONE, (target, req)))
+                    else:
+                        target.on_arrival(req, now)
                 else:
-                    hybrids[idx - len(engines)].on_arrival(req, now)
+                    if hits is not None and idx < len(engines):
+                        # pin the hit until the dependent prefill completes
+                        # — eviction must never pull KV out from under it
+                        req.prefix_hit = hits[idx]
+                        mgrs[idx].lock_prefix(
+                            req.rid, req.prefix_hash or (),
+                            max_blocks=(hits[idx] + bs - 1) // bs)
+                    if idx < len(engines):
+                        engines[idx].on_arrival(req, now)
+                    else:
+                        hybrids[idx - len(engines)].on_arrival(req, now)
             elif kind == DECODE_DONE:
                 dec: DecodeSim = payload[0]
                 if dec.on_decode_done(payload, now) and self.decode_migration:
@@ -829,6 +965,11 @@ class ClusterSim:
                 dec.migrate_in(job, now)
             elif kind == HYBRID_STEP:
                 payload[0].on_step(payload, now)
+            elif kind == PROMOTE_DONE:
+                # the cold prefix finished copying up — the request enters
+                # its instance now, so its TTFT includes the promotion
+                target, r = payload
+                target.on_arrival(r, now)
             else:
                 engine: InstanceEngine = payload[0]
                 for r in handle_event(kind, payload, now):
@@ -867,6 +1008,9 @@ class ClusterSim:
             migrations=n_migrations,
             prefix_hit_tokens=sum(r.prefix_hit for r in requests),
             prefix_evictions=sum(m.evictions for m in mgrs) if mgrs else 0,
+            prefix_promoted_tokens=n_promoted,
+            tier_demotions=sum(getattr(m, "demotions", 0)
+                               for m in mgrs) if mgrs else 0,
         )
 
 
@@ -886,6 +1030,8 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      max_migrations: int = 1,
                      prefix_cache_blocks: int = 0,
                      prefix_block: int = 128,
+                     host_cache_blocks: int = 0,
+                     disk_cache_blocks: int = 0,
                      hybrid_instances: int = 0,
                      hybrid_token_budget: Optional[int] = None,
                      hybrid_chunk_tokens: Optional[int] = None,
@@ -897,7 +1043,9 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
     HardwareSpecs or names like "a800"), decode scheduling
     (`decode_max_batch` / `decode_policy` / `decode_preempt` /
     `decode_migration`), prefix-cache sharing (`prefix_cache_blocks`
-    per-instance residency capacity + the `prefix-affinity` dispatch), and
+    per-instance residency capacity + the `prefix-affinity` dispatch;
+    `host_cache_blocks` / `disk_cache_blocks` add demotion tiers and a
+    promote-vs-recompute gate instead of dropping evictions), and
     colocated pools (`hybrid_instances` unified prefill+decode engines —
     pool layouts mix freely: `num_instances=0, hybrid_instances=4` is fully
     colocated, `num_instances=1, decode_instances=1, hybrid_instances=2`
@@ -923,6 +1071,8 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      max_migrations=max_migrations,
                      prefix_cache_blocks=prefix_cache_blocks,
                      prefix_block=prefix_block,
+                     host_cache_blocks=host_cache_blocks,
+                     disk_cache_blocks=disk_cache_blocks,
                      hybrid_instances=hybrid_instances,
                      hybrid_token_budget=hybrid_token_budget,
                      hybrid_chunk_tokens=hybrid_chunk_tokens,

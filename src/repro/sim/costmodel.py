@@ -36,6 +36,14 @@ class HardwareSpec:
                                        # (PCIe4 x16-class; prices decode
                                        # migration and PD handoff)
     kv_link_latency: float = 2e-3      # per-transfer setup latency (seconds)
+    # tiered KV offload: device <-> host-memory staging link (H2D for
+    # promotions; PCIe-class, typically ~half the raw link for pageable
+    # copies) and host <-> local-disk spill (NVMe-class). Price promotion
+    # of demoted prefix blocks back into HBM (PrefillCostModel.promote_time)
+    host_bw: float = 25e9              # bytes/s host->device
+    host_latency: float = 5e-4         # per-promotion setup (seconds)
+    disk_bw: float = 3e9               # bytes/s disk->host->device
+    disk_latency: float = 5e-3         # per-promotion disk setup (seconds)
 
     def eff_c_at(self, tokens: float) -> float:
         return self.eff_c * tokens / (tokens + self.sat_tokens)
@@ -107,6 +115,12 @@ MODEL_SPECS = {m.name: m for m in
                (LLAMA3_8B, QWEN25_14B, LLAMA3_70B, QWEN3_30B_A3B)}
 MODEL_TP = {"llama3-8b": 1, "qwen2.5-14b": 2, "llama3-70b": 4,
             "qwen3-30b-a3b": 2}
+
+
+def kv_bytes_per_token(m: ModelSpec) -> float:
+    """bf16 K and V bytes one token's cache occupies — shared by decode
+    migration pricing and tiered-KV promotion pricing."""
+    return 2.0 * 2 * m.num_layers * m.num_kv_heads * m.head_dim
 
 
 class PrefillCostModel:
@@ -259,6 +273,24 @@ class PrefillCostModel:
     def throughput(self, tokens: int, chunk_tokens: int = 0) -> float:
         return tokens / self.prefill_time(tokens, chunk_tokens)
 
+    def promote_time(self, host_tokens: float,
+                     disk_tokens: float = 0.0) -> float:
+        """Seconds to promote that many cold prefix tokens back into HBM
+        from the host (and disk) tier — the copy side of the tiered-KV
+        promote-vs-recompute gate. The recompute side is the prefill time
+        the hit saves (`op_durations` with/without the cold prefix), so
+        the sim's gating decision matches the runtime's
+        `PagedKVCache.promote_seconds` in structure: per-tier setup latency
+        plus bytes over the staging link, divided by tensor parallelism
+        (each shard moves its own KV slice)."""
+        t = 0.0
+        bpt = kv_bytes_per_token(self.m) / self.m.tp
+        if host_tokens > 0:
+            t += self.hw.host_latency + host_tokens * bpt / self.hw.host_bw
+        if disk_tokens > 0:
+            t += self.hw.disk_latency + disk_tokens * bpt / self.hw.disk_bw
+        return t
+
 
 class DecodeCostModel:
     """Analytic decode-step latency for the cluster simulator's decode phase.
@@ -294,8 +326,7 @@ class DecodeCostModel:
 
     @property
     def kv_bytes_per_token(self) -> float:
-        return 2.0 * 2 * self.m.num_layers * self.m.num_kv_heads \
-            * self.m.head_dim                          # bf16 K and V
+        return kv_bytes_per_token(self.m)              # bf16 K and V
 
     def step_time(self, batch_size: int, mean_context: float) -> float:
         if batch_size <= 0:

@@ -125,6 +125,16 @@ def test_gated_metric_selection():
     assert is_gated("fig24/llama3-8b/real/hybrid_tbt_attainment")
     assert is_gated("fig24/llama3-8b/real/hybrid_vs_dedicated")
     assert not is_gated_lower("fig24/llama3-8b/real/hybrid_vs_dedicated")
+    # fig25 tiered-KV families: capacity-sweep goodputs, the tiered-vs-one-
+    # tier ratio, the promote hit rate, and the real promote speedup all
+    # gate higher-is-better; absolute promote latency stays ungated
+    assert is_gated("fig25/llama3-8b/tiered/cap64/goodput_req_s")
+    assert is_gated("fig25/llama3-8b/tiered_vs_one-tier")
+    assert is_gated("fig25/llama3-8b/promote_hit_rate")
+    assert is_gated("fig25/llama3-8b/real/promote_vs_recompute_speedup")
+    assert not is_gated_lower("fig25/llama3-8b/promote_hit_rate")
+    assert not is_gated("fig25/llama3-8b/real/promoted_ms")
+    assert not is_gated("fig25/llama3-8b/real/cold_ms")
 
 
 def test_gate_trips_on_fig21_scaling_regression(dirs):
@@ -303,6 +313,45 @@ def test_gate_trips_on_fig24_colocation_regression(dirs):
     assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
+def test_gate_trips_on_fig25_tiered_kv_regression(dirs):
+    """The tiered-KV acceptance: the capacity-sweep goodput floor (tiered
+    holding the line where one-tier collapses) and the promote hit rate are
+    committed thresholds — the tier silently dropping blocks (hits and the
+    ratio collapsing) or the real promotion path degrading to recompute
+    speed must trip; holding or beating the committed baseline passes."""
+    base, fresh = dirs
+    fig25_base = {
+        "fig25/llama3-8b/tiered/cap64/goodput_req_s": 51.46,
+        "fig25/llama3-8b/one-tier/cap64/goodput_req_s": 0.0,
+        "fig25/llama3-8b/tiered_vs_one-tier": 3.22,
+        "fig25/llama3-8b/promote_hit_rate": 1.0,
+        "fig25/llama3-8b/real/promote_vs_recompute_speedup": 3.34,
+        "fig25/llama3-8b/real/promoted_ms": 140.9,   # ungated wall clock
+    }
+    write_bench(base, "fig25", fig25_base)
+    write_bench(fresh, "fig9", BASE)
+    # the tier silently broken (demotion dropping content): the smallest-
+    # capacity goodput collapses to the one-tier floor and promotions vanish
+    broken = dict(fig25_base, **{
+        "fig25/llama3-8b/tiered/cap64/goodput_req_s": 2.0,
+        "fig25/llama3-8b/tiered_vs_one-tier": 0.12,
+        "fig25/llama3-8b/promote_hit_rate": 0.0})
+    write_bench(fresh, "fig25", broken)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # the real promotion path degrading under the conservative floor trips
+    slow = dict(fig25_base, **{
+        "fig25/llama3-8b/real/promote_vs_recompute_speedup": 1.2})
+    write_bench(fresh, "fig25", slow)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # at/above the committed baseline — and with a slower runner's absolute
+    # promote latency — passes
+    ok = dict(fig25_base, **{
+        "fig25/llama3-8b/real/promote_vs_recompute_speedup": 12.0,
+        "fig25/llama3-8b/real/promoted_ms": 900.0})
+    write_bench(fresh, "fig25", ok)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+
+
 def test_run_only_rejects_unknown_figure_names(capsys):
     with pytest.raises(SystemExit) as exc:
         bench_run.main(["--only", "fig9,fig99"])
@@ -318,7 +367,7 @@ def test_committed_baselines_are_wellformed():
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
     assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23",
-            "fig24"} <= set(baselines)
+            "fig24", "fig25"} <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
     assert len(gated) >= 50
@@ -367,6 +416,17 @@ def test_committed_baselines_are_wellformed():
         > fig24["fig24/llama3-8b/flood@r4/disagg/e2e_attainment"]
     assert fig24["fig24/llama3-8b/real/hybrid_tbt_attainment"] >= 0.66
     assert fig24["fig24/llama3-8b/real/hybrid_vs_dedicated"] >= 0.66
+    # the fig25 tiered-KV acceptances are committed and actually hold:
+    # tiered >= 1.5x one-tier goodput at the smallest HBM capacity (where
+    # one-tier's committed goodput is the honest 0.0 collapse), every hit
+    # there came up a tier, and the conservative >= 3x promote-vs-recompute
+    # runtime speedup
+    fig25 = baselines["fig25"]
+    assert fig25["fig25/llama3-8b/tiered_vs_one-tier"] >= 1.5
+    assert fig25["fig25/llama3-8b/one-tier/cap64/goodput_req_s"] == 0.0
+    assert fig25["fig25/llama3-8b/tiered/cap64/goodput_req_s"] > 0.0
+    assert fig25["fig25/llama3-8b/promote_hit_rate"] >= 0.9
+    assert fig25["fig25/llama3-8b/real/promote_vs_recompute_speedup"] >= 3.0
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]

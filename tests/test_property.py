@@ -1,6 +1,7 @@
 """Hypothesis property tests on system invariants: S-EDF ordering, SLO-aware
 batching budget/deadline safety, predictor monotonicity-ish sanity, paged KV
 cache allocator conservation (plain AND refcounted prefix-sharing modes),
+tiered-cache conservation (HBM/host/disk residency + in-flight promotions),
 and goodput-metric monotonicity."""
 import numpy as np
 import pytest
@@ -8,6 +9,8 @@ import pytest
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_tiered_kv import run_tier_property_case  # noqa: E402
 
 from repro.core import Request, SchedulerCore, TTFTPredictor, max_goodput
 from repro.core.prefixcache import PrefixBlockManager, chain_extend
@@ -213,6 +216,21 @@ def test_prefix_manager_eviction_never_drops_pinned_blocks(allocs):
         mgr.check()
         for s, (blocks_, _) in pinned.items():
             assert mgr.blocks_of(s) == blocks_, "pinned chain mutated"
+
+
+# --- tiered block manager ----------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_tiered_manager_conservation(seed):
+    """Tier-adjusted conservation under random op interleavings: free +
+    live + cached + in_flight == num_blocks after EVERY op, chain keys
+    exclusive across warm/in-flight/host/disk, cold tiers within capacity,
+    and a pinned hit prefix never demoted. Delegates to the scenario shared
+    with tests/test_tiered_kv.py (which drives it through fixed seeds when
+    hypothesis is unavailable) so hypothesis explores the same invariants
+    with free rein over the seed space."""
+    run_tier_property_case(np.random.default_rng(seed))
 
 
 # --- goodput metric -------------------------------------------------------------

@@ -156,8 +156,24 @@ def test_preempted_task_result_unchanged(served_model):
 
 def test_flowprefill_beats_fcfs_on_heterogeneous_trace(served_model):
     """Mini QwenTrace-like mix: short/strict + long/relaxed. FlowPrefill
-    (S-EDF + op preemption) must beat FCFS on strict-SLO attainment."""
+    (S-EDF + op preemption) must beat FCFS on strict-SLO attainment.
+
+    DEFLAKED: the strict SLO is calibrated from THIS machine's fitted
+    prefill profile (the test_fig8 pattern) instead of a hard-coded 1.0s —
+    under full-suite CPU contention the constant tripped FlowPrefill's
+    attainment even though preemption served every short request far ahead
+    of the long prefill. The SLO must stay BELOW the long prefill's
+    remaining time (or FCFS would trivially pass too, erasing the
+    contrast), so it is capped at a fraction of the fitted long-prefill
+    latency — the discrimination window the scenario is built around."""
     params, pred, ex = served_model
+    t_long = float(pred.predict(LONG))
+    op_time = t_long / ex.start(jnp.zeros((1, LONG), jnp.int32)).total_segments
+    # headroom over the short request's own compute + operator-bounded
+    # blocking; floored at the paper's 1s scenario, capped well inside the
+    # long prefill so FCFS's head-of-line wait still violates it
+    slo_text = min(max(1.0, 6 * float(pred.predict(SHORT)) + 12 * op_time),
+                   0.6 * t_long)
 
     def run(policy):
         inst = make_instance(params, pred, ex, policy=policy)
@@ -170,7 +186,7 @@ def test_flowprefill_beats_fcfs_on_heterogeneous_trace(served_model):
             reqs.append(long_r)
             time.sleep(0.2)
             for i in range(4):
-                r = Request(num_tokens=SHORT, slo=1.0, task_type="text",
+                r = Request(num_tokens=SHORT, slo=slo_text, task_type="text",
                             arrival=time.monotonic())
                 inst.submit_request(r, rand_tokens(SHORT, 200 + i))
                 reqs.append(r)

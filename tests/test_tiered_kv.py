@@ -1,0 +1,500 @@
+"""Tiered KV cache (HBM -> host -> disk): tier-invariant property suite and
+copy-engine fault injection (property style — hypothesis-backed when
+installed, seeded fallback otherwise).
+
+The ISSUE-level properties:
+
+  1. tier-adjusted conservation after EVERY operation: free + live + cached
+     + in_flight == num_blocks (HBM blocks disjoint across states), a chain
+     key resides in at most one of {trie, in-flight, host, disk}, and both
+     cold tiers respect their capacities (`TieredBlockManager.check`);
+  2. pinned (refcount > 0) blocks are never demoted — demotion's only
+     source is the LRU of refcount-0 CACHED blocks;
+  3. promoted KV bit-matches the demoted KV (checksum-verified round trip
+     through host numpy storage and the disk .npz spill);
+  4. ``host_blocks=0`` reduces exactly to the parent `PrefixBlockManager`
+     (the single-tier default path stays bit-identical);
+  5. the copy engine fails CLOSED: a corrupted or lost cold copy aborts the
+     promotion and drops the entry (recompute fallback, never stale KV); a
+     promotion losing a race with a twin registration frees its reserved
+     block; shutdown with transfers in flight drains cleanly — every
+     reserved block settles back to the pool, nothing leaks.
+"""
+import numpy as np
+import pytest
+
+from repro.core.prefixcache import PrefixBlockManager, chain_extend
+from repro.core.tieredcache import (TIER_HOST, BlockCopyEngine,
+                                    TieredBlockManager)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+# deterministic chain universe: 4 disjoint chains + 2 diverging after 3
+_CHAINS = [chain_extend((), range(10), salt=s) for s in range(4)]
+_CHAINS += [chain_extend(_CHAINS[0][:3], range(6), salt=40 + s)
+            for s in range(2)]
+
+
+# --- host_blocks=0 reduces to the parent --------------------------------------
+
+def _drive(mgr, ops):
+    """Apply an op sequence; return the observable outcome trace."""
+    trace, held, sid = [], {}, 0
+    for kind, chain, nblocks in ops:
+        keys = _CHAINS[chain][:nblocks]
+        if kind == "acquire":
+            try:
+                hit = mgr.acquire(sid, keys, nblocks)
+                held[sid] = keys
+                trace.append(("hit", hit, tuple(mgr.blocks_of(sid))))
+                sid += 1
+            except MemoryError:
+                trace.append(("full",))
+        elif kind == "commit" and held:
+            k = next(iter(held))
+            trace.append(("commit", mgr.commit(k, held.pop(k))))
+        elif kind == "release" and held:
+            k = next(iter(held))
+            held.pop(k)
+            mgr.release(k)
+            trace.append(("release", k))
+        elif kind == "probe":
+            trace.append(("probe", mgr.probe_len(keys)))
+        mgr.check()
+    trace.append(("free", mgr.free_blocks, mgr.cached_blocks,
+                  mgr.evictions))
+    return trace
+
+
+def test_host_zero_is_bitwise_the_parent():
+    """TieredBlockManager(host_blocks=0) must be observationally identical
+    to PrefixBlockManager on any op sequence: same hits, same block ids,
+    same eviction/free/cached counters, and the cold tiers stay empty —
+    the single-tier default path is bit-identical by construction."""
+    rng = np.random.default_rng(7)
+    ops = [(["acquire", "commit", "release", "probe"][rng.integers(0, 4)],
+            int(rng.integers(0, len(_CHAINS))), int(rng.integers(1, 9)))
+           for _ in range(60)]
+    a = PrefixBlockManager(12)
+    b = TieredBlockManager(12, host_blocks=0)
+    assert _drive(a, ops) == _drive(b, ops)
+    assert b.host_entries == 0 and b.disk_entries == 0 and b.demotions == 0
+
+
+# --- tier conservation under random interleavings -----------------------------
+
+def run_tier_property_case(rng):
+    """Random acquire/share/commit/release/probe/promote interleavings on a
+    small pool with host + disk tiers; `check()` (conservation + key
+    exclusivity + capacity bounds) asserted after EVERY op, and pinned
+    chains must keep their pinned hit prefix WARM while held (property 2 —
+    demotion's only source is the refcount-0 LRU)."""
+    mgr = TieredBlockManager(int(rng.integers(6, 14)),
+                             host_blocks=int(rng.integers(1, 10)),
+                             disk_blocks=int(rng.integers(0, 8)))
+    held = {}                                  # sid -> (keys, pinned hit)
+    sid = 0
+    for _ in range(int(rng.integers(10, 60))):
+        kind = ["acquire", "share", "commit", "release", "promote", "abort",
+                "probe"][rng.integers(0, 7)]
+        keys = _CHAINS[rng.integers(0, len(_CHAINS))][
+            :int(rng.integers(1, 10))]
+        if kind == "acquire":
+            try:
+                hit = mgr.acquire(sid, keys, len(keys))
+                held[sid] = (keys, hit)
+                sid += 1
+            except MemoryError:
+                pass
+        elif kind == "share" and held:
+            # completion: register the computed chain, then drop the pins —
+            # its blocks park refcount-0 in the LRU (demotable from now on)
+            k = next(iter(held))
+            mgr.register(k, held.pop(k)[0])
+            mgr.release(k)
+        elif kind == "commit" and held:
+            k = next(iter(held))
+            mgr.commit(k, held.pop(k)[0])
+        elif kind == "release" and held:
+            k = next(iter(held))
+            held.pop(k)
+            mgr.release(k)
+        elif kind == "promote":
+            for key, _b, _t in mgr.promote_begin(
+                    keys, max_blocks=int(rng.integers(1, 5))):
+                if rng.random() < 0.7:
+                    mgr.promote_commit(key)
+                else:
+                    mgr.promote_abort(key, corrupt=bool(rng.random() < 0.3))
+        elif kind == "abort":
+            # begin with no commit: abort everything (timeout path)
+            for key, _b, _t in mgr.promote_begin(keys):
+                mgr.promote_abort(key)
+        elif kind == "probe":
+            th = mgr.probe_tiers(keys)
+            assert th.total_blocks <= len(keys)
+        mgr.check()
+        # a held seq's PINNED prefix (the acquire-time hit) stays warm: its
+        # blocks are refcount > 0, so eviction/demotion can never take them
+        for hkeys, hit in held.values():
+            for hk in hkeys[:hit]:
+                assert hk in mgr._trie, "pinned chain key left the trie"
+                assert hk not in mgr._host and hk not in mgr._disk, \
+                    "pinned chain key was demoted"
+    for k in list(held):
+        mgr.release(k)
+    mgr.check()
+    assert mgr.live_blocks == 0
+    assert mgr.in_flight == 0
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_tier_conservation_properties(seed):
+        run_tier_property_case(np.random.default_rng(seed))
+else:                                                 # pragma: no cover
+    @pytest.mark.parametrize("seed", [0, 1, 2, 7, 13, 42, 99, 123, 2024,
+                                      31337])
+    def test_tier_conservation_properties(seed):
+        run_tier_property_case(np.random.default_rng(seed))
+
+
+# --- deterministic tier-lifecycle cases ---------------------------------------
+
+def _cache_chain(mgr, sid, keys):
+    """Compute-and-share one chain: acquire, register, release — its blocks
+    park refcount-0 in the LRU (the evictable/demotable state)."""
+    mgr.acquire(sid, keys, len(keys))
+    mgr.register(sid, keys)
+    mgr.release(sid)
+
+
+def _fill_and_evict(mgr, n_chains=4, n=6):
+    """Register n_chains chains then overflow the pool so they demote."""
+    for c in range(n_chains):
+        _cache_chain(mgr, c, _CHAINS[c][:n])
+        mgr.check()
+
+
+def test_demotion_cascade_host_to_disk_to_drop():
+    """HBM eviction enters the host tier; host overflow spills to disk;
+    disk overflow drops — each stage observable in the counters and each
+    key findable in exactly one tier."""
+    mgr = TieredBlockManager(6, host_blocks=4, disk_blocks=4)
+    _fill_and_evict(mgr, n_chains=4, n=6)
+    # 4 chains x 6 blocks through a 6-block pool: 18 evictions demoted,
+    # host holds the 4 freshest, disk the 4 behind, the rest dropped
+    assert mgr.demotions == 18
+    assert mgr.host_entries == 4 and mgr.disk_entries == 4
+    assert mgr.spills >= 4 and mgr.tier_drops == mgr.demotions - 8
+    th = mgr.probe_tiers(_CHAINS[3][:6])
+    assert th.hbm_blocks + th.cold_blocks == 6     # freshest chain survives
+
+
+def test_promotion_rewarm_and_budget():
+    """A fully-cold chain promotes back to warm; warm keys are skipped for
+    free and `max_blocks` counts only COLD reservations."""
+    mgr = TieredBlockManager(8, host_blocks=16)
+    keys = _CHAINS[1][:6]
+    _cache_chain(mgr, 0, keys)
+    # age the chain fully out of HBM
+    mgr.acquire(1, _CHAINS[2][:8], 8)
+    mgr.release(1)
+    assert mgr.probe_len(keys) == 0
+    th = mgr.probe_tiers(keys)
+    assert (th.hbm_blocks, th.host_blocks) == (0, 6)
+    got = mgr.promote_begin(keys, max_blocks=2)     # budget: 2 cold blocks
+    assert [t for _, _, t in got] == [TIER_HOST, TIER_HOST]
+    for key, _b, _t in got:
+        mgr.promote_commit(key)
+    mgr.check()
+    assert mgr.probe_len(keys) == 2
+    # second round: the 2 now-warm keys cost nothing against the budget
+    got = mgr.promote_begin(keys, max_blocks=4)
+    assert len(got) == 4
+    for key, _b, _t in got:
+        mgr.promote_commit(key)
+    assert mgr.probe_len(keys) == 6
+    assert mgr.promotions == 6
+
+
+def test_promote_begin_pops_key_before_cascade_reuses_it():
+    """The key being promoted is popped from its tier BEFORE `_take_block`
+    runs the eviction cascade — so the cascade's own demotions can never
+    age the in-flight key out from under the reservation."""
+    mgr = TieredBlockManager(4, host_blocks=1)      # 1-entry host tier
+    keys = _CHAINS[0][:4]
+    _cache_chain(mgr, 0, keys)
+    _cache_chain(mgr, 1, _CHAINS[1][:4])            # demotes all 4; host
+                                                    # keeps only the last
+    assert mgr.host_entries == 1
+    (cold,) = list(mgr._host)
+    got = mgr.promote_begin((cold,))
+    # taking the HBM block demoted a CACHED block into the 1-slot host tier;
+    # the promoted key was already safely in flight
+    assert [k for k, _b, _t in got] == [cold]
+    mgr.check()
+    mgr.promote_commit(cold)
+    mgr.check()
+    assert cold in mgr._trie
+
+
+def test_promote_abort_restores_tier_or_drops_corrupt():
+    mgr = TieredBlockManager(4, host_blocks=8)
+    keys = _CHAINS[2][:4]
+    _cache_chain(mgr, 0, keys)
+    mgr.acquire(1, _CHAINS[3][:4], 4)
+    mgr.release(1)
+    free0 = mgr.free_blocks + mgr.cached_blocks
+    (k1, _b1, _t1), (k2, _b2, _t2) = mgr.promote_begin(keys, max_blocks=2)
+    mgr.promote_abort(k1)                           # timeout: back to tier
+    mgr.promote_abort(k2, corrupt=True)             # checksum fail: dropped
+    mgr.check()
+    assert k1 in mgr._host and k2 not in mgr._host
+    assert mgr.free_blocks + mgr.cached_blocks == free0   # no leaked blocks
+    assert mgr.promote_aborts == 2 and mgr.in_flight == 0
+
+
+def test_promotion_loses_race_to_twin_registration():
+    """While a key's promotion is in flight, a twin prompt computes and
+    registers the same key: `promote_commit` must detect the race, keep the
+    twin's live copy, and free the reserved block (return None)."""
+    mgr = TieredBlockManager(8, host_blocks=8)
+    keys = _CHAINS[1][:3]
+    _cache_chain(mgr, 0, keys)
+    mgr.acquire(1, _CHAINS[2][:8], 8)               # age the chain out
+    mgr.release(1)
+    got = mgr.promote_begin(keys, max_blocks=1)
+    assert len(got) == 1
+    key = got[0][0]
+    # twin computes the same prefix from scratch and registers it first
+    mgr.acquire(2, keys, 3)
+    twin_block = mgr.blocks_of(2)[0]
+    mgr.register(2, keys)
+    mgr.release(2)
+    assert mgr.promote_commit(key) is None          # race detected
+    mgr.check()
+    assert mgr._trie[key] == twin_block             # twin's copy is live
+    assert mgr.in_flight == 0
+
+
+# --- copy-engine fault injection ----------------------------------------------
+
+def _tiered_cache(**kw):
+    from repro.serving.kvcache import PagedKVCache
+    kw.setdefault("host_cache_blocks", 16)
+    return PagedKVCache(num_layers=2, num_blocks=4, block_size=4,
+                        num_kv_heads=2, head_dim=4, prefix_share=True, **kw)
+
+
+def _prompt(cache, sid, keys, n_tokens, seed):
+    """Allocate + write a prompt, then commit it to the trie and release."""
+    import jax.numpy as jnp
+    t = cache.allocate(sid, n_tokens, keys=keys)
+    hit = t.length
+    if hit < n_tokens:
+        rng = np.random.default_rng(seed)
+        kv_shape = (2, n_tokens - hit, 2, 4)
+        k = jnp.asarray(rng.normal(size=kv_shape), jnp.float32)
+        v = jnp.asarray(rng.normal(size=kv_shape), jnp.float32)
+        cache.write_prompt(sid, k, v, start=hit)
+    cache.insert(sid, keys)
+    cache.free(sid)
+    return hit
+
+
+def test_promoted_kv_bitmatches_demoted():
+    """Round trip HBM -> host store -> (disk .npz) -> HBM: the promoted
+    block's K/V must equal the original bit for bit (property 3)."""
+    # host tier holds 8 of the 12 demoted blocks: the probe chain's 4 (the
+    # oldest) overflow on into the disk spill, so the round trip crosses
+    # BOTH cold tiers
+    cache = _tiered_cache(host_cache_blocks=8, disk_cache_blocks=16)
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        want_k = np.asarray(cache.k_pool).copy()
+        want_v = np.asarray(cache.v_pool).copy()
+        blocks_of = {k: cache._mgr._trie[k] for k in keys}
+        # flood: two filler prompts age all 4 blocks into the host tier,
+        # and a third pushes the oldest on into the disk spill
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        _prompt(cache, 3, _CHAINS[3][:4], 16, seed=4)
+        assert cache._engine.drain(10.0)
+        assert cache.probe(keys) == 0
+        _, host_t, disk_t = cache.probe_tiers(keys)
+        assert host_t + disk_t == 16 and disk_t > 0
+        ticket = cache.promote_async(keys)
+        assert ticket.wait(10.0)
+        assert cache.promote_settle(ticket) == 4
+        assert cache.probe(keys) == 16
+        for k in keys:
+            b_new = cache._mgr._trie[k]
+            b_old = blocks_of[k]
+            np.testing.assert_array_equal(
+                np.asarray(cache.k_pool[:, b_new]), want_k[:, b_old])
+            np.testing.assert_array_equal(
+                np.asarray(cache.v_pool[:, b_new]), want_v[:, b_old])
+        cache._mgr.check()
+    finally:
+        cache.close()
+
+
+def test_corrupt_host_copy_falls_back_to_recompute():
+    """A host copy whose bytes rotted must fail its checksum at promotion:
+    the entry is DROPPED (never probed again, never scattered into the
+    pool) and the prompt recomputes — stale KV is never served."""
+    cache = _tiered_cache()
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        assert cache._engine.drain(10.0)
+        pool_before = np.asarray(cache.k_pool).copy()
+        # rot one stored block's bytes behind the checksum's back
+        victim = keys[1]
+        with cache._store_lock:
+            k_np, v_np, crc = cache._host_store[victim]
+            k_bad = k_np.copy()
+            k_bad.ravel()[0] += 1.0
+            cache._host_store[victim] = (k_bad, v_np, crc)
+        ticket = cache.promote_async(keys)
+        assert ticket.wait(10.0)
+        # keys[0] lands; the corrupt block aborts-with-drop, and the walk
+        # behind it (begun before the corruption was detectable) settles too
+        committed = cache.promote_settle(ticket)
+        assert committed < 4
+        stats = cache.tier_stats()
+        assert stats["copies_failed"] >= 1
+        assert stats["in_flight"] == 0
+        warm, host_t, _ = cache.probe_tiers(keys)
+        assert warm == 4 and host_t == 0            # cold chain breaks at
+                                                    # the dropped block
+        assert victim not in cache._mgr._host       # dropped, not restored
+        # the corrupt bytes never reached the device pool
+        assert not np.isin(k_bad.ravel()[0],
+                           np.asarray(cache.k_pool)).any() \
+            or np.isin(k_bad.ravel()[0], pool_before).any()
+        # recompute fallback: a new prompt with the same chain allocates
+        # fresh blocks past the warm run and completes normally
+        t = cache.allocate(9, 16, keys=keys)
+        assert t.length < 16                        # suffix is recomputed
+        cache.free(9)
+        cache._mgr.check()
+    finally:
+        cache.close()
+
+
+def test_lost_host_copy_aborts_promotion():
+    """A host entry that vanished (store eviction race) is a lost copy:
+    the promotion errors, the reserved block returns to the pool, and the
+    key is dropped rather than re-probed forever."""
+    cache = _tiered_cache()
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        assert cache._engine.drain(10.0)
+        with cache._store_lock:
+            del cache._host_store[keys[0]]          # lose the copy
+        ticket = cache.promote_async(keys)
+        assert ticket.wait(10.0)
+        # promotion is per-block: the lost block aborts-with-drop, the
+        # other three land — and the lost key is gone, not retried forever
+        assert cache.promote_settle(ticket) == 3
+        assert keys[0] not in cache._mgr._host
+        assert cache.probe(keys) == 0               # chain broken at key 0
+        free, live, cached, total = cache.accounting()
+        assert free + live + cached == total        # reservation returned
+    finally:
+        cache.close()
+
+
+def test_injected_copy_failure_returns_key_to_tier():
+    """A transient copy failure (injected IOError, not a checksum mismatch)
+    aborts WITHOUT dropping: the key returns to its tier for a later try."""
+    cache = _tiered_cache()
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        assert cache._engine.drain(10.0)
+        cache._engine.fail_keys = {keys[0]}
+        ticket = cache.promote_async(keys)
+        assert ticket.wait(10.0)
+        assert cache.promote_settle(ticket) == 3    # per-block: rest land
+        assert keys[0] in cache._mgr._host          # still retryable
+        assert cache.probe(keys) == 0               # chain gated at key 0
+        cache._engine.fail_keys = set()
+        ticket = cache.promote_async(keys)          # only key 0 is cold now
+        assert ticket.wait(10.0)
+        assert cache.promote_settle(ticket) == 1    # retry succeeds
+        assert cache.probe(keys) == 16
+        cache._mgr.check()
+    finally:
+        cache.close()
+
+
+def test_engine_shutdown_with_transfers_in_flight_drains_clean():
+    """Shutdown while promotions are on the wire: queued jobs complete with
+    a shutdown error, every waiter wakes, every reserved block aborts back
+    to the pool — no leaked blocks, no hang (property 5)."""
+    engine = BlockCopyEngine()
+    engine.delay_s = 0.05                           # hold jobs on the wire
+    cache = _tiered_cache(copy_engine=engine)
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        assert engine.drain(10.0)
+        ticket = cache.promote_async(keys)
+        assert cache._mgr.in_flight > 0
+        engine.shutdown(wait=True)                  # transfers in flight
+        assert ticket.wait(5.0), "shutdown left a waiter hanging"
+        cache.promote_settle(ticket)
+        assert cache._mgr.in_flight == 0
+        free, live, cached, total = cache.accounting()
+        assert free + live + cached == total, "shutdown leaked blocks"
+        # post-shutdown submits complete immediately with the error
+        job = engine.submit("promote", 123, lambda: 1)
+        assert job.done.is_set() and job.error is not None
+    finally:
+        cache.close()
+
+
+def test_reeviction_race_during_promotion():
+    """Promotion in flight while fresh allocations keep the pool under
+    pressure: the cascade may demote MORE blocks mid-promotion, but the
+    in-flight reservation and conservation both hold throughout."""
+    engine = BlockCopyEngine()
+    engine.delay_s = 0.03
+    cache = _tiered_cache(copy_engine=engine)
+    try:
+        keys = _CHAINS[0][:4]
+        _prompt(cache, 0, keys, 16, seed=1)
+        _prompt(cache, 1, _CHAINS[1][:4], 16, seed=2)
+        _prompt(cache, 2, _CHAINS[2][:4], 16, seed=3)
+        assert engine.drain(10.0)
+        ticket = cache.promote_async(keys, max_blocks=2)
+        # while the copies crawl, a new prompt churns the remaining blocks
+        _prompt(cache, 3, _CHAINS[3][:2], 8, seed=4)
+        assert ticket.wait(10.0)
+        committed = cache.promote_settle(ticket)
+        assert engine.drain(10.0)
+        assert committed >= 0 and cache._mgr.in_flight == 0
+        free, live, cached, total = cache.accounting()
+        assert free + live + cached == total
+        cache._mgr.check()
+    finally:
+        cache.close()
+        engine.shutdown()
