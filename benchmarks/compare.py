@@ -49,13 +49,15 @@ from typing import Dict, List, Tuple
 # covers the fig21/fig22 measured wall-clock curves, "hit_rate" the fig22
 # prefix-cache residency outcomes)
 GATED = ("goodput", "attainment", "_vs_", "share", "speedup", "hit_rate")
-# substrings of metric names that are gated, LOWER is better: error families
-# and the p99 tail family (SLO-normalized tail latencies). NOTE: checked
+# substrings of metric names that are gated, LOWER is better: error families,
+# the p99 tail family (SLO-normalized tail latencies), and `lost_requests`
+# (fig26: a 0 baseline makes this an exact-zero gate — losing ANY request
+# under recovery is a correctness regression, not perf drift). NOTE: checked
 # before GATED, so a name matching both is lower-is-better — which is why
 # the fig23 frontier rows are named `p99_goodput_req_s` (matches `goodput`
 # only: the frontier is a rate, higher is better) while raw tail rows end
 # in `p99_norm` / `ttft_p99` / `tbt_p99`.
-GATED_LOWER = ("rel_err", "p99_norm", "ttft_p99", "tbt_p99")
+GATED_LOWER = ("rel_err", "p99_norm", "ttft_p99", "tbt_p99", "lost_requests")
 # metric-name substrings never gated (runner-speed or error bookkeeping)
 SKIPPED = ("_elapsed_s", "/_error", "/_real_error")
 

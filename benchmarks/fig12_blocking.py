@@ -64,7 +64,10 @@ def run_real():
             time.sleep(0.3)
             B = Request(num_tokens=128, slo=5.0, arrival=time.monotonic())
             inst.submit_request(B, rng.integers(0, cfg.vocab_size, 128))
-            inst.drain(120.0)
+            if not inst.drain(120.0):
+                raise RuntimeError(
+                    f"fig12 {gran}: instance did not drain; blocking stats "
+                    f"would be measured on incomplete work")
             b = inst.blocking_stats.mean
             rows.append((f"fig12/real/{gran}/mean_blocking_ms",
                          round(b * 1e3, 2),

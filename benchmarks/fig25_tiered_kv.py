@@ -176,7 +176,8 @@ def run_runtime(model="llama3-8b", *, prompt_tokens=2048, chunk=512):
                       arrival=time.monotonic())
         t0 = time.monotonic()
         inst.submit_request(req, toks)
-        assert inst.drain(600.0)
+        assert inst.drain(600.0), \
+            f"instance did not drain serving rid {req.rid}"
         return time.monotonic() - t0, req
 
     try:

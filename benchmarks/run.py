@@ -17,7 +17,7 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig18_cluster, fig19_hetero, fig20_decode,
                         fig21_decode_batching, fig22_prefix_cache,
                         fig23_scenarios, fig24_colocation, fig25_tiered_kv,
-                        roofline)
+                        fig26_churn, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -39,6 +39,7 @@ MODULES = [
     ("fig23", fig23_scenarios),
     ("fig24", fig24_colocation),
     ("fig25", fig25_tiered_kv),
+    ("fig26", fig26_churn),
     ("roofline", roofline),
 ]
 

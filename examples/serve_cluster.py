@@ -20,9 +20,17 @@ Two modes share the SAME dispatch policy objects (repro.core.dispatch):
             repeated prompts prefill suffix-only; add --scenario to replay
             a scenario's arrival pacing + hash-chained prompts against it):
       PYTHONPATH=src python examples/serve_cluster.py --real [--requests 10]
+
+Chaos replay (--chaos churn | spot-wave | gray | seed:<int> | plan.json):
+the SAME `FaultPlan` drives simulator instance churn and real fault
+injection against the threaded pool (supervised recovery + watchdog,
+docs/ARCHITECTURE.md) — both modes report retries / sheds / lost:
+      PYTHONPATH=src python examples/serve_cluster.py --chaos churn
+      PYTHONPATH=src python examples/serve_cluster.py --real --chaos gray
 """
 import argparse
 
+from repro.core.faults import FaultPlan
 from repro.sim.cluster import simulate_cluster
 from repro.traces.qwentrace import TraceConfig, generate
 
@@ -42,12 +50,28 @@ def _scenario_trace(args):
                                 duration=args.duration, seed=args.seed))
 
 
+def _chaos_plan(args, n_instances):
+    if not args.chaos:
+        return None
+    plan = FaultPlan.from_spec(args.chaos, n_instances=n_instances,
+                               duration=args.duration)
+    print(f"chaos plan {args.chaos!r}: {len(plan)} fault event(s)")
+    for e in plan:
+        rejoin = "never" if e.up_at == float("inf") else f"{e.up_at:.1f}s"
+        print(f"  t={e.time:6.1f}s  {e.kind:8s} {e.target}[{e.instance}]"
+              + (f" notice={e.notice}s" if e.kind == "spot" else "")
+              + (f" x{e.factor}" if e.kind == "slowdown" else "")
+              + f"  rejoin={rejoin}")
+    return plan
+
+
 def run_sim(args):
     hardware = args.hetero.split(",") if args.hetero else None
     n = len(hardware) if hardware else args.instances
     pool = " hetero[" + args.hetero + "]" if hardware else ""
     print(f"== ClusterSim: {n} prefill + {n} decode instances{pool}, "
           f"rate={args.rate} req/s, burstiness={args.burstiness} ==")
+    plan = _chaos_plan(args, n)
     if args.scenario:
         # scenario traces bring their own fitted output/TBT/prefix shape;
         # they always carry hash chains, so the prefix caches go live
@@ -67,9 +91,11 @@ def run_sim(args):
           + (f", prefix caches {cache_blocks} blocks/instance"
              if cache_blocks else ""))
     policies = POLICIES if args.policy == "all" else [args.policy]
+    fault_cols = f" {'retry':>5s} {'shed':>4s} {'lost':>4s}" \
+        if plan or args.shed_policy != "off" else ""
     print(f"{'dispatch':>17s} | {'TTFT att':>8s} {'e2e att':>8s} "
           f"{'p99/SLO':>7s} {'imbalance':>9s} {'preempts':>8s} "
-          f"{'dec-pre':>7s} {'migr':>4s} {'hit':>5s} "
+          f"{'dec-pre':>7s} {'migr':>4s} {'hit':>5s}{fault_cols} "
           f"| per-instance dispatched")
     for policy in policies:
         res = simulate_cluster("flowprefill", reqs,
@@ -79,12 +105,17 @@ def run_sim(args):
                                decode_policy=args.decode_sched,
                                decode_max_batch=args.decode_max_batch,
                                decode_migration=args.decode_migration,
-                               prefix_cache_blocks=cache_blocks)
+                               prefix_cache_blocks=cache_blocks,
+                               fault_plan=plan, recovery=args.recovery,
+                               shed_policy=args.shed_policy,
+                               shed_budget=args.shed_budget)
+        faults = f" {res.retries:5d} {res.shed_requests:4d} " \
+                 f"{res.lost_requests:4d}" if fault_cols else ""
         print(f"{policy:>17s} | {res.attainment:8.3f} "
               f"{res.e2e_attainment:8.3f} {res.e2e_p99_norm:7.2f} "
               f"{res.imbalance:9.2f} "
               f"{res.preemptions:8d} {res.decode_preemptions:7d} "
-              f"{res.migrations:4d} {res.prefix_hit_rate:5.2f} "
+              f"{res.migrations:4d} {res.prefix_hit_rate:5.2f}{faults} "
               f"| {res.dispatched}")
 
 
@@ -147,12 +178,56 @@ def run_real(args):
     # decode pressure priced by the analytic decode model for this config
     from repro.sim.costmodel import A800, DecodeCostModel, ModelSpec
     cap = xs[-1] / ys[-1]                  # measured prefill tokens/s
+    plan = _chaos_plan(args, args.instances)
+    has_hang = plan is not None and any(e.kind == "hang" for e in plan)
     proxy = Proxy(insts, decs, dispatch=policy,
                   capacities=[cap] * args.instances,
                   decode_cost=DecodeCostModel(ModelSpec.from_config(cfg),
                                               A800),
-                  decode_migration=args.decode_migration)
+                  decode_migration=args.decode_migration,
+                  recovery=args.recovery,
+                  shed_policy=args.shed_policy,
+                  shed_budget=args.shed_budget,
+                  # hangs are only detectable by the watchdog; generous
+                  # period so tiny-model jit compiles don't false-positive
+                  watchdog_s=2.0 if has_hang else 0.0)
     rng = np.random.default_rng(args.seed)
+
+    # replay the plan in request-index space: event time t maps to "after
+    # submission floor(t / duration * requests)", so a fault scheduled
+    # mid-trace lands mid-stream regardless of real-mode pacing. Outages
+    # are capped at 5s (the demo run is seconds, not the sim's minutes).
+    import threading
+    chaos_by_i = {}
+    revive_timers = []
+    if plan is not None:
+        for e in plan:
+            i = min(int(e.time / args.duration * args.requests),
+                    args.requests - 1)
+            chaos_by_i.setdefault(i, []).append(e)
+
+    def fire(e):
+        kind, idx = e.target, e.instance
+        j = idx % (args.instances if kind == "prefill" else len(decs))
+        outage = min(e.duration, 5.0)
+        if e.kind in ("crash", "spot"):
+            # spot notice is sub-second here; treat both as a kill + rejoin
+            proxy.kill_instance(j, kind)
+            t = threading.Timer(outage, proxy.revive_instance, args=(j, kind))
+            t.daemon = True
+            t.start()
+            revive_timers.append(t)
+            print(f"  [chaos] {e.kind} {kind}[{j}] (rejoin in {outage:.1f}s)")
+        elif e.kind == "hang":
+            target = insts[j] if kind == "prefill" else decs[j]
+            target.inject_fault(("hang", min(e.duration, 2.0)))
+            t = threading.Timer(outage, proxy.revive_instance, args=(j, kind))
+            t.daemon = True
+            t.start()
+            revive_timers.append(t)
+            print(f"  [chaos] hang {kind}[{j}] (watchdog will strand it)")
+        else:
+            print(f"  [chaos] {e.kind} not modeled in --real mode; skipped")
     scen = _scenario_trace(args)[:args.requests] if args.scenario else None
 
     def scenario_tokens(src, n):
@@ -192,7 +267,14 @@ def run_real(args):
                               tbt_slo=2.0)
                 proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
                 time.sleep(float(rng.exponential(0.15)))
-        assert proxy.drain(300.0)
+            for e in chaos_by_i.pop(i, ()):
+                fire(e)
+        if not proxy.drain(300.0):
+            rep = proxy.report()
+            raise SystemExit(
+                f"drain timed out: {len(rep['stranded_rids'])} request(s) "
+                f"stranded (rids {rep['stranded_rids']}), instance health "
+                f"{rep['instance_health']}")
         time.sleep(0.5)
         rep = proxy.report()
         print(f"  requests={rep['n_requests']} "
@@ -204,6 +286,14 @@ def run_real(args):
         print(f"  decoded={sum(len(d.finished) for d in decs)} "
               f"decode_migrations={rep['decode_migrations']} "
               f"decode_preemptions={rep['decode_preemptions']}")
+        if plan is not None or args.shed_policy != "off":
+            served = rep["n_requests"] - rep["lost_requests"] \
+                - rep["shed_requests"]
+            print(f"  chaos: retries={rep['retries']} "
+                  f"shed={rep['shed_requests']} "
+                  f"lost={rep['lost_requests']} "
+                  f"recovered goodput={served}/{rep['n_requests']} served "
+                  f"(health {rep['instance_health']})")
     finally:
         proxy.shutdown()
 
@@ -252,6 +342,25 @@ def main():
     ap.add_argument("--prefix-cache-blocks", type=int, default=2048,
                     help="prefix cache capacity per instance, in KV blocks "
                     "of 128 tokens (with --prefix-share)")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="replay a FaultPlan: a preset (churn, spot-wave, "
+                    "gray), seed:<int> for a generated schedule, or a JSON "
+                    "file from FaultPlan.to_json. Sim mode feeds it to "
+                    "ClusterSim; --real injects the same faults into the "
+                    "threaded pool (kill/revive + hang watchdog)")
+    ap.add_argument("--recovery", default="retry",
+                    choices=["retry", "none"],
+                    help="stranded-work handling under --chaos: re-dispatch "
+                    "with backoff (retry) or count as lost (none, the "
+                    "naive baseline)")
+    ap.add_argument("--shed-policy", default="off",
+                    choices=["off", "doomed-only", "budget"],
+                    help="SLO-aware admission control (docs/SCHEDULING.md): "
+                    "reject doomed arrivals at the proxy instead of letting "
+                    "them poison the tail")
+    ap.add_argument("--shed-budget", type=float, default=2.0,
+                    help="budget policy: shed when predicted TTFT > "
+                    "budget x SLO")
     ap.add_argument("--seed", type=int, default=3)
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--requests", type=int, default=10,

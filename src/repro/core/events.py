@@ -18,6 +18,10 @@ class EventKind(enum.Enum):
     ARRIVAL = "arrival"
     COMPLETION = "completion"
     SHUTDOWN = "shutdown"
+    # chaos-harness injection (core/faults.py): payload is an Exception to
+    # raise inside the scheduler loop (crash) or ("hang", seconds) to stall
+    # it. Never emitted by normal serving; scheduling-round bound unchanged.
+    FAULT = "fault"
 
 
 _seq = itertools.count()

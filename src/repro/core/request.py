@@ -53,6 +53,13 @@ class Request:
     decode_migrations: int = 0           # times this decode moved instances
     decode_preemptions: int = 0          # times this decode was displaced
 
+    # fault recovery (instance churn): times this request was stranded by a
+    # failing instance and re-dispatched (KV lost -> recompute); the retry
+    # budget caps it. shed=True means admission control rejected it outright
+    # (state DROPPED, never dispatched) — distinct from retries-exhausted.
+    retries: int = 0
+    shed: bool = False
+
     # outcome
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None

@@ -149,9 +149,23 @@ class DecodeInstance:
         self._step_ragged = jax.jit(
             lambda p, t, kg, vg, kl: decode_step_ragged(
                 p, cfg, t, kg, vg, kl, attn_impl=attn_impl))
+        # supervised-worker health (docs/ARCHITECTURE.md failure model): a
+        # worker exception strands queued + resident jobs' REQUESTS back to
+        # `on_fault` (the Proxy re-runs them from prefill — their pool KV
+        # died with the instance) and flips healthy until restart().
+        self.healthy = True
+        self.on_fault: Optional[Callable] = None   # (requests, exc) -> None
+        self.last_error: Optional[BaseException] = None
+        self.last_progress = clock()
+        self._inject: Optional[object] = None      # chaos: raise in worker
+        # incarnation counter, bumped at every strand: a worker that wakes
+        # from a hang AFTER restart() sees healthy=True again, so the flag
+        # alone cannot tell it its job was re-dispatched — the epoch can
+        # (the runtime analog of the simulator's killed_seq)
+        self._epoch = 0
         run = self._run_batched if self.decode_max_batch > 1 else self._run
-        self._thread = threading.Thread(target=run, daemon=True,
-                                        name="decode-instance")
+        self._thread = threading.Thread(target=lambda: self._supervised(run),
+                                        daemon=True, name="decode-instance")
         self._thread.start()
 
     # ------------------------------------------------------------- frontend
@@ -194,10 +208,15 @@ class DecodeInstance:
     def idle(self) -> bool:
         """No queued work and nothing decoding. NOTE: a job being migrated
         is momentarily in NO instance, so cross-instance quiescence must be
-        checked under the owner's migration lock (Proxy.drain does)."""
+        checked under the owner's migration lock (Proxy.drain does).
+
+        An unhealthy instance is never idle: the strand sweep empties the
+        queues BEFORE `on_fault` hands the victims to the supervisor, and in
+        that gap an "idle" answer would let a drain settle on work that is
+        mid-flight to the recovery path."""
         with self._cv:
-            return not self._waiting and not self._resident \
-                and self._admitting == 0
+            return self.healthy and not self._waiting \
+                and not self._resident and self._admitting == 0
 
     def compile_cache_size(self) -> int:
         """Compiled-shape count of the batched step — the recompile budget
@@ -257,6 +276,69 @@ class DecodeInstance:
             self._shutdown = True
             self._cv.notify_all()
         self._thread.join(10.0)
+
+    # ------------------------------------------------ supervised recovery
+    def _supervised(self, loop: Callable[[], None]) -> None:
+        """Worker wrapper: exceptions strand the instance instead of
+        silently killing the thread; the thread survives for restart()."""
+        while True:
+            try:
+                loop()
+                return                      # clean shutdown exit
+            except Exception as exc:
+                self._on_worker_failure(exc)
+
+    def _check_inject(self) -> None:
+        """Chaos hook, called at the token boundary: raise a pending
+        injected fault, or stall for a simulated hang."""
+        inj = self._inject
+        if inj is None:
+            return
+        self._inject = None
+        if isinstance(inj, tuple) and inj and inj[0] == "hang":
+            time.sleep(float(inj[1]))
+            return
+        raise inj if isinstance(inj, BaseException) \
+            else RuntimeError(str(inj))
+
+    def inject_fault(self, fault) -> None:
+        with self._cv:
+            self._inject = fault
+            self._cv.notify_all()
+
+    def _on_worker_failure(self, exc: Exception) -> None:
+        """Idempotent strand: queued + resident jobs' requests return to
+        `on_fault`; the paged pool is considered dead (recovery re-prefills
+        from scratch, the simulator's KV-lost convention)."""
+        with self._cv:
+            if not self.healthy:
+                return
+            self.healthy = False
+            self.last_error = exc
+            self._epoch += 1
+            victims = [j.request for j in self._resident.values()]
+            victims += [j.request for j in self._waiting]
+            self._resident.clear()
+            self._waiting = []
+            self._admitting = 0
+            with self._kv_lock:
+                self.kv = None              # pool died with the worker
+            self._in_pool.clear()
+            self._cv.notify_all()
+        cb = self.on_fault
+        if cb is not None:
+            cb(victims, exc)                # outside _cv: Proxy re-enters
+
+    def restart(self) -> None:
+        with self._cv:
+            self.healthy = True
+            self.last_error = None
+            self.last_progress = self.clock()
+            self._cv.notify_all()
+
+    @property
+    def progress_ts(self) -> float:
+        return self.last_progress
 
     def drain(self, timeout: float = 60.0) -> bool:
         """Block until the instance is idle. Waits on the instance condition
@@ -325,12 +407,18 @@ class DecodeInstance:
     def _run(self) -> None:
         while True:
             with self._cv:
-                while not self._waiting and not self._shutdown:
+                while not self._waiting and not self._shutdown \
+                        and self._inject is None:
                     self._cv.wait(0.1)
-                if not self._waiting:
+                if not self._waiting and self._inject is None:
                     return                     # shutdown with an empty queue
+            self._check_inject()
+            with self._cv:
+                if not self._waiting:
+                    continue
                 job = self._pick_next_locked(self.clock())
                 self._resident[job.request.rid] = job
+                epoch = self._epoch
             start = job.first_token if job.next_token is None \
                 else job.next_token
             tok = jnp.asarray([start], jnp.int32)
@@ -345,22 +433,30 @@ class DecodeInstance:
                     1, float(job.request.num_tokens + job.tokens_done),
                     now - last)
                 last = now
+                self.last_progress = now
                 job.tokens_done += 1
                 job.cache = cache
                 job.next_token = int(tok[0])
+                self._check_inject()           # chaos: token-boundary fault
+                if self._epoch != epoch:
+                    # stranded mid-decode (the hang injection sleeps right
+                    # above, and the watchdog may strand AND restart() may
+                    # run before we wake): this job was already re-dispatched
+                    # — finishing it here would complete the request twice
+                    break
                 if job.tokens_done < job.target and \
                         self._should_yield(job, now):
                     job.request.decode_preemptions += 1
                     self.preemptions += 1
                     with self._cv:
                         self._waiting.append(job)
-                        del self._resident[job.request.rid]
+                        self._resident.pop(job.request.rid, None)
                         self._cv.notify_all()
                     break
             else:
                 self._finish(job, self.clock())
                 with self._cv:
-                    del self._resident[job.request.rid]
+                    self._resident.pop(job.request.rid, None)
                     self._cv.notify_all()
 
     # --------------------------------- continuous-batching worker (slots > 1)
@@ -543,6 +639,7 @@ class DecodeInstance:
         # profile_step_times measures (the prior the EMA calibrates against)
         now = self.clock()
         self.steps += 1
+        self.last_progress = now
         dt = now - t0
         mean_ctx = float(kv_lens[:n].mean())
         self._observe(n, mean_ctx, dt)
@@ -556,6 +653,11 @@ class DecodeInstance:
         with self._cv:
             for j in done:
                 rid = j.request.rid
+                if rid not in self._resident:
+                    # stranded mid-step (watchdog fired while the jitted
+                    # step compiled/ran): the request was re-dispatched —
+                    # finishing it here would complete it twice
+                    continue
                 self._finish(j, now)
                 self._resident.pop(rid, None)
                 with self._kv_lock:
@@ -563,7 +665,8 @@ class DecodeInstance:
                     # prefix-sharing pool blocks other streams still
                     # reference stay live, and trie-registered prompt
                     # blocks stay cached for the next matching prompt
-                    self.kv.free(rid)
+                    if self.kv is not None:
+                        self.kv.free(rid)
                 self._in_pool.discard(rid)
             if done:
                 self._cv.notify_all()
@@ -572,11 +675,13 @@ class DecodeInstance:
         while True:
             with self._cv:
                 while not self._waiting and not self._resident \
-                        and not self._shutdown:
+                        and not self._shutdown and self._inject is None:
                     self._cv.wait(0.1)
                 if self._shutdown and not self._waiting \
                         and not self._resident:
                     return
+            self._check_inject()
+            with self._cv:
                 to_ingest = self._plan_locked(self.clock())
             for job in to_ingest:                  # device I/O: no _cv held
                 ok = self._ingest(job)

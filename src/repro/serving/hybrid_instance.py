@@ -203,7 +203,17 @@ class HybridInstance:
         self.prefix_promotions = 0                 # blocks re-warmed
         self.prefix_promoted_tokens = 0
 
-        self._thread = threading.Thread(target=self._run, daemon=True,
+        # supervised-worker health (docs/ARCHITECTURE.md failure model):
+        # same contract as PrefillInstance/DecodeInstance — an exception in
+        # the colocated worker strands every in-flight request (both phases)
+        # to `on_fault` and flips healthy until restart().
+        self.healthy = True
+        self.on_fault: Optional[Callable] = None   # (requests, exc) -> None
+        self.last_error: Optional[BaseException] = None
+        self.last_progress = clock()
+        self._inject: Optional[object] = None
+
+        self._thread = threading.Thread(target=self._supervised, daemon=True,
                                         name="hybrid-instance")
         self._thread.start()
 
@@ -290,6 +300,72 @@ class HybridInstance:
                 with self._kv_lock:
                     self.kv.promote_settle(ticket)
             self.kv.close()
+
+    # ----------------------------------------------------------- supervision
+    def _supervised(self) -> None:
+        """Worker wrapper: catch any exception, strand the in-flight work to
+        the Proxy and keep the THREAD alive so restart() is a state flip."""
+        while True:
+            try:
+                self._run()
+                return                      # clean shutdown
+            except Exception as exc:
+                self._on_worker_failure(exc)
+
+    def _check_inject(self) -> None:
+        """Chaos hook at the round boundary: ("hang", s) stalls the worker
+        outside every lock (so the watchdog can strand it); an Exception
+        crashes the round."""
+        inj = self._inject
+        if inj is None:
+            return
+        self._inject = None
+        if isinstance(inj, tuple) and inj and inj[0] == "hang":
+            time.sleep(float(inj[1]))
+            return
+        if isinstance(inj, BaseException):
+            raise inj
+        raise RuntimeError(f"injected fault: {inj!r}")
+
+    def inject_fault(self, fault: object) -> None:
+        """Deliver a chaos-harness fault to the worker (core/faults.py)."""
+        with self._cv:
+            self._inject = fault
+            self._cv.notify_all()
+
+    def _on_worker_failure(self, exc: BaseException) -> None:
+        """Strand EVERY in-flight request (both phases) to on_fault. The
+        pool KV for this instance is considered lost: the Proxy re-dispatches
+        from scratch (recompute > resurrecting half-written pool blocks)."""
+        with self._cv:
+            if not self.healthy:
+                return
+            self.healthy = False
+            self.last_error = exc
+            stranded = [ps.request for ps in self._prefills.values()]
+            stranded += [j.request for j in self._jobs.values()]
+            self._prefills.clear()
+            self._jobs.clear()
+            self._resident.clear()
+            self._cv.notify_all()
+        cb = self.on_fault
+        if cb is not None:
+            cb(stranded, exc)
+
+    def restart(self) -> None:
+        """Revive after a failure: the worker thread survived the exception
+        (supervised), so this is just the health flip + progress stamp."""
+        with self._cv:
+            self.healthy = True
+            self.last_error = None
+            self._inject = None
+            self.last_progress = self.clock()
+            self._cv.notify_all()
+
+    @property
+    def progress_ts(self) -> float:
+        """Watchdog signal: wall-clock of the last observed forward step."""
+        return self.last_progress
 
     # --------------------------------------------------------- KV lifecycle
     def _acquire(self, ps: _Prefill) -> None:
@@ -532,6 +608,7 @@ class HybridInstance:
         now = self.clock()
         self.steps += 1
         self._last_decode = now
+        self.last_progress = now
         self._observe(n, float(kv_lens[:n].mean()), now - t0)
         alive: List[HybridJob] = []
         done: List[HybridJob] = []
@@ -548,6 +625,11 @@ class HybridInstance:
             with self._cv:
                 for j in done:
                     rid = j.request.rid
+                    if rid not in self._jobs:
+                        # stranded mid-round (watchdog): the request was
+                        # re-dispatched — completing it twice is the one
+                        # thing the recovery invariant forbids
+                        continue
                     j.request.finish_time = now
                     j.request.mean_tpot = (now - j.enqueued) \
                         / max(j.target, 1)
@@ -577,16 +659,21 @@ class HybridInstance:
     def _run(self) -> None:
         while True:
             with self._cv:
-                while not self._has_work_locked() and not self._shutdown:
+                while not (self._has_work_locked() and self.healthy) \
+                        and not self._shutdown and self._inject is None:
                     self._cv.wait(0.1)
                 if self._shutdown and not self._has_work_locked():
                     return
+                if not self.healthy and self._inject is None:
+                    continue                # zombie guard until restart()
                 now = self.clock()
                 prefills = [ps.request for ps in self._prefills.values()]
                 done_map = {rid: ps.done_tokens
                             for rid, ps in self._prefills.items()}
                 entries = [self._entry(j) for j in self._jobs.values()]
                 resident = set(self._resident)
+            self._check_inject()
+            self.last_progress = self.clock()
             b = min(len(entries), self.decode_max_batch)
             ctx = (sum(j.base_len + j.tokens_done
                        for j in self._jobs.values()) / len(self._jobs)
@@ -629,6 +716,7 @@ class HybridInstance:
                 target = task.total_segments            # run the head too
             while task.cursor < target and not task.done:
                 self.executor.step(task)
+                self.last_progress = self.clock()
                 if not task.done:
                     jobs = self._maybe_weave(jobs)
             chunks_done = task.cursor // spc
@@ -637,9 +725,15 @@ class HybridInstance:
                 ps.request.num_tokens)
             ps.request.ops_done = task.cursor
             if task.done:
+                req = ps.request
+                with self._cv:
+                    if self._prefills.get(req.rid) is not ps:
+                        # stranded mid-chunk: the request was re-dispatched
+                        # — publishing this incarnation's result would race
+                        # (or double) the recovery's
+                        continue
                 now = self.clock()
                 first = self._publish(ps, now)
-                req = ps.request
                 with self._cv:
                     self._prefills.pop(req.rid, None)
                 self.prefilled.append(req)

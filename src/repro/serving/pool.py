@@ -45,7 +45,9 @@ class ExecutionPool:
     def __init__(self, step_fn: Callable[[ExecTask], bool],
                  on_complete: Callable[[ExecTask], None],
                  clock: Callable[[], float] = time.monotonic,
-                 dispatch_depth: int = 2):
+                 dispatch_depth: int = 2,
+                 on_error: Optional[Callable[[Optional[ExecTask],
+                                              Exception], None]] = None):
         """dispatch_depth bounds how many operator dispatches may be enqueued
         ahead of device completion. Without this bound JAX's async dispatch
         would let the host race to the end of the prefill, making the
@@ -53,10 +55,14 @@ class ExecutionPool:
         <= (dispatch_depth + 1) x one operator — the paper's bound."""
         self._step = step_fn
         self._on_complete = on_complete
+        self._on_error = on_error
         self._clock = clock
         self._dispatch_depth = max(dispatch_depth, 0)
         self.signal = PreemptionSignal()
         self.blocking = BlockingStats()
+        self.healthy = True             # False after a worker exception
+        self.last_step = clock()        # watchdog progress signal: stamped
+                                        # at every operator boundary
         self._cv = threading.Condition()
         self._current: Optional[ExecTask] = None
         self._preempted: Dict[int, ExecTask] = {}
@@ -99,6 +105,22 @@ class ExecutionPool:
         with self._cv:
             return list(self._preempted.values())
 
+    def clear_preempted(self) -> List[ExecTask]:
+        """Drop all suspended tasks (supervised recovery: their requests are
+        being re-dispatched elsewhere, so keeping the device state would only
+        leak memory and invite zombie resumes)."""
+        with self._cv:
+            dropped = list(self._preempted.values())
+            self._preempted.clear()
+        return dropped
+
+    def restart(self) -> None:
+        """Mark the pool serviceable again after a worker exception (the
+        worker thread survives errors, so this is just the health flip)."""
+        with self._cv:
+            self.healthy = True
+            self.last_step = self._clock()
+
     def current(self) -> Optional[ExecTask]:
         with self._cv:
             return self._current
@@ -123,36 +145,54 @@ class ExecutionPool:
                     return
                 task = self._current
 
-            window: List = []                      # dispatched, maybe unfinished
-            while True:
-                # cooperative preemption check at the operator boundary
+            try:
+                self._run_task(task)
+            except Exception as exc:        # supervised worker: a failing
+                # operator (OOM, bad kernel, injected chaos) must not strand
+                # the task forever — mark unhealthy, errback, keep the thread
+                # alive so restart() can revive the instance
+                with self._cv:
+                    self.healthy = False
+                    self._current = None
                 if self.signal.check():
-                    # drain the in-flight operators (bounded by dispatch_depth)
-                    jax.block_until_ready(task.prefill_task.state)
-                    dt = self.signal.consume_and_ack()
-                    self.blocking.record(dt)
-                    with self._cv:
-                        self._preempted[task.task_id] = task
-                        self._current = None
-                    break
+                    # unblock a racing preemption request (the scheduler
+                    # would otherwise stall its full ack timeout)
+                    self.signal.consume_and_ack()
+                if self._on_error is not None:
+                    self._on_error(task, exc)
 
-                done = self._step(task)
-                # flow control: keep at most dispatch_depth segments in flight
-                tok = task.prefill_task.sync_token
-                if tok is not None:
-                    window.append(tok)
-                    if len(window) > self._dispatch_depth:
-                        jax.block_until_ready(window.pop(0))
+    def _run_task(self, task: ExecTask) -> None:
+        window: List = []                      # dispatched, maybe unfinished
+        while True:
+            # cooperative preemption check at the operator boundary
+            if self.signal.check():
+                # drain the in-flight operators (bounded by dispatch_depth)
+                jax.block_until_ready(task.prefill_task.state)
+                dt = self.signal.consume_and_ack()
+                self.blocking.record(dt)
+                with self._cv:
+                    self._preempted[task.task_id] = task
+                    self._current = None
+                return
 
-                if done:
-                    if task.prefill_task.logits is not None:
-                        jax.block_until_ready(task.prefill_task.logits)
-                    task.complete_time = self._clock()
-                    with self._cv:
-                        self._current = None
-                    # unblock a racing preemption request (scheduler will see
-                    # the task is NOT in the preempted set -> completed)
-                    if self.signal.check():
-                        self.signal.consume_and_ack()
-                    self._on_complete(task)
-                    break
+            done = self._step(task)
+            self.last_step = self._clock()
+            # flow control: keep at most dispatch_depth segments in flight
+            tok = task.prefill_task.sync_token
+            if tok is not None:
+                window.append(tok)
+                if len(window) > self._dispatch_depth:
+                    jax.block_until_ready(window.pop(0))
+
+            if done:
+                if task.prefill_task.logits is not None:
+                    jax.block_until_ready(task.prefill_task.logits)
+                task.complete_time = self._clock()
+                with self._cv:
+                    self._current = None
+                # unblock a racing preemption request (scheduler will see
+                # the task is NOT in the preempted set -> completed)
+                if self.signal.check():
+                    self.signal.consume_and_ack()
+                self._on_complete(task)
+                return

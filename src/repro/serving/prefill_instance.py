@@ -82,7 +82,18 @@ class PrefillInstance:
 
         self.monitor = EventMonitor()
         self.pool = ExecutionPool(step_fn=self._step, on_complete=self._complete,
-                                  clock=clock, dispatch_depth=dispatch_depth)
+                                  clock=clock, dispatch_depth=dispatch_depth,
+                                  on_error=self._on_pool_error)
+
+        # supervised-worker health (docs/ARCHITECTURE.md failure model):
+        # a crash in either worker thread strands the queued + in-flight
+        # requests back to `on_fault` (the Proxy re-dispatches them) and
+        # flips healthy=False until restart(). last_progress feeds the
+        # Proxy's watchdog (hang detection).
+        self.healthy = True
+        self.on_fault: Optional[Callable] = None   # (requests, exc) -> None
+        self.last_error: Optional[BaseException] = None
+        self.last_progress = clock()
 
         # request bookkeeping (owned by the scheduler thread)
         self._tokens: Dict[int, np.ndarray] = {}
@@ -157,9 +168,14 @@ class PrefillInstance:
         instance condition variable — the scheduler thread notifies after
         every processed event — instead of the old 2 ms busy-wait poll."""
         def idle() -> bool:
-            return not (self._waiting or self._preempted
-                        or self._running is not None
-                        or self.monitor.qsize() > 0)
+            # unhealthy => never drained: the strand sweep clears these
+            # queues BEFORE on_fault hands the victims to the supervisor,
+            # and "drained" in that gap would let the proxy settle on work
+            # that is mid-flight to the recovery path
+            return self.healthy and not (
+                self._waiting or self._preempted
+                or self._running is not None
+                or self.monitor.qsize() > 0)
         with self._idle_cv:
             return self._idle_cv.wait_for(idle, timeout)
 
@@ -183,6 +199,12 @@ class PrefillInstance:
         return self.executor.step(task.prefill_task)
 
     def _complete(self, task: ExecTask) -> None:
+        if not self.healthy:
+            # zombie completion: the instance already stranded this task's
+            # requests to the Proxy — mutating them now would race their
+            # re-dispatch (the Proxy's _completed_rids dedupe is the second
+            # line of defense for the narrow flag-read window)
+            return
         now = task.complete_time
         for r in task.requests:
             r.first_token_time = now
@@ -199,13 +221,95 @@ class PrefillInstance:
                 continue
             if ev.kind == EventKind.SHUTDOWN:
                 return
-            with self._lock:
-                self._handle_event(ev)
-                self._round()
-                if not (self._waiting or self._preempted
-                        or self._running is not None
-                        or self.monitor.qsize() > 0):
-                    self._idle_cv.notify_all()
+            try:
+                if ev.kind == EventKind.FAULT:
+                    inj = ev.payload
+                    if isinstance(inj, tuple) and inj and inj[0] == "hang":
+                        # simulated hang: stall OUTSIDE the lock so the
+                        # watchdog can still strand the queues
+                        time.sleep(float(inj[1]))
+                        continue
+                    raise inj if isinstance(inj, BaseException) \
+                        else RuntimeError(str(inj))
+                if not self.healthy:
+                    if ev.kind == EventKind.ARRIVAL:
+                        # a dispatch that raced the failure: the request was
+                        # not yet queued when the strand swept, so bounce it
+                        # straight back to the recovery path (silently
+                        # dropping it would break no-request-lost)
+                        cb = self.on_fault
+                        if cb is not None:
+                            cb([ev.payload], self.last_error
+                               or RuntimeError("instance down"))
+                    continue        # stranded: drop zombies until restart()
+                with self._lock:
+                    self._handle_event(ev)
+                    self._round()
+                    if not (self._waiting or self._preempted
+                            or self._running is not None
+                            or self.monitor.qsize() > 0):
+                        self._idle_cv.notify_all()
+                self.last_progress = self.clock()
+            except Exception as exc:
+                self._on_worker_failure(exc)
+
+    # ------------------------------------------------ supervised recovery
+    def _on_worker_failure(self, exc: Exception) -> None:
+        """Strand everything back to the proxy layer: idempotent (first
+        failure wins), callable from the scheduler thread, the pool worker,
+        or the Proxy's watchdog. Queued, suspended, and running requests are
+        all returned — their partial prefill state died with the instance
+        (the KV-lost convention the simulator shares)."""
+        with self._lock:
+            if not self.healthy:
+                return
+            self.healthy = False
+            self.last_error = exc
+            stranded: List[Request] = list(self._waiting)
+            for task in self._preempted.values():
+                stranded.extend(task.requests)
+            if self._running is not None:
+                stranded.extend(self._running.requests)
+            self._waiting = []
+            self._preempted = {}
+            self._running = None
+            self._idle_cv.notify_all()
+        # stop the pool's in-flight task too: left running, it would still
+        # occupy the pool after restart() and collide with the first
+        # post-revive submit. From the pool worker's own error path _current
+        # is already None and this returns immediately.
+        self.pool.preempt_current(timeout=5.0)
+        self.pool.clear_preempted()
+        cb = self.on_fault
+        if cb is not None:
+            cb(stranded, exc)       # outside the lock: the Proxy re-enters
+
+    def _on_pool_error(self, task, exc: Exception) -> None:
+        # the failed ExecTask is still referenced from self._running /
+        # self._preempted, so _on_worker_failure strands its requests too
+        self._on_worker_failure(exc)
+
+    def inject_fault(self, fault) -> None:
+        """Chaos-harness entry (core/faults.py): an Exception crashes the
+        scheduler loop at its next event; ("hang", seconds) stalls it."""
+        self.monitor.publish(Event(time=self.clock(), kind=EventKind.FAULT,
+                                   payload=fault))
+
+    def restart(self) -> None:
+        """Rejoin after a failure: both worker threads survive exceptions,
+        so recovery is a state reset, not a thread respawn."""
+        with self._lock:
+            self.healthy = True
+            self.last_error = None
+            self.last_progress = self.clock()
+        self.pool.restart()
+
+    @property
+    def progress_ts(self) -> float:
+        """Latest liveness signal across both worker threads (scheduler
+        event processed, or pool operator boundary crossed) — what the
+        Proxy's hang watchdog compares against its deadline."""
+        return max(self.last_progress, self.pool.last_step)
 
     def _acquire_prefix(self, req: Request, tokens: np.ndarray) -> None:
         """ARRIVAL-time trie probe + allocation: pin the cached prefix and

@@ -34,7 +34,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
                                  InstanceLoad, competing_tokens,
-                                 make_dispatch, plan_decode_migrations)
+                                 make_dispatch, plan_decode_migrations,
+                                 predicted_ttft)
+from repro.core.faults import FaultPlan
 from repro.core.metrics import percentile_report, slo_frac_percentile
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
                                   TTFTPredictor)
@@ -56,6 +58,13 @@ HYBRID_STEP = 5
 # the promote-vs-recompute gate arrives at its instance only after the copy
 # lands — TTFT includes the promotion latency by construction
 PROMOTE_DONE = 6
+# instance churn (core/faults.py FaultPlan): an instance leaves the pool
+# (crash / spot kill / watchdog-detected hang / link drop) or rejoins it.
+# Payload is (phase, FaultEvent); phases: "drain" (spot notice), "freeze"
+# (hang onset), "kill" (strand queued+running work), "slow"/"unslow"
+# (gray slowdown), "link"/"unlink" (decode kv_link drop), "up" (rejoin).
+INSTANCE_DOWN = 7
+INSTANCE_UP = 8
 
 # token count at which per-instance peak prefill throughput (the
 # capacity-weighted dispatch normalizer) is probed: long enough to saturate
@@ -110,6 +119,8 @@ class DecodeSim:
         self.last_update = 0.0
         self.finished: List[Request] = []
         self.preemptions = 0
+        self.frozen = False     # hung (fault injection): no progress, no
+                                # completion events, until killed or revived
         self._order = itertools.count()
 
     def _step_time(self) -> float:
@@ -121,7 +132,7 @@ class DecodeSim:
     def _advance(self, now: float) -> None:
         dt = now - self.last_update
         self.last_update = now
-        if dt <= 0 or not self.jobs:
+        if dt <= 0 or not self.jobs or self.frozen:
             return
         t_step = self._step_time()
         gained = dt / t_step if t_step > 0 else float("inf")
@@ -130,7 +141,7 @@ class DecodeSim:
 
     def _reschedule(self, now: float) -> None:
         self.epoch += 1
-        if not self.jobs:
+        if not self.jobs or self.frozen:
             return
         t_step = self._step_time()
         t_next = min((j.request.output_tokens - j.done) * t_step
@@ -218,6 +229,36 @@ class DecodeSim:
         resident batch, so no re-rate or reschedule is needed."""
         return self.waiting.pop(rid)
 
+    # ------------------------------------------------------- fault injection
+    def freeze(self, now: float) -> None:
+        """Hang onset: materialize progress up to now, then stop — pending
+        completion events go stale (epoch bump) and no new ones schedule
+        until the instance is killed (strand) or thaws."""
+        self._advance(now)
+        self.frozen = True
+        self.epoch += 1                   # invalidates in-flight DECODE_DONE
+
+    def thaw(self, now: float) -> None:
+        self.frozen = False
+        self.last_update = now
+        self._rebatch(now)
+        self._reschedule(now)
+
+    def strand(self, now: float) -> List[Request]:
+        """Instance death: every held stream (resident + queued) loses its
+        KV and is returned to the cluster for recovery. Leaves the instance
+        empty and un-frozen (ready for a later rejoin)."""
+        if not self.frozen:
+            self._advance(now)
+        victims = [j.request for j in self.jobs.values()] \
+            + [j.request for j in self.waiting.values()]
+        self.jobs.clear()
+        self.waiting.clear()
+        self.epoch += 1
+        self.frozen = False
+        self.last_update = now
+        return victims
+
     def on_decode_done(self, payload, now: float) -> List[Request]:
         _, epoch = payload
         if epoch != self.epoch:
@@ -234,6 +275,23 @@ class DecodeSim:
         self._rebatch(now)                # freed slots admit from the queue
         self._reschedule(now)
         return [j.request for j in done]
+
+
+class _SlowedCost:
+    """Gray-failure wrapper around a PrefillCostModel: every operator takes
+    ``factor``x as long. The task already running when the slowdown fires
+    keeps its scheduled completion (the factor applies from the next task),
+    and dispatch sees the de-rated capacity immediately."""
+
+    def __init__(self, base, factor: float):
+        self._base = base
+        self.factor = factor
+        self.m = base.m
+        self.hw = base.hw
+
+    def op_durations(self, tokens, chunk_tokens=0, prefix=0):
+        return self._base.op_durations(tokens, chunk_tokens, prefix) \
+            * self.factor
 
 
 @dataclass
@@ -486,6 +544,10 @@ class ClusterResult:
     prefix_promoted_tokens: int = 0       # hit tokens that had to be copied
                                           # up from host/disk first (tiered)
     tier_demotions: int = 0               # blocks demoted HBM -> host tier
+    retries: int = 0                      # stranded-work re-dispatches (churn)
+    shed_requests: int = 0                # rejected at admission (shedding)
+    lost_requests: int = 0                # stranded forever: naive mode, or
+                                          # retry budget exhausted
 
     @property
     def attainment(self) -> float:
@@ -529,6 +591,24 @@ class ClusterResult:
         per task class) — `repro.core.metrics.percentile_report` shape,
         identical to `Proxy.report()['percentiles']`."""
         return percentile_report(self.requests, by_task=by_task)
+
+    @property
+    def admitted(self) -> List[Request]:
+        """Requests NOT rejected by admission control (shedding). Shed
+        requests get an explicit rejection, so they are not tail events for
+        the clients the system chose to serve — the admitted-view metrics
+        are what the overload panel of fig26 gates."""
+        return [r for r in self.requests if not r.shed]
+
+    @property
+    def admitted_attainment(self) -> float:
+        adm = self.admitted
+        met = sum(1 for r in adm if r.slo_met)
+        return met / max(len(adm), 1)
+
+    @property
+    def admitted_ttft_p99_norm(self) -> float:
+        return slo_frac_percentile(self.admitted, 99.0, "ttft")
 
     @property
     def imbalance(self) -> float:
@@ -607,7 +687,15 @@ class ClusterSim:
                  hybrid_instances: int = 0,
                  hybrid_token_budget: Optional[int] = None,
                  hybrid_chunk_tokens: Optional[int] = None,
-                 hybrid_decode_offload: bool = False):
+                 hybrid_decode_offload: bool = False,
+                 fault_plan: Optional["FaultPlan"] = None,
+                 recovery: str = "retry",
+                 max_retries: int = 3,
+                 retry_backoff: float = 0.05,
+                 retry_backoff_cap: float = 2.0,
+                 watchdog_s: float = 1.0,
+                 shed_policy: str = "off",
+                 shed_budget: float = 2.0):
         if hardware is not None:
             hardware = [resolve_hardware(hw) for hw in hardware]
             num_instances = len(hardware)
@@ -707,6 +795,32 @@ class ClusterSim:
         # pool (requires one) instead of decoding them locally
         self.hybrid_decode_offload = hybrid_decode_offload \
             and hybrid_instances > 0 and self.num_decode > 0
+        # instance churn (core/faults.py): a FaultPlan schedules per-instance
+        # crash/hang/slowdown/spot/kv_link faults. `recovery="retry"` strands
+        # a dying instance's work back to the dispatch layer and re-dispatches
+        # with capped exponential backoff under a per-request retry budget;
+        # `recovery="none"` is the naive baseline (stranded = lost, +inf tail
+        # events). With `fault_plan=None` (default) every churn branch is
+        # unreachable — committed fig9..fig25 baselines stay byte-equal.
+        if recovery not in ("none", "retry"):
+            raise ValueError(f"unknown recovery mode {recovery!r}; "
+                             f"known: ['none', 'retry']")
+        if shed_policy not in ("off", "doomed-only", "budget"):
+            raise ValueError(
+                f"unknown shed_policy {shed_policy!r}; "
+                f"known: ['off', 'doomed-only', 'budget']")
+        self.fault_plan = fault_plan
+        self.recovery = recovery
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.retry_backoff_cap = retry_backoff_cap
+        self.watchdog_s = watchdog_s
+        # SLO-aware admission control (graceful degradation): "doomed-only"
+        # sheds a fresh arrival when every live instance predicts a TTFT past
+        # its SLO AND the pool is saturated; "budget" sheds when the best
+        # predicted TTFT exceeds shed_budget * slo. Off by default.
+        self.shed_policy = shed_policy
+        self.shed_budget = shed_budget
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
@@ -742,6 +856,113 @@ class ClusterSim:
         reset_requests(requests)
         for r in requests:
             heapq.heappush(heap, (r.arrival, next(seq), ARRIVAL, r))
+
+        # ---------------------------------------------------- instance churn
+        # pool-membership state driven by INSTANCE_DOWN/INSTANCE_UP events.
+        # All sets stay empty with fault_plan=None, so the legacy event loop
+        # is untouched (committed baselines byte-equal).
+        down_p: Set[int] = set()        # dead prefill engines
+        drain_p: Set[int] = set()       # spot notice: no new dispatch
+        frozen_p: Set[int] = set()      # hung: events dropped until killed
+        down_dec: Set[int] = set()      # dead decode instances
+        drain_dec: Set[int] = set()
+        link_down: Set[int] = set()     # kv_link drop: no handoffs land
+        slowed: Dict[int, Tuple[object, float]] = {}  # idx -> (cost, cap)
+        # a kill starts a new engine incarnation: any event the old one
+        # pushed (COMPLETION / PREEMPT_AT, identified by heap seq < the seq
+        # consumed at kill time) is dropped outright. The per-task
+        # running/tid/epoch stale checks are NOT enough across a kill — a
+        # leftover PREEMPT_AT firing post-rejoin clears the NEW task's
+        # pending_preempt flag and lets stale decisions interleave.
+        killed_seq: Dict[int, int] = {}
+        n_retries = n_shed = n_lost = 0
+        prefill_up_times: List[float] = []
+        if self.fault_plan is not None:
+            for ev in self.fault_plan:
+                pool_n = len(engines) if ev.target == "prefill" \
+                    else len(decodes)
+                if ev.instance >= pool_n:
+                    continue             # plan sized for a bigger pool
+                if ev.kind == "slowdown":
+                    heapq.heappush(heap, (ev.time, next(seq), INSTANCE_DOWN,
+                                          ("slow", ev)))
+                    if math.isfinite(ev.duration):
+                        heapq.heappush(heap, (ev.time + ev.duration,
+                                              next(seq), INSTANCE_UP,
+                                              ("unslow", ev)))
+                    continue
+                if ev.kind == "kv_link":
+                    heapq.heappush(heap, (ev.time, next(seq), INSTANCE_DOWN,
+                                          ("link", ev)))
+                    if math.isfinite(ev.duration):
+                        heapq.heappush(heap, (ev.time + ev.duration,
+                                              next(seq), INSTANCE_UP,
+                                              ("unlink", ev)))
+                    continue
+                kill_at = ev.down_at
+                if ev.kind == "spot":
+                    heapq.heappush(heap, (ev.time, next(seq), INSTANCE_DOWN,
+                                          ("drain", ev)))
+                elif ev.kind == "hang":
+                    # undetected until the watchdog deadline: the instance
+                    # keeps accepting dispatch but completes nothing
+                    heapq.heappush(heap, (ev.time, next(seq), INSTANCE_DOWN,
+                                          ("freeze", ev)))
+                    kill_at = ev.time + self.watchdog_s
+                heapq.heappush(heap, (kill_at, next(seq), INSTANCE_DOWN,
+                                      ("kill", ev)))
+                if math.isfinite(ev.duration):
+                    up = max(ev.up_at, kill_at + 1e-9)
+                    heapq.heappush(heap, (up, next(seq), INSTANCE_UP,
+                                          ("up", ev)))
+                    if ev.target == "prefill":
+                        prefill_up_times.append(up)
+        prefill_up_times.sort()
+
+        def recover(victims: Sequence[Request], now: float) -> None:
+            """Stranded work returns to the dispatch layer: progress and KV
+            died with the instance, so the request resets to scratch and
+            re-enters as a delayed ARRIVAL (capped exponential backoff)
+            until its retry budget runs out. recovery="none" is the naive
+            baseline: stranded requests are simply lost (+inf tail)."""
+            nonlocal n_retries, n_lost
+            for r in victims:
+                r.state = RequestState.WAITING
+                r.ops_done = 0
+                r.ops_total = 0
+                r.batch_tokens = r.num_tokens
+                r.prefix_hit = 0
+                r.first_token_time = None
+                r.decode_start = None
+                r.mean_tpot = None
+                if self.recovery == "none":
+                    n_lost += 1
+                    continue
+                r.retries += 1
+                if r.retries > self.max_retries:
+                    r.state = RequestState.DROPPED   # retries exhausted
+                    n_lost += 1
+                    continue
+                n_retries += 1
+                delay = min(self.retry_backoff * (2 ** (r.retries - 1)),
+                            self.retry_backoff_cap)
+                heapq.heappush(heap, (now + delay, next(seq), ARRIVAL, r))
+
+        def strand_engine(e: InstanceEngine) -> List[Request]:
+            """A dying engine's queued + preempted + running requests, with
+            its scheduling state cleared (leftover heap events go stale via
+            the existing running/tid/epoch checks)."""
+            victims: List[Request] = list(e.waiting)
+            for t in e.preempted.values():
+                victims.extend(t.requests)
+            if e.running is not None:
+                victims.extend(e.running.requests)
+            e.waiting.clear()
+            e.preempted.clear()
+            e.running = None
+            e.pending_preempt = None
+            return victims
+
         # load-oblivious policies (round-robin) skip snapshot building
         idle_loads = [InstanceLoad(instance_id=e.instance_id,
                                    capacity=e.capacity)
@@ -798,6 +1019,9 @@ class ClusterSim:
                 transfer_time=src.cost.kv_transfer_time,
                 knee=self.migration_knee, max_migrations=self.max_migrations)
             for rid, dst_id, xfer in plan:
+                if dst_id in down_dec or dst_id in drain_dec \
+                        or dst_id in link_down:
+                    continue             # planner is churn-blind: veto here
                 job = src.pop_waiting(rid)
                 job.request.decode_migrations += 1
                 fl = in_flight.setdefault(dst_id, [0, 0.0])
@@ -810,7 +1034,11 @@ class ClusterSim:
         if self.hybrid_decode_offload and decodes:
             def hybrid_offload(r: Request, t: float) -> None:
                 nonlocal n_migrations
-                dec = min(decodes, key=lambda d: (d.backlog, d.instance_id))
+                live = [d for d in decodes
+                        if d.instance_id not in down_dec
+                        and d.instance_id not in drain_dec
+                        and d.instance_id not in link_down] or decodes
+                dec = min(live, key=lambda d: (d.backlog, d.instance_id))
                 dec.join(r, t)
                 if self.decode_migration:
                     n_migrations += migrate_from(dec, t)
@@ -819,10 +1047,12 @@ class ClusterSim:
 
         now = 0.0
         while heap:
-            now, _, kind, payload = heapq.heappop(heap)
+            now, sq, kind, payload = heapq.heappop(heap)
             if kind == ARRIVAL:
                 req: Request = payload
-                if self.policy.needs_loads:
+                # admission control needs a real backlog view even under
+                # load-oblivious dispatch (round-robin)
+                if self.policy.needs_loads or self.shed_policy != "off":
                     loads = [e.snapshot_load(req, now) for e in engines]
                 else:
                     loads = idle_loads
@@ -905,6 +1135,47 @@ class ClusterSim:
                             prefix_hit_cold=colds[i],
                             promote_time=promos[i])
                             for i, ld in enumerate(loads)]
+                excluded = down_p | drain_p
+                if excluded:
+                    # dispatch never routes to a known-down or draining
+                    # instance. A HUNG one still receives work until the
+                    # watchdog flags it (hangs are undetected by design —
+                    # that is what makes them worse than crashes). NOTE: the
+                    # per-instance arrays above (hits/colds/promos) stay
+                    # indexed by instance_id, and every policy returns
+                    # ld.instance_id, so filtering the load list is enough.
+                    loads = [ld for ld in loads
+                             if ld.instance_id not in excluded]
+                    if not loads:
+                        # whole pool down: park until the next rejoin, or
+                        # lose the request if nothing ever comes back
+                        t_up = next((t for t in prefill_up_times
+                                     if t > now + 1e-12), None)
+                        if t_up is None:
+                            req.state = RequestState.DROPPED
+                            n_lost += 1
+                        else:
+                            heapq.heappush(heap, (t_up, next(seq),
+                                                  ARRIVAL, req))
+                        continue
+                if self.shed_policy != "off" and req.retries == 0:
+                    # SLO-aware admission control: shed a doomed fresh
+                    # arrival with an explicit rejection instead of letting
+                    # it queue, miss, and poison the p99 tail. Retried
+                    # (stranded-then-recovered) requests are never shed —
+                    # the no-request-lost invariant outranks the tail.
+                    best = min(predicted_ttft(req, ld, self.predictor)
+                               for ld in loads)
+                    if self.shed_policy == "doomed-only":
+                        doomed = best > req.slo and \
+                            all(ld.n_outstanding > 0 for ld in loads)
+                    else:                                       # "budget"
+                        doomed = best > self.shed_budget * req.slo
+                    if doomed:
+                        req.state = RequestState.DROPPED
+                        req.shed = True
+                        n_shed += 1
+                        continue
                 idx = self.policy.select(req, loads, now)
                 if self.tiered:
                     m = mgrs[idx]
@@ -962,16 +1233,105 @@ class ClusterSim:
                 fl = in_flight[dec.instance_id]
                 fl[0] -= 1
                 fl[1] -= job.context
-                dec.migrate_in(job, now)
+                if dec.instance_id in down_dec \
+                        or dec.instance_id in link_down:
+                    # the KV transfer failed mid-flight (dead destination or
+                    # dropped kv_link): retry the handoff into a live
+                    # instance, else full recovery (re-prefill from scratch)
+                    alts = [d for d in decodes
+                            if d.instance_id not in down_dec
+                            and d.instance_id not in link_down
+                            and d.instance_id != dec.instance_id]
+                    if alts and self.recovery != "none":
+                        alt = min(alts, key=lambda d: (d.backlog,
+                                                       d.instance_id))
+                        n_retries += 1
+                        xfer = alt.cost.kv_transfer_time(job.context)
+                        fl2 = in_flight.setdefault(alt.instance_id,
+                                                   [0, 0.0])
+                        fl2[0] += 1
+                        fl2[1] += job.context
+                        heapq.heappush(heap, (now + xfer, next(seq),
+                                              DECODE_JOIN, (alt, job)))
+                    else:
+                        recover([job.request], now)
+                else:
+                    dec.migrate_in(job, now)
             elif kind == HYBRID_STEP:
                 payload[0].on_step(payload, now)
             elif kind == PROMOTE_DONE:
                 # the cold prefix finished copying up — the request enters
                 # its instance now, so its TTFT includes the promotion
                 target, r = payload
-                target.on_arrival(r, now)
+                if isinstance(target, InstanceEngine) \
+                        and target.instance_id in down_p:
+                    recover([r], now)   # destination died mid-promotion
+                else:
+                    target.on_arrival(r, now)
+            elif kind == INSTANCE_DOWN:
+                phase, ev = payload
+                i = ev.instance
+                if ev.target == "prefill":
+                    if phase == "drain":
+                        drain_p.add(i)
+                    elif phase == "freeze":
+                        frozen_p.add(i)
+                    elif phase == "slow":
+                        e = engines[i]
+                        slowed[i] = (e.cost, e.capacity)
+                        e.cost = _SlowedCost(e.cost, ev.factor)
+                        e.capacity = e.capacity / ev.factor
+                    else:                                   # kill
+                        down_p.add(i)
+                        drain_p.discard(i)
+                        frozen_p.discard(i)
+                        killed_seq[i] = next(seq)   # new incarnation
+                        victims = strand_engine(engines[i])
+                        if mgrs is not None:
+                            # the instance's memory died with it — HBM
+                            # prefix cache, host/disk staging tiers, and
+                            # every arrival-time pin. Chains committed on
+                            # OTHER instances survive, so re-dispatched
+                            # requests can still resume from their caches.
+                            mgrs[i] = TieredBlockManager(
+                                self.prefix_cache_blocks,
+                                host_blocks=self.host_cache_blocks,
+                                disk_blocks=self.disk_cache_blocks) \
+                                if self.tiered else \
+                                PrefixBlockManager(self.prefix_cache_blocks)
+                        recover(victims, now)
+                else:
+                    if phase == "drain":
+                        drain_dec.add(i)
+                    elif phase == "freeze":
+                        decodes[i].freeze(now)
+                    elif phase == "link":
+                        link_down.add(i)
+                    elif phase == "slow":
+                        pass          # decode slowdown not modeled
+                    else:                                   # kill
+                        down_dec.add(i)
+                        drain_dec.discard(i)
+                        recover(decodes[i].strand(now), now)
+            elif kind == INSTANCE_UP:
+                phase, ev = payload
+                i = ev.instance
+                if phase == "unslow":
+                    if i in slowed:
+                        engines[i].cost, engines[i].capacity = slowed.pop(i)
+                elif phase == "unlink":
+                    link_down.discard(i)
+                elif ev.target == "prefill":
+                    down_p.discard(i)   # rejoins empty (cleared at kill)
+                else:
+                    down_dec.discard(i)
+                    decodes[i].thaw(now)
             else:
                 engine: InstanceEngine = payload[0]
+                if engine.instance_id in frozen_p:
+                    continue            # hung: no progress until the kill
+                if sq < killed_seq.get(engine.instance_id, -1):
+                    continue            # pushed by a dead incarnation
                 for r in handle_event(kind, payload, now):
                     if mgrs is not None:
                         # completion: the prompt's KV now exists on this
@@ -988,9 +1348,36 @@ class ClusterSim:
                             # streams (resident + queued)
                             dec = min(decodes, key=lambda d: (d.backlog,
                                                               d.instance_id))
+                        no_join = down_dec | drain_dec | link_down
+                        if dec.instance_id in no_join:
+                            # affinity/least-backlog chose an unreachable
+                            # decode: fall to the least-loaded live one, or
+                            # full recovery when the decode pool is gone
+                            live = [d for d in decodes
+                                    if d.instance_id not in no_join]
+                            if not live:
+                                recover([r], now)
+                                continue
+                            dec = min(live, key=lambda d: (d.backlog,
+                                                           d.instance_id))
                         dec.join(r, now)
                         if self.decode_migration:
                             n_migrations += migrate_from(dec, now)
+                if self.fault_plan is not None \
+                        and engine.running is None \
+                        and engine.pending_preempt is None \
+                        and (engine.waiting or engine.preempted):
+                    # un-wedge a latent engine tail race that churn exposes:
+                    # a cooperative preempt scheduled at the task's FINAL
+                    # boundary ties with its completion; completion pops
+                    # first, and its _round early-returns (pending_preempt
+                    # still set); the now-stale PREEMPT_AT clears the flag
+                    # but never re-rounds — idle engine, queued work, no
+                    # future events. Fault-free traces always rescue it with
+                    # a later arrival (committed baselines stay byte-equal
+                    # behind the fault_plan gate); churn's backoff-delayed
+                    # tail can leave it terminal, so kick the round here.
+                    engine._round(now)
 
         return ClusterResult(
             requests=list(requests),
@@ -1011,6 +1398,9 @@ class ClusterSim:
             prefix_promoted_tokens=n_promoted,
             tier_demotions=sum(getattr(m, "demotions", 0)
                                for m in mgrs) if mgrs else 0,
+            retries=n_retries,
+            shed_requests=n_shed,
+            lost_requests=n_lost,
         )
 
 
@@ -1036,6 +1426,14 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      hybrid_token_budget: Optional[int] = None,
                      hybrid_chunk_tokens: Optional[int] = None,
                      hybrid_decode_offload: bool = False,
+                     fault_plan: Optional[FaultPlan] = None,
+                     recovery: str = "retry",
+                     max_retries: int = 3,
+                     retry_backoff: float = 0.05,
+                     retry_backoff_cap: float = 2.0,
+                     watchdog_s: float = 1.0,
+                     shed_policy: str = "off",
+                     shed_budget: float = 2.0,
                      **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
     presets, same fresh-copy semantics, plus instance count, dispatch,
@@ -1076,5 +1474,13 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      hybrid_instances=hybrid_instances,
                      hybrid_token_budget=hybrid_token_budget,
                      hybrid_chunk_tokens=hybrid_chunk_tokens,
-                     hybrid_decode_offload=hybrid_decode_offload)
+                     hybrid_decode_offload=hybrid_decode_offload,
+                     fault_plan=fault_plan,
+                     recovery=recovery,
+                     max_retries=max_retries,
+                     retry_backoff=retry_backoff,
+                     retry_backoff_cap=retry_backoff_cap,
+                     watchdog_s=watchdog_s,
+                     shed_policy=shed_policy,
+                     shed_budget=shed_budget)
     return sim.run([copy.copy(r) for r in requests])

@@ -375,6 +375,8 @@ def reset_requests(requests: Sequence[Request]) -> None:
         r.decode_start = None
         r.decode_migrations = 0
         r.decode_preemptions = 0
+        r.retries = 0
+        r.shed = False
 
 
 class PrefillSim:

@@ -2,7 +2,8 @@
 batching budget/deadline safety, predictor monotonicity-ish sanity, paged KV
 cache allocator conservation (plain AND refcounted prefix-sharing modes),
 tiered-cache conservation (HBM/host/disk residency + in-flight promotions),
-and goodput-metric monotonicity."""
+cluster-churn exactly-once accounting under random fault interleavings, and
+goodput-metric monotonicity."""
 import numpy as np
 import pytest
 
@@ -10,6 +11,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from test_faults import run_sim_fault_case  # noqa: E402
 from test_tiered_kv import run_tier_property_case  # noqa: E402
 
 from repro.core import Request, SchedulerCore, TTFTPredictor, max_goodput
@@ -231,6 +233,22 @@ def test_tiered_manager_conservation(seed):
     hypothesis is unavailable) so hypothesis explores the same invariants
     with free rein over the seed space."""
     run_tier_property_case(np.random.default_rng(seed))
+
+
+# --- cluster churn / fault recovery ------------------------------------------
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_cluster_fault_interleavings_exactly_once(seed):
+    """Random fault interleavings (crash/hang/slowdown/spot/kv_link over
+    random instants, instances, and outage lengths) against random traces:
+    every request reaches EXACTLY one terminal state, counters conserve
+    (served + lost + shed == submitted), losses only past the retry budget,
+    and the run always terminates. Delegates to the scenario shared with
+    tests/test_faults.py (which drives it through fixed seeds when
+    hypothesis is unavailable, and mirrors the same invariants against the
+    threaded runtime)."""
+    run_sim_fault_case(np.random.default_rng(seed))
 
 
 # --- goodput metric -------------------------------------------------------------
