@@ -46,8 +46,11 @@ import sys
 from typing import Dict, List, Tuple
 
 # substrings of metric names that are gated, higher is better ("speedup"
-# covers the fig21/fig22 measured wall-clock curves, "hit_rate" the fig22
-# prefix-cache residency outcomes)
+# covers the fig21/fig22 measured wall-clock curves and the fig27
+# speculative-decoding accept-regime family — high_accept_vs_plain_speedup /
+# low_accept_vs_plain_speedup / sim_tpot_spec_vs_plain_speedup all match
+# "_vs_"+"speedup", sim_tbt_attainment_* matches "attainment"; "hit_rate"
+# the fig22 prefix-cache residency outcomes)
 GATED = ("goodput", "attainment", "_vs_", "share", "speedup", "hit_rate")
 # substrings of metric names that are gated, LOWER is better: error families,
 # the p99 tail family (SLO-normalized tail latencies), and `lost_requests`

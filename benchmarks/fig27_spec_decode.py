@@ -1,0 +1,227 @@
+"""Fig. 27 (speculative-decoding extension) — tokens/s and TBT attainment of
+speculative decoding inside the batched ragged decode runtime, across accept
+regimes.
+
+The runtime drafts per resident stream, scores all k+1 positions of every row
+in ONE batched `decode_verify_ragged` pass, and commits the longest
+greedy-matching prefix — output is bit-identical to plain greedy decoding
+(pinned by tests/test_spec_decode.py), so the ONLY question this figure
+answers is throughput: how much faster per accepted token, and what the
+overhead costs when drafts never hit.
+
+Panels (real runtime, tiny llama3-8b derivative on CPU — the serving tests'
+config):
+
+  a) high-accept regime: an ORACLE drafter (drafts the stream's known greedy
+     continuation from a reference replay) makes every draft position accept,
+     so each verify step commits k+1 tokens. The tiny seeded model greedy-
+     decodes pseudorandom token sequences, so the natural n-gram drafter has
+     nothing to match — the oracle isolates the runtime's ceiling at accept
+     rate ~1 exactly like a well-matched draft corpus would on real text.
+     Gated: tokens/s >= 1.5x plain decode.
+  b) adversarial low-accept regime: every draft token is chosen to MISS, the
+     worst case for speculation. The per-stream accept-rate EMA throttles
+     drafting (probe 1-in-spec_probe_period steps), and an all-rows-empty
+     draft step delegates to the plain batched step — so the cost of being
+     wrong is bounded. Gated: tokens/s >= 0.9x plain (no-regression floor).
+  c) cluster sim (deterministic, seeded): `ClusterSim` advances decode
+     streams from the SAME analytic accept surface the runtime's EMA
+     converges to (`expected_accept_tokens`), so TBT attainment and mean
+     TPOT under load are gated exactly — the evaluated policy is the
+     deployed one.
+
+Wall-clock-derived metric convention (docs/BENCHMARKS.md): the committed
+speedup baselines are CONSERVATIVE floors pre-compensated for the gate's
+tolerance, not one machine's measurements; the sim rows are deterministic
+and committed exactly.
+"""
+import dataclasses
+import time
+
+DRAFT_K = 4
+OUT_TOKENS = 48
+PROMPTS = (32, 48, 80, 100)      # measured streams (one batch of 4)
+MAX_SEQ = 256
+SIM_ACCEPT = 0.8                 # panel c's accept surface
+
+
+def _bench_model():
+    import jax
+
+    from repro.configs.base import get_tiny_config
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_tiny_config("llama3_8b"),
+                              num_layers=2, d_model=128, d_ff=256)
+    return init_params(cfg, jax.random.PRNGKey(0)), cfg
+
+
+def _handoff(params, cfg, n, seed):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.model import prefill
+
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, n)), jnp.int32)
+    logits, cache = prefill(params, cfg, {"tokens": toks}, max_seq=MAX_SEQ)
+    return int(jnp.argmax(logits, -1)[0]), \
+        {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+
+
+def _replay(params, cfg, first, cache, n_tokens):
+    import jax.numpy as jnp
+
+    from repro.models.model import decode_step
+
+    tok = jnp.asarray([first], jnp.int32)
+    c = dict(cache)
+    out = []
+    for _ in range(n_tokens):
+        logits, c = decode_step(params, cfg, tok, c)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+def _decode_run(params, cfg, streams, *, spec, draft_fn=None):
+    """Decode every stream twice on one instance — an unmeasured warmup pass
+    that compiles every bucketed shape the run touches, then the timed pass.
+    Returns (elapsed_s, instance, jobs)."""
+    from repro.core.request import Request
+    from repro.serving.decode_instance import DecodeInstance, DecodeJob
+
+    def jobs_of(ss):
+        out = []
+        for first, cache in ss:
+            req = Request(num_tokens=int(cache["pos"]), slo=100.0,
+                          arrival=0.0, output_tokens=OUT_TOKENS,
+                          tbt_slo=100.0)
+            out.append(DecodeJob(request=req, cache=dict(cache),
+                                 first_token=first))
+        return out
+
+    inst = DecodeInstance(params, cfg, decode_tokens=OUT_TOKENS,
+                          decode_max_batch=len(streams), kv_block_size=64,
+                          spec_decode=spec, draft_k=DRAFT_K,
+                          draft_fn=draft_fn)
+    try:
+        warm = jobs_of(streams)
+        for j in warm:
+            inst.submit(j)
+        if not inst.drain(300.0):
+            raise RuntimeError("warmup drain timed out")
+        jobs = jobs_of(streams)
+        t0 = time.monotonic()
+        for j in jobs:
+            inst.submit(j)
+        if not inst.drain(300.0):
+            raise RuntimeError("measured drain timed out")
+        elapsed = time.monotonic() - t0
+    finally:
+        inst.shutdown()
+    return elapsed, inst, jobs
+
+
+def run(model="llama3-8b"):
+    params, cfg = _bench_model()
+    streams = [_handoff(params, cfg, n, seed=200 + i)
+               for i, n in enumerate(PROMPTS)]
+    # reference greedy continuations: the oracle drafter's corpus AND the
+    # bit-parity check below (+DRAFT_K so the final step can draft fully)
+    seqs = [_replay(params, cfg, f, c, OUT_TOKENS + DRAFT_K)
+            for f, c in streams]
+    # draft_fn receives (rid, history, k); history[0] is the prefill's
+    # argmax token, so (first_token, generated prefix) must be a prefix of
+    # the reference [first] + seq chain — match streams by first token
+    # (distinct across the 4 prompts by construction of the seeds)
+    by_first = {f: s for (f, _), s in zip(streams, seqs)}
+    assert len(by_first) == len(streams), "first tokens must be distinct"
+
+    def oracle(rid, history, k):
+        seq = by_first[history[0]]
+        done = len(history) - 1          # generated so far (past first)
+        return seq[done:done + k]
+
+    def adversarial(rid, history, k):
+        seq = by_first[history[0]]
+        done = len(history) - 1
+        # one token guaranteed != the true greedy continuation: the first
+        # draft position always rejects, accept rate is exactly 0
+        return [(seq[done] + 1) % cfg.vocab_size] if done < len(seq) else []
+
+    t_plain, _, _ = _decode_run(params, cfg, streams, spec=False)
+    t_hi, inst_hi, jobs_hi = _decode_run(params, cfg, streams, spec=True,
+                                         draft_fn=oracle)
+    t_lo, inst_lo, _ = _decode_run(params, cfg, streams, spec=True,
+                                   draft_fn=adversarial)
+
+    # bit-parity sanity (the pinned test is authoritative; this catches a
+    # broken bench harness before it publishes a meaningless speedup)
+    for j, (f, _) in zip(jobs_hi, streams):
+        want = by_first[f][OUT_TOKENS - 1]
+        if j.next_token != want:
+            raise RuntimeError(f"spec decode diverged: {j.next_token} != "
+                               f"{want} (rid {j.request.rid})")
+
+    total = len(streams) * OUT_TOKENS
+    rows = []
+    for label, t in (("plain", t_plain), ("high_accept", t_hi),
+                     ("low_accept", t_lo)):
+        rows.append((f"fig27/{model}/tokens_per_s_{label}",
+                     round(total / t, 1),
+                     f"{total} tokens in {t * 1e3:.0f} ms (measured, "
+                     f"runner-speed dependent — not gated)"))
+    hi_accept = inst_hi.draft_accepted / max(inst_hi.draft_proposed, 1)
+    rows.append((f"fig27/{model}/high_accept_vs_plain_speedup",
+                 round(t_plain / t_hi, 2),
+                 f"oracle drafter (accept rate {hi_accept:.2f}, "
+                 f"{len(inst_hi.tbt_samples) / max(inst_hi.row_steps, 1):.2f}"
+                 f" tokens/step): one k+1-wide verify pass replaces up to "
+                 f"k+1 plain steps (acceptance: >= 1.5; committed baseline "
+                 f"is the tolerance-compensated conservative threshold)"))
+    rows.append((f"fig27/{model}/low_accept_vs_plain_speedup",
+                 round(t_plain / t_lo, 2),
+                 f"adversarial drafter (accept rate 0, {inst_lo.spec_steps} "
+                 f"of {inst_lo.steps} steps verify-shaped after EMA "
+                 f"throttling): speculation overhead must stay within the "
+                 f"0.9x no-regression floor"))
+
+    rows.extend(_sim_rows(model))
+    return rows
+
+
+def _sim_rows(model):
+    """Panel c: deterministic cluster-sim TBT outcomes under load, spec off
+    vs on — the accept surface the scheduler prices (S-EDF slack, migration,
+    hybrid budgets) is the one the fluid model advances by."""
+    from repro.sim.cluster import simulate_cluster
+    from repro.traces.qwentrace import TraceConfig, generate
+
+    reqs = generate(TraceConfig(rate=10.0, duration=30.0, seed=2,
+                                output_mean=200.0, tbt_slo=0.02))
+    kw = dict(num_instances=2, decode_instances=2, decode_max_batch=8,
+              decode_policy="s-edf")
+    plain = simulate_cluster("flowprefill", reqs, **kw)
+    spec = simulate_cluster("flowprefill", reqs, spec_decode=True,
+                            draft_k=DRAFT_K, spec_accept=SIM_ACCEPT, **kw)
+
+    def mean_tpot(res):
+        ts = [r.mean_tpot for r in res.requests if r.mean_tpot is not None]
+        return sum(ts) / max(len(ts), 1)
+
+    return [
+        (f"fig27/{model}/sim_tbt_attainment_plain",
+         round(plain.tbt_attainment, 4),
+         "decode-stage TBT-SLO attainment, spec off (deterministic seeded "
+         "sim — gated exactly)"),
+        (f"fig27/{model}/sim_tbt_attainment_spec",
+         round(spec.tbt_attainment, 4),
+         f"TBT-SLO attainment with spec_decode on (accept {SIM_ACCEPT}, "
+         f"k={DRAFT_K}): multi-token steps lift the loaded decode stage "
+         f"(deterministic — gated exactly)"),
+        (f"fig27/{model}/sim_tpot_spec_vs_plain_speedup",
+         round(mean_tpot(plain) / max(mean_tpot(spec), 1e-12), 3),
+         "mean-TPOT ratio plain/spec under identical load (deterministic "
+         "— gated exactly)"),
+    ]

@@ -17,7 +17,7 @@ from benchmarks import (fig3_chunk_tradeoff, fig4_batching, fig9_goodput,
                         fig18_cluster, fig19_hetero, fig20_decode,
                         fig21_decode_batching, fig22_prefix_cache,
                         fig23_scenarios, fig24_colocation, fig25_tiered_kv,
-                        fig26_churn, roofline)
+                        fig26_churn, fig27_spec_decode, roofline)
 
 MODULES = [
     ("fig3", fig3_chunk_tradeoff),
@@ -40,6 +40,7 @@ MODULES = [
     ("fig24", fig24_colocation),
     ("fig25", fig25_tiered_kv),
     ("fig26", fig26_churn),
+    ("fig27", fig27_spec_decode),
     ("roofline", roofline),
 ]
 

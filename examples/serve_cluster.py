@@ -69,8 +69,10 @@ def run_sim(args):
     hardware = args.hetero.split(",") if args.hetero else None
     n = len(hardware) if hardware else args.instances
     pool = " hetero[" + args.hetero + "]" if hardware else ""
+    spec = f", spec-decode k={args.draft_k} accept={args.spec_accept}" \
+        if args.spec_decode else ""
     print(f"== ClusterSim: {n} prefill + {n} decode instances{pool}, "
-          f"rate={args.rate} req/s, burstiness={args.burstiness} ==")
+          f"rate={args.rate} req/s, burstiness={args.burstiness}{spec} ==")
     plan = _chaos_plan(args, n)
     if args.scenario:
         # scenario traces bring their own fitted output/TBT/prefix shape;
@@ -108,7 +110,10 @@ def run_sim(args):
                                prefix_cache_blocks=cache_blocks,
                                fault_plan=plan, recovery=args.recovery,
                                shed_policy=args.shed_policy,
-                               shed_budget=args.shed_budget)
+                               shed_budget=args.shed_budget,
+                               spec_decode=args.spec_decode,
+                               draft_k=args.draft_k,
+                               spec_accept=args.spec_accept)
         faults = f" {res.retries:5d} {res.shed_requests:4d} " \
                  f"{res.lost_requests:4d}" if fault_cols else ""
         print(f"{policy:>17s} | {res.attainment:8.3f} "
@@ -168,9 +173,15 @@ def run_real(args):
     # (the REAL batched jitted step, paged KV), --decode-migration needs
     # >= 2 decode instances
     n_dec = 2 if args.decode_migration else 1
+    # --spec-decode: the REAL speculative path (self-drafting n-gram drafter
+    # + one batched k+1-position verify pass per step, bit-identical greedy
+    # output); longer outputs give the drafter history to match against
+    out_tokens = 16 if args.spec_decode else 2
     decs = [DecodeInstance(params, cfg, decode_tokens=2,
                            policy=args.decode_sched,
-                           decode_max_batch=max(args.decode_max_batch, 1))
+                           decode_max_batch=max(args.decode_max_batch, 1),
+                           spec_decode=args.spec_decode,
+                           draft_k=args.draft_k)
             for _ in range(n_dec)]
     # wire the hetero-pool signals so capacity-weighted / decode-aware run
     # against real measurements, not silent 1.0/0.0 defaults: capacity from
@@ -254,8 +265,8 @@ def run_real(args):
                 n = min(src.num_tokens, max_seq)
                 req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
                               arrival=time.monotonic(),
-                              task_type=src.task_type, output_tokens=2,
-                              tbt_slo=2.0,
+                              task_type=src.task_type,
+                              output_tokens=out_tokens, tbt_slo=2.0,
                               prefix_hash=(src.prefix_hash or ())[:n // 128])
                 proxy.submit(req, scenario_tokens(src, n))
                 gap, prev_arrival = src.arrival - prev_arrival, src.arrival
@@ -263,8 +274,8 @@ def run_real(args):
             else:
                 n = int(rng.choice([256, 256, 1024, 2048]))
                 req = Request(num_tokens=n, slo=5.0 if n <= 256 else 30.0,
-                              arrival=time.monotonic(), output_tokens=2,
-                              tbt_slo=2.0)
+                              arrival=time.monotonic(),
+                              output_tokens=out_tokens, tbt_slo=2.0)
                 proxy.submit(req, rng.integers(0, cfg.vocab_size, n))
                 time.sleep(float(rng.exponential(0.15)))
             for e in chaos_by_i.pop(i, ()):
@@ -286,6 +297,13 @@ def run_real(args):
         print(f"  decoded={sum(len(d.finished) for d in decs)} "
               f"decode_migrations={rep['decode_migrations']} "
               f"decode_preemptions={rep['decode_preemptions']}")
+        if args.spec_decode:
+            sp = rep["spec"]
+            print(f"  spec: steps={sp['spec_steps']} "
+                  f"accept={sp['accept_rate']:.2f} "
+                  f"tokens/step={sp['tokens_per_step']:.2f} "
+                  f"(drafted {sp['draft_proposed']}, "
+                  f"accepted {sp['draft_accepted']})")
         if plan is not None or args.shed_policy != "off":
             served = rep["n_requests"] - rep["lost_requests"] \
                 - rep["shed_requests"]
@@ -330,6 +348,16 @@ def main():
                     "unbounded processor sharing (scheduling needs a cap to "
                     "matter). Real mode: the continuous-batching slot count "
                     "of the batched jitted decode step (min 1)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding. Sim mode: fluid multi-token "
+                    "advancement at --spec-accept per-token acceptance; "
+                    "--real: the actual self-drafting n-gram drafter + "
+                    "batched verify pass (bit-identical greedy output)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per speculative step")
+    ap.add_argument("--spec-accept", type=float, default=0.7,
+                    help="sim mode: per-token draft accept probability "
+                    "(--real measures the real n-gram accept rate instead)")
     ap.add_argument("--decode-migration", action="store_true",
                     help="cost-gated migration of queued decodes off "
                     "instances past the TBT knee")

@@ -35,6 +35,25 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def expected_accept_tokens(accept_rate: float, draft_k: int) -> float:
+    """Analytic E[tokens/step] of greedy draft-then-verify with per-token
+    accept probability ``a`` and draft length ``k``: the step commits the
+    current token plus the longest accepted draft prefix, so
+
+        E = 1 + a + a^2 + ... + a^k = (1 - a^{k+1}) / (1 - a)
+
+    This is the shared accept-rate surface: `DecodeSim` advances streams by
+    it, trace generators stamp per-task accept rates with it in mind, and
+    the runtime's EMA estimate converges to it — evaluated-is-deployed."""
+    a = min(max(float(accept_rate), 0.0), 1.0)
+    k = max(int(draft_k), 0)
+    if k == 0:
+        return 1.0
+    if a >= 1.0:
+        return float(k + 1)
+    return float((1.0 - a ** (k + 1)) / (1.0 - a))
+
+
 @dataclass
 class TTFTPredictor:
     coeffs: np.ndarray                   # np.polyval order (highest first)
@@ -254,6 +273,16 @@ class DecodeStepPredictor:
     scale: float = 1.0
     n_observed: int = 0
 
+    # --- speculative-decoding accept-rate surface --------------------------
+    # Under speculation a stream commits 1..k+1 tokens per step, so the
+    # honest per-ACCEPTED-token service time is step_time / E[tokens/step].
+    # Both an aggregate and a per-stream EMA of observed tokens/step are
+    # kept: S-EDF slack and migration gating price a specific stream (its
+    # own accept behaviour), while batch-level budgets use the aggregate.
+    accept_alpha: float = 0.25           # EMA weight for tokens/step updates
+    _tps_all: float = field(default=0.0, repr=False, compare=False)
+    _tps_by_key: dict = field(default_factory=dict, repr=False, compare=False)
+
     @classmethod
     def from_profile(cls, samples: Sequence[Tuple[int, float, float]],
                      **kwargs) -> "DecodeStepPredictor":
@@ -275,3 +304,31 @@ class DecodeStepPredictor:
         ratio = measured / base
         self.scale += self.ema_alpha * (ratio - self.scale)
         self.n_observed += 1
+
+    def observe_accept(self, key: int, tokens_committed: float) -> None:
+        """Feed the number of tokens one decode step committed for stream
+        ``key`` (1 = draft fully rejected or no draft; k+1 = fully
+        accepted). Updates the per-stream and aggregate tokens/step EMAs."""
+        t = float(tokens_committed)
+        if t < 1.0:
+            return
+        prev = self._tps_by_key.get(key)
+        self._tps_by_key[key] = t if prev is None \
+            else prev + self.accept_alpha * (t - prev)
+        self._tps_all = t if self._tps_all <= 0.0 \
+            else self._tps_all + self.accept_alpha * (t - self._tps_all)
+
+    def expected_tokens_per_step(self, key: Optional[int] = None) -> float:
+        """E[tokens committed per decode step] — per-stream EMA when `key`
+        has been observed, else the aggregate; 1.0 (plain decoding) before
+        any observation. Never below 1.0: a step always commits the current
+        token."""
+        if key is not None:
+            v = self._tps_by_key.get(key)
+            if v is not None:
+                return max(v, 1.0)
+        return max(self._tps_all, 1.0) if self._tps_all > 0.0 else 1.0
+
+    def forget_stream(self, key: int) -> None:
+        """Drop a finished/migrated stream's accept-rate state."""
+        self._tps_by_key.pop(key, None)

@@ -52,6 +52,10 @@ class Request:
     decode_start: Optional[float] = None  # first decode admission/enqueue time
     decode_migrations: int = 0           # times this decode moved instances
     decode_preemptions: int = 0          # times this decode was displaced
+    # speculative decoding (sim): per-token draft accept probability for this
+    # stream's fluid accept surface (repro.core.predictor
+    # .expected_accept_tokens). 0.0 = drafts never accepted (plain-rate).
+    spec_accept: float = 0.0
 
     # fault recovery (instance churn): times this request was stranded by a
     # failing instance and re-dispatched (KV lost -> recompute); the retry

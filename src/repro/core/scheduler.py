@@ -458,19 +458,26 @@ class HybridSchedulerCore:
                   prefill_done: Mapping[int, int],
                   decode_entries: Sequence[DecodeEntry],
                   decode_resident: Set[int],
-                  t_step: float = 0.0) -> HybridStepPlan:
+                  t_step: float = 0.0,
+                  decode_cost: float = 1.0) -> HybridStepPlan:
         """Plan one hybrid step. ``prefill`` are the waiting/partial prefill
         requests; ``prefill_done[rid]`` is how many prompt tokens of each are
         already computed (the resume offset). ``decode_entries`` covers
         resident AND queued decode streams; ``decode_resident`` the current
         slot holders; ``t_step`` the predicted per-token decode latency the
-        decode S-EDF ranks with."""
+        decode S-EDF ranks with. ``decode_cost`` is E[tokens a decode stream
+        commits this step] (speculative decoding's accept-rate surface;
+        1.0 = plain): each admitted stream consumes that many budget tokens,
+        so prefill admission prices the decode side's REAL device work — a
+        fully-accepting draft pipeline eats k+1 budget tokens per stream,
+        exactly the extra positions its verify pass scores."""
         plan = HybridStepPlan()
         budget = self.token_budget if self.token_budget > 0 else 0
+        cost = max(float(decode_cost), 1.0)
         if decode_entries:
             plan.decode_keys, plan.preempted_decode = self._select_decode(
                 decode_entries, decode_resident, now, t_step)
-        used = len(plan.decode_keys)
+        used = len(plan.decode_keys) * cost
         left = (budget - used) if budget else float("inf")
         if prefill and left > 0:
             quantum = self.chunk_tokens
@@ -487,5 +494,5 @@ class HybridSchedulerCore:
                     PrefillSlice(key=req.rid, offset=done, n_tokens=n))
                 used += n
                 left -= n
-        plan.budget_used = used
+        plan.budget_used = int(round(used))
         return plan

@@ -13,9 +13,9 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref as ref_mod
-from repro.kernels.decode_attn import flash_decode_attention
+from repro.kernels.decode_attn import flash_decode_attention, flash_verify_attention
 from repro.kernels.flash_prefill import flash_prefill_attention
-from repro.models.layers import blocked_attention
+from repro.models.layers import blocked_attention, naive_attention
 
 
 def _on_tpu() -> bool:
@@ -64,4 +64,26 @@ def decode_attention(q, k, v, kv_len, *, impl: str | None = None, block_k=512):
         return out[:, 0]
     if impl == "ref":
         return ref_mod.decode_attention_ref(q, k, v, kv_len=kv_len)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def verify_attention(q, k, v, kv_len, *, impl: str | None = None, block_k=512):
+    """Speculative-verify attention: q (B,S,H,hd) holds S consecutive query
+    positions kv_len[b]..kv_len[b]+S-1 per row; k/v (B,T,K,hd) already carry
+    the draft K/V at those positions. Per-row causal masking -> (B,S,H,hd).
+
+    The "xla" path routes through the naive reference rather than
+    `blocked_attention`: the blocked flash mask lacks the per-row
+    q_offset/kv_len broadcast the verify step needs, while
+    `naive_attention` supports (B,)-shaped offsets natively and S is tiny
+    (draft_k + 1), so the quadratic cost is irrelevant.
+    """
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return flash_verify_attention(q, k, v, kv_len, block_k=block_k)
+    if impl == "pallas_interpret":
+        return flash_verify_attention(q, k, v, kv_len, block_k=block_k,
+                                      interpret=True)
+    if impl in ("xla", "ref"):
+        return naive_attention(q, k, v, causal=True, q_offset=kv_len)
     raise ValueError(f"unknown impl {impl!r}")

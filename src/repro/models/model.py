@@ -890,6 +890,72 @@ def decode_step_ragged(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits[:, 0], k_new, v_new
 
 
+def _ragged_verify_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             kv_lens: jax.Array, attn_impl: str) -> jax.Array:
+    """q: (B, S, H, hd) — S consecutive query positions starting at
+    kv_lens[b] per row; k/v: (B, T, K, hd) with the S draft K/V already
+    scattered in. Per-row causal masking: query s of row b attends keys
+    [0, kv_lens[b] + s]."""
+    if attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ops import verify_attention
+        return verify_attention(q, k, v, kv_lens, impl=attn_impl)
+    return L.naive_attention(q, k, v, causal=True, q_offset=kv_lens)
+
+
+def decode_verify_ragged(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                         k_gathered: jax.Array, v_gathered: jax.Array,
+                         kv_lens: jax.Array, *, attn_impl: str = "naive"):
+    """Speculative-verify sibling of `decode_step_ragged`: score S = k + 1
+    consecutive positions per stream in ONE jitted step.
+
+    tokens: (B, S) int32 — row b holds [current token, draft_0 .. draft_{k-1}]
+    (short drafts padded arbitrarily; padded columns simply produce logits the
+    caller never accepts). kv_lens: (B,) — the committed context length of
+    row b, i.e. the position tokens[b, 0] is written at. Returns
+    (logits (B, S, V), k_new (L, B, S, K, hd), v_new (L, B, S, K, hd)).
+
+    Greedy acceptance contract: because column s attends exactly the keys a
+    plain step at position kv_lens[b] + s would see (committed prefix + the
+    s earlier draft keys, masked identically), logits[:, s] is bit-equal to
+    what `decode_step_ragged` would produce after committing those s tokens
+    — so accepting the longest draft prefix matching argmax(logits) yields
+    output bit-identical to plain greedy decoding.
+    """
+    if not supports_ragged_decode(cfg):
+        raise NotImplementedError(
+            f"speculative verify unsupported for family={cfg.family!r} "
+            f"(moe_layer_freq={cfg.moe_layer_freq}); use decode_step")
+    B, S = tokens.shape
+    pos = kv_lens.astype(jnp.int32)
+    rows = jnp.arange(B)
+    h = embed_tokens(cfg, params, tokens)                   # (B, S, D)
+
+    def body(carry, xs):
+        p_l, k_l, v_l = xs                                  # k_l: (B,T,K,hd)
+        y = carry
+        x = L.rms_norm(y, p_l["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, p_l, x)                 # (B, S, ·, hd)
+        rp = pos[:, None] + jnp.arange(S)[None, :]          # (B, S) positions
+        q = L.apply_rope(q, rp, cfg.rope_theta)
+        k = L.apply_rope(k, rp, cfg.rope_theta)
+        # scatter the whole draft span into the gathered views; the causal
+        # per-row mask in the attention below keeps column s blind to the
+        # later draft keys, so rejected positions never leak into accepted
+        # logits. The pool write (and the commit/rollback decision) happens
+        # in the caller.
+        k_full = k_l.at[rows[:, None], rp].set(k.astype(k_l.dtype))
+        v_full = v_l.at[rows[:, None], rp].set(v.astype(v_l.dtype))
+        o = _ragged_verify_attention(q, k_full, v_full, pos, attn_impl)
+        y = y + jnp.einsum("bsq,qd->bsd", o.reshape(B, S, -1), p_l["wo"])
+        y = ffn_block(cfg, p_l, y)
+        return y, (k, v)
+
+    h, (k_new, v_new) = _ctl_scan(
+        body, h, (params["layers"], k_gathered, v_gathered))
+    logits = lm_head(cfg, params, h)
+    return logits, k_new, v_new
+
+
 def _decode_ssm(params, cfg, h, cache):
     B = h.shape[0]
     din, N, nh, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width

@@ -39,6 +39,26 @@ Queued (not yet resident) jobs can be handed to another instance by the Proxy
 (decode migration): `snapshot_load`/`snapshot_candidates` feed the shared
 cost-gated planner in `repro.core.dispatch`, `take` removes the chosen jobs
 (evicted pool-resident streams are gathered back into a dense handoff cache).
+
+SPECULATIVE DECODING (``spec_decode=True``): decode is bandwidth-bound, so
+the jitted step leaves most of the device's compute idle — spend it on a
+draft-then-verify scheme. Each step every resident row proposes up to
+``draft_k`` tokens (default: the self-drafting n-gram drafter
+`_ngram_draft`, suffix-matching the stream's own generated tokens; a custom
+``draft_fn(rid, history, k)`` can be injected), then ONE batched
+`decode_verify_ragged` pass scores all k+1 positions per row. Greedy
+acceptance (longest draft prefix matching the argmax chain) makes the
+output BIT-IDENTICAL to plain greedy decoding — speculation only changes
+how many tokens a step commits (1..k+1, per row). Rejected draft KV is
+rolled back by committed-length truncation (`PagedKVCache.write_token_span`)
+— never readable, never stale. Per-stream accept-rate EMAs
+(`DecodeStepPredictor.observe_accept`) keep S-EDF slack, migration gating
+and hybrid token budgets priced in per-ACCEPTED-token terms, and an
+adaptive throttle drops low-accept streams back to drafting nothing (with a
+periodic re-probe); a step in which no row drafts runs the PLAIN jitted
+step, so the adversarial low-accept regime degrades to ~plain cost
+(benchmarks/fig27_spec_decode.py gates both regimes). ``spec_decode=False``
+(the default) leaves every code path byte-identical to before.
 """
 from __future__ import annotations
 
@@ -56,12 +76,38 @@ from repro.core.predictor import DecodeStepPredictor
 from repro.core.request import Request
 from repro.core.scheduler import DecodeEntry, DecodeSchedulerCore
 from repro.models.model import (decode_step, decode_step_ragged,
-                                supports_ragged_decode)
+                                decode_verify_ragged, supports_ragged_decode)
 from repro.serving.kvcache import PagedKVCache
 
 # sequence id of the pool slot padding rows write into / gather from — never
 # a real request rid (rids are non-negative)
 _SCRATCH_SEQ = -1
+
+# per-stream drafter corpus cap: the n-gram drafter scans this many recent
+# generated tokens (host memory + host-CPU bound, not device state)
+_SPEC_HISTORY_CAP = 512
+
+
+def _ngram_draft(history: Sequence[int], k: int) -> List[int]:
+    """Self-drafting n-gram proposal: find the most recent EARLIER occurrence
+    of the stream's current suffix (3-gram first, then 2-gram) in its own
+    generated tokens and draft the k tokens that followed it. Costs zero
+    model weights and zero device work — repetitive streams (agentic loops,
+    templated output) hit constantly, low-reuse chat simply drafts nothing
+    and the step falls back to plain decoding."""
+    n = len(history)
+    if k <= 0 or n < 3:
+        return []
+    for m in (3, 2):
+        if n < m + 1:
+            continue
+        suffix = tuple(history[-m:])
+        for i in range(n - m - 1, -1, -1):
+            if tuple(history[i:i + m]) == suffix:
+                cont = history[i + m:i + m + k]
+                if cont:
+                    return [int(t) for t in cont]
+    return []
 
 
 @dataclass
@@ -81,6 +127,12 @@ class DecodeJob:
                                     # remaining-work MUST use the same count
     base_len: int = 0               # prompt tokens in the pool (batched path):
                                     # kv position = base_len + tokens_done
+    history: Optional[List[int]] = None   # generated tokens (speculative
+                                    # drafter corpus; None until the stream's
+                                    # first spec step — plain decoding never
+                                    # materializes it)
+    probe_in: int = 0               # steps until a throttled stream re-probes
+                                    # the drafter (spec_decode)
 
 
 class DecodeInstance:
@@ -93,12 +145,22 @@ class DecodeInstance:
                  kv_block_size: int = 128,
                  attn_impl: str = "naive",
                  prefix_share: bool = False,
-                 kv_max_blocks: int = 0):
+                 kv_max_blocks: int = 0,
+                 spec_decode: bool = False,
+                 draft_k: int = 4,
+                 draft_fn: Optional[Callable[
+                     [int, Sequence[int], int], Sequence[int]]] = None,
+                 spec_probe_period: int = 8,
+                 spec_throttle: float = 1.15):
         if decode_max_batch > 1 and not supports_ragged_decode(cfg):
             raise ValueError(
                 f"decode_max_batch={decode_max_batch} needs the batched "
                 f"ragged decode step, unsupported for family "
                 f"{cfg.family!r}; use decode_max_batch=1")
+        if spec_decode and not supports_ragged_decode(cfg):
+            raise ValueError(
+                f"spec_decode needs the batched verify step, unsupported "
+                f"for family {cfg.family!r}")
         self.params = params
         self.cfg = cfg
         self.decode_tokens = decode_tokens
@@ -141,13 +203,39 @@ class DecodeInstance:
         self._order = 0
         self._shutdown = False
         self.finished: List[Request] = []
-        self.tbt_samples: List[float] = []
+        self.tbt_samples: List[float] = []   # per-ACCEPTED-token TBT: a step
+                                             # committing a tokens appends a
+                                             # samples of dt/a (a=1 keeps the
+                                             # plain path's values bit-equal)
+        self.step_samples: List[float] = []  # per-STEP wall latency — the
+                                             # satellite metric that stays
+                                             # meaningful when tokens/step > 1
         self.preemptions = 0
         self.steps = 0                  # batched decode steps executed
+        self.row_steps = 0              # (stream, step) pairs: per-row
+                                        # tokens/step = len(tbt_samples)/this
+        # --- speculative decoding (spec_decode=False leaves all of this
+        # inert: plain paths never read it) ---------------------------------
+        self.spec_decode = spec_decode
+        # drafts must fit the scratch block (span writes at positions
+        # 0..draft_k of the 1-block scratch sequence) and leave room for the
+        # +1 verified token
+        self.draft_k = max(1, min(int(draft_k), kv_block_size - 1))
+        self.draft_fn = draft_fn        # None = self-drafting n-gram drafter
+        self.spec_probe_period = max(int(spec_probe_period), 1)
+        self.spec_throttle = float(spec_throttle)
+        self.spec_steps = 0             # steps that ran the k+1 verify shape
+        self.draft_proposed = 0         # draft tokens sent to verification
+        self.draft_accepted = 0         # draft tokens committed
+        self._accept_tps = 0.0          # aggregate tokens/step EMA fallback
+                                        # (no step_pred attached)
         self._step = jax.jit(
             lambda p, t, c: decode_step(p, cfg, t, c))
         self._step_ragged = jax.jit(
             lambda p, t, kg, vg, kl: decode_step_ragged(
+                p, cfg, t, kg, vg, kl, attn_impl=attn_impl))
+        self._step_verify = jax.jit(
+            lambda p, t, kg, vg, kl: decode_verify_ragged(
                 p, cfg, t, kg, vg, kl, attn_impl=attn_impl))
         # supervised-worker health (docs/ARCHITECTURE.md failure model): a
         # worker exception strands queued + resident jobs' REQUESTS back to
@@ -163,7 +251,10 @@ class DecodeInstance:
         # alone cannot tell it its job was re-dispatched — the epoch can
         # (the runtime analog of the simulator's killed_seq)
         self._epoch = 0
-        run = self._run_batched if self.decode_max_batch > 1 else self._run
+        # speculation lives in the batched worker (the verify pass IS a
+        # batched ragged step), so spec_decode routes there even at slot cap 1
+        run = self._run_batched \
+            if self.decode_max_batch > 1 or self.spec_decode else self._run
         self._thread = threading.Thread(target=lambda: self._supervised(run),
                                         daemon=True, name="decode-instance")
         self._thread.start()
@@ -219,10 +310,18 @@ class DecodeInstance:
                 and not self._resident and self._admitting == 0
 
     def compile_cache_size(self) -> int:
-        """Compiled-shape count of the batched step — the recompile budget
-        the shape buckets bound (tests assert <= |B buckets| x |KV widths|)."""
-        size = getattr(self._step_ragged, "_cache_size", None)
-        return int(size()) if callable(size) else -1
+        """Compiled-shape count of the batched step families — the recompile
+        budget the shape buckets bound (tests assert <= |B buckets| x |KV
+        widths| per family: the plain S=1 step and, under spec_decode, the
+        fixed S=k+1 verify step — at most a factor of 2, never per-draft-
+        length shapes)."""
+        total, found = 0, False
+        for fn in (self._step_ragged, self._step_verify):
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                found = True
+                total += int(size())
+        return total if found else -1
 
     # ------------------------------------------------- migration (the Proxy)
     def snapshot_load(self, instance_id: int,
@@ -235,6 +334,14 @@ class DecodeInstance:
             res = list(self._resident.values())
         ctx = sum(j.request.num_tokens + j.tokens_done for j in jobs) \
             + sum(j.request.num_tokens + j.tokens_done for j in res)
+        if self.spec_decode:
+            # migration gating prices per-ACCEPTED-token time: a step here
+            # commits E[tokens/step] tokens, so the honest service rate is
+            # the raw step time divided by the observed accept surface
+            e = self._e_tokens()
+            if e > 1.0:
+                raw = step_time
+                step_time = lambda b, c, _f=raw, _e=e: _f(b, c) / _e  # noqa: E731
         return DecodeLoad(instance_id=instance_id,
                           n_resident=len(res),
                           n_waiting=len(jobs), ctx_tokens=float(ctx),
@@ -355,6 +462,30 @@ class DecodeInstance:
             return self.step_pred.step_time(b, ctx)
         return self._tbt_ema
 
+    def _e_tokens(self, key: Optional[int] = None) -> float:
+        """E[tokens committed per step] for S-EDF/budget pricing: the
+        per-stream accept EMA when `key` has history, else the aggregate;
+        exactly 1.0 with speculation off (all pricing unchanged)."""
+        if not self.spec_decode:
+            return 1.0
+        if self.step_pred is not None:
+            return self.step_pred.expected_tokens_per_step(key)
+        return self._accept_tps if self._accept_tps > 0.0 else 1.0
+
+    def _t_token(self, b: int, ctx: float,
+                 key: Optional[int] = None) -> float:
+        """Per-ACCEPTED-token service time — what TBT-deadline slack must be
+        computed from: raw step time over expected tokens/step. Identical to
+        `_t_step` without speculation."""
+        return self._t_step(b, ctx) / self._e_tokens(key)
+
+    def _observe_accept(self, rid: int, advance: int) -> None:
+        """Record that one step committed `advance` tokens for stream rid."""
+        if self.step_pred is not None:
+            self.step_pred.observe_accept(rid, advance)
+        a = 0.25 if self._accept_tps > 0.0 else 1.0
+        self._accept_tps += a * (advance - self._accept_tps)
+
     def _entry(self, job: DecodeJob) -> DecodeEntry:
         return DecodeEntry(key=job.request.rid,
                            remaining_tokens=float(
@@ -381,7 +512,7 @@ class DecodeInstance:
         ctx = sum(j.request.num_tokens + j.tokens_done
                   for j in self._waiting) / len(self._waiting)
         ranked = self.sched.rank([self._entry(j) for j in self._waiting],
-                                 now, self._t_step(1, ctx))
+                                 now, self._t_token(1, ctx))
         best = ranked[0].key
         for i, j in enumerate(self._waiting):
             if j.request.rid == best:
@@ -398,7 +529,7 @@ class DecodeInstance:
                 return False
             queued = list(self._waiting)
         ctx = job.request.num_tokens + job.tokens_done
-        t_step = self._t_step(1, float(ctx))
+        t_step = self._t_token(1, float(ctx), job.request.rid)
         own = self.sched.priority(self._entry(job), now, t_step)
         best = max(self.sched.priority(self._entry(j), now, t_step)
                    for j in queued)
@@ -429,6 +560,8 @@ class DecodeInstance:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 now = self.clock()
                 self.tbt_samples.append(now - last)
+                self.step_samples.append(now - last)  # 1 token/step: equal
+                self.row_steps += 1
                 self._observe(
                     1, float(job.request.num_tokens + job.tokens_done),
                     now - last)
@@ -491,6 +624,11 @@ class DecodeInstance:
         pos = int(job.cache["pos"])
         remaining = job.target - job.tokens_done
         need_tokens = pos + max(remaining, 1)
+        if self.spec_decode:
+            # draft headroom: a verify step scatters the FULL k+1 span (the
+            # jit shape is static even when only part of it commits), so the
+            # last step may touch positions up to final_len + draft_k
+            need_tokens += self.draft_k
         need_blocks = (need_tokens + self.kv_block_size - 1) \
             // self.kv_block_size
         with self._kv_lock:
@@ -569,7 +707,9 @@ class DecodeInstance:
         b_eff = min(self.decode_max_batch, total)
         ctx = sum(j.request.num_tokens + j.tokens_done
                   for j in everyone.values())
-        t_step = self._t_step(b_eff, ctx / total)
+        # per-accepted-token pricing: S-EDF slack compares deadline headroom
+        # against remaining_tokens * t, so t must be time-per-COMMITTED-token
+        t_step = self._t_token(b_eff, ctx / total)
         entries = [self._entry(j) for j in everyone.values()]
         batch, preempted = self.sched.select_batch(
             entries, set(self._resident), self.decode_max_batch, now, t_step)
@@ -641,15 +781,33 @@ class DecodeInstance:
         self.steps += 1
         self.last_progress = now
         dt = now - t0
+        self.step_samples.append(dt)
         mean_ctx = float(kv_lens[:n].mean())
         self._observe(n, mean_ctx, dt)
         done: List[DecodeJob] = []
+        self.row_steps += len(jobs)
         for i, j in enumerate(jobs):
             self.tbt_samples.append(dt)
             j.tokens_done += 1
             j.next_token = int(next_tokens[i])
+            if self.spec_decode:
+                # drafter corpus + accept surface stay current through the
+                # plain-step fallback, or throttled streams would never see
+                # their tokens/step settle to 1
+                if j.history is None:
+                    j.history = [int(tokens[i])]
+                j.history.append(j.next_token)
+                del j.history[:-_SPEC_HISTORY_CAP]
+                self._observe_accept(j.request.rid, 1)
             if j.tokens_done >= j.target:
                 done.append(j)
+        self._retire_done(done, now)
+
+    def _retire_done(self, done: List[DecodeJob], now: float) -> None:
+        """Finish completed streams and release their pool blocks (shared
+        tail of the plain and speculative batched steps)."""
+        if not done:
+            return
         with self._cv:
             for j in done:
                 rid = j.request.rid
@@ -668,8 +826,128 @@ class DecodeInstance:
                     if self.kv is not None:
                         self.kv.free(rid)
                 self._in_pool.discard(rid)
-            if done:
-                self._cv.notify_all()
+                if self.step_pred is not None and self.spec_decode:
+                    self.step_pred.forget_stream(rid)
+            self._cv.notify_all()
+
+    # -------------------------------------- speculative draft -> verify step
+    def _draft_for(self, job: DecodeJob) -> List[int]:
+        """Propose this step's draft for one stream (possibly empty).
+
+        Adaptive throttle: when the stream's observed tokens/step EMA sits
+        below `spec_throttle`, verification costs more latency than the
+        committed tokens repay — draft nothing (the step then runs at plain
+        shape) and re-probe every `spec_probe_period` steps in case the
+        stream turned repetitive."""
+        k = min(self.draft_k, job.target - job.tokens_done - 1)
+        if k <= 0:
+            return []
+        rid = job.request.rid
+        if self._e_tokens(rid) < self.spec_throttle:
+            job.probe_in -= 1
+            if job.probe_in > 0:
+                return []
+            job.probe_in = self.spec_probe_period
+        if self.draft_fn is not None:
+            d = [int(t) for t in self.draft_fn(rid, job.history, k)][:k]
+        else:
+            d = _ngram_draft(job.history, k)[:k]
+        self.draft_proposed += len(d)
+        return d
+
+    def _spec_step_batch(self, jobs: List[DecodeJob]) -> None:
+        """One speculative decode step: draft per row, ONE jitted k+1-wide
+        verify pass (`decode_verify_ragged`) over the batch, greedy
+        acceptance, multi-token commit with rejected-KV rollback by length
+        truncation. When EVERY row drafts empty (throttled / no n-gram
+        match) the step delegates to the plain `_step_batch` — graceful
+        degradation to plain cost is what the fig27 low-accept gate holds."""
+        for j in jobs:
+            start = j.first_token if j.next_token is None else j.next_token
+            if j.history is None:
+                j.history = [start]
+        drafts = [self._draft_for(j) for j in jobs]
+        if not any(drafts):
+            self._step_batch(jobs)
+            return
+        n = len(jobs)
+        S = self.draft_k + 1
+        bb = self._bucket(n, self._b_buckets)
+        seq_ids = [j.request.rid for j in jobs] + [_SCRATCH_SEQ] * (bb - n)
+        kv_lens = np.zeros(bb, np.int32)
+        tokens = np.zeros((bb, S), np.int32)
+        for i, (j, d) in enumerate(zip(jobs, drafts)):
+            kv_lens[i] = j.base_len + j.tokens_done
+            tokens[i, 0] = j.first_token if j.next_token is None \
+                else j.next_token
+            # short/empty drafts leave zero-padding in the tail columns:
+            # their logits are computed but the acceptance scan below stops
+            # at len(d), so they are never committed
+            for s, t in enumerate(d):
+                tokens[i, 1 + s] = t
+        t0 = self.clock()
+        with self._kv_lock:
+            # pre-extend each row's block table to cover the FULL span the
+            # verify step scatters (kv_len + S tokens) BEFORE gathering, so
+            # the gathered width includes the draft positions (ingestion
+            # already reserves draft_k headroom; this is the cheap invariant
+            # check that keeps a migrated-in table safe)
+            for i, j in enumerate(jobs):
+                rid = j.request.rid
+                need = int(kv_lens[i]) + S
+                table = self.kv.table(rid)
+                if len(table.blocks) * self.kv_block_size < need:
+                    self.kv.extend(rid, need - table.length)
+            need_blocks = max(
+                (len(self.kv.table(j.request.rid).blocks) for j in jobs),
+                default=1)
+            width = 1
+            while width < need_blocks:
+                width *= 2
+            k_g, v_g, _ = self.kv.gather_batch(seq_ids, width)
+            logits, k_new, v_new = self._step_verify(
+                self.params, jnp.asarray(tokens), k_g, v_g,
+                jnp.asarray(kv_lens))
+            greedy = np.asarray(jnp.argmax(logits, -1))       # (bb, S)
+            # greedy acceptance: commit the longest draft prefix that
+            # matches the argmax chain, plus the one token the verify pass
+            # proves — bit-identical to plain greedy decoding by the
+            # decode_verify_ragged column contract
+            counts = [0] * bb              # scratch rows commit nothing
+            advances = [1] * n
+            for i, (j, d) in enumerate(zip(jobs, drafts)):
+                a = 0
+                while a < len(d) and d[a] == int(greedy[i, a]):
+                    a += 1
+                advances[i] = min(a + 1, j.target - j.tokens_done)
+                counts[i] = advances[i]
+            self.kv.write_token_span(seq_ids, kv_lens.tolist(), counts,
+                                     k_new, v_new)
+        now = self.clock()
+        self.steps += 1
+        self.spec_steps += 1
+        self.last_progress = now
+        dt = now - t0
+        self.step_samples.append(dt)
+        self._observe(n, float(kv_lens[:n].mean()), dt)
+        done: List[DecodeJob] = []
+        self.row_steps += n
+        for i, (j, d) in enumerate(zip(jobs, drafts)):
+            adv = advances[i]
+            emitted = [int(greedy[i, s]) for s in range(adv)]
+            j.history.extend(emitted)
+            del j.history[:-_SPEC_HISTORY_CAP]
+            j.tokens_done += adv
+            j.next_token = emitted[-1]
+            self.draft_accepted += adv - 1
+            self._observe_accept(j.request.rid, adv)
+            # per-accepted-token TBT: one sample per committed token so
+            # percentile TBT gates stay meaningful at tokens/step > 1
+            for _ in range(adv):
+                self.tbt_samples.append(dt / adv)
+            if j.tokens_done >= j.target:
+                done.append(j)
+        self._retire_done(done, now)
 
     def _run_batched(self) -> None:
         while True:
@@ -709,7 +987,10 @@ class DecodeInstance:
             if not batch:
                 time.sleep(0.001)
                 continue
-            self._step_batch(batch)
+            if self.spec_decode:
+                self._spec_step_batch(batch)
+            else:
+                self._step_batch(batch)
 
 
 def profile_step_times(params, cfg, *, batch_sizes: Sequence[int] = (1, 2, 4, 8),

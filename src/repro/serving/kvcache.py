@@ -91,6 +91,19 @@ def _scatter_tokens(k_pool, v_pool, blk, off, k, v):
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_token_span(k_pool, v_pool, blk, off, k, v):
+    """Batched multi-token scatter for speculative verify: pools
+    (L, NB, bs, K, hd), blk/off (B, S), k/v (L, B, S, K, hd). Same donated
+    in-place update as `_scatter_tokens`, one jit cache entry per (B, S)
+    bucket. Scratch padding rows may repeat (blk, off) pairs — whichever
+    write wins is garbage either way (positions past every committed
+    length)."""
+    k_pool = k_pool.at[:, blk, off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[:, blk, off].set(v.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
 def _scatter_prompt(k_pool, v_pool, blocks, k, v):
     """Bulk prompt scatter: pools (L, NB, bs, K, hd), blocks (nb,),
     k/v (L, nb, bs, K, hd) — the whole prompt lands in one donated update
@@ -608,6 +621,43 @@ class PagedKVCache:
             off[i] = pos % self.block_size
             table.length = max(table.length, pos + 1)
         self.k_pool, self.v_pool = _scatter_tokens(
+            self.k_pool, self.v_pool, jnp.asarray(blk), jnp.asarray(off), k, v)
+
+    def write_token_span(self, seq_ids: Sequence[int],
+                         positions: Sequence[int], counts: Sequence[int],
+                         k: jax.Array, v: jax.Array) -> None:
+        """Speculative-verify sibling of `write_tokens`: write an S-token
+        span per sequence in one jitted, donated scatter, but COMMIT only
+        counts[i] tokens. k/v: (L, B, S, K, hd); row i's span starts at
+        absolute position positions[i] of seq_ids[i].
+
+        Rollback-by-truncation: all S positions are written physically (the
+        scatter shape must stay static for the jit cache), but
+        ``table.length`` only advances to positions[i] + counts[i] — rejected
+        draft positions sit past the committed length, where every reader
+        masks by per-row kv_len, and are simply overwritten by a later step.
+        No stale KV is ever readable. Rows with counts[i] == 0 (scratch
+        padding) commit nothing. The caller must have ``extend``ed each
+        sequence's block table to cover positions[i] + S - 1 beforehand (the
+        decode runtime pre-extends before gathering so the draft span is
+        in-view)."""
+        n = len(seq_ids)
+        S = int(k.shape[2])
+        blk = np.empty((n, S), np.int32)
+        off = np.empty((n, S), np.int32)
+        for i, (sid, pos) in enumerate(zip(seq_ids, positions)):
+            table = self._tables[sid]
+            if (pos + S - 1) // self.block_size >= len(table.blocks):
+                raise ValueError(
+                    f"seq {sid}: span [{pos}, {pos + S}) exceeds its "
+                    f"{len(table.blocks)}-block table; extend before writing")
+            for s in range(S):
+                p = pos + s
+                blk[i, s] = self._writable_block(table, p // self.block_size)
+                off[i, s] = p % self.block_size
+            if counts[i] > 0:
+                table.length = max(table.length, pos + int(counts[i]))
+        self.k_pool, self.v_pool = _scatter_token_span(
             self.k_pool, self.v_pool, jnp.asarray(blk), jnp.asarray(off), k, v)
 
     def gather_batch(self, seq_ids: Sequence[int],

@@ -729,6 +729,29 @@ class Proxy:
             return r.finish_time is not None
         return r.first_token_time is not None
 
+    def _spec_report(self) -> dict:
+        proposed = sum(getattr(d, "draft_proposed", 0)
+                       for d in self.decode_instances)
+        accepted = sum(getattr(d, "draft_accepted", 0)
+                       for d in self.decode_instances)
+        steps = [s for d in self.decode_instances
+                 for s in getattr(d, "step_samples", [])]
+        tokens = sum(len(getattr(d, "tbt_samples", []))
+                     for d in self.decode_instances)
+        row_steps = sum(getattr(d, "row_steps", 0)
+                        for d in self.decode_instances)
+        return {
+            "spec_steps": sum(getattr(d, "spec_steps", 0)
+                              for d in self.decode_instances),
+            "draft_proposed": proposed,
+            "draft_accepted": accepted,
+            "accept_rate": accepted / proposed if proposed else 0.0,
+            # per-STREAM tokens committed per step (1.0 = plain decode);
+            # independent of batch size by construction
+            "tokens_per_step": tokens / row_steps if row_steps else 0.0,
+            "step_latency_mean": float(np.mean(steps)) if steps else 0.0,
+        }
+
     def report(self) -> dict:
         with self._load_lock:
             dispatched = list(self.dispatched)
@@ -775,6 +798,11 @@ class Proxy:
                                       for d in self.decode_instances),
             "decode_steps": sum(getattr(d, "steps", 0)
                                 for d in self.decode_instances),
+            # speculative decoding: draft/accept counters plus the two
+            # latencies multi-token steps split apart — per-accepted-token
+            # TBT (tbt_samples, SLO basis) vs per-step wall latency
+            # (step_samples, capacity basis). All zeros with spec off.
+            "spec": self._spec_report(),
             "prefix_hits": sum(getattr(i, "prefix_hits", 0)
                                for i in self.prefill_instances),
             "prefix_hit_tokens": sum(getattr(i, "prefix_hit_tokens", 0)

@@ -39,6 +39,7 @@ from repro.core.dispatch import (DecodeCandidate, DecodeLoad, DispatchPolicy,
 from repro.core.faults import FaultPlan
 from repro.core.metrics import percentile_report, slo_frac_percentile
 from repro.core.predictor import (DecodeStepPredictor, OnlineTTFTPredictor,
+                                  expected_accept_tokens,
                                   TTFTPredictor)
 from repro.core.prefixcache import PrefixBlockManager
 from repro.core.tieredcache import TieredBlockManager
@@ -104,7 +105,9 @@ class DecodeSim:
     def __init__(self, cost: DecodeCostModel, heap: List, seq,
                  instance_id: int = 0, *, max_batch: int = 0,
                  scheduler: Optional[DecodeSchedulerCore] = None,
-                 step_predictor: Optional[DecodeStepPredictor] = None):
+                 step_predictor: Optional[DecodeStepPredictor] = None,
+                 spec_decode: bool = False, draft_k: int = 4,
+                 spec_accept: float = 0.0):
         self.cost = cost
         self.heap = heap
         self.seq = seq
@@ -113,6 +116,15 @@ class DecodeSim:
         self.sched = scheduler or DecodeSchedulerCore(policy="fcfs")
         self.step_pred = step_predictor \
             or DecodeStepPredictor(prior=cost.step_time)
+        # speculative decoding (fluid model): a stream with per-token accept
+        # probability `a` (Request.spec_accept, falling back to the
+        # instance-wide `spec_accept`) advances expected_accept_tokens(a, k)
+        # tokens per step — the SAME analytic accept surface the runtime's
+        # EMA converges to (evaluated-is-deployed). Off by default: every
+        # rate below multiplies/divides by exactly 1.0, bit-identical.
+        self.spec_decode = spec_decode
+        self.draft_k = draft_k
+        self.spec_accept = spec_accept
         self.jobs: Dict[int, _DecodeJob] = {}      # resident batch
         self.waiting: Dict[int, _DecodeJob] = {}   # queued for admission
         self.epoch = 0
@@ -129,6 +141,19 @@ class DecodeSim:
         ctx = sum(j.request.num_tokens + j.done for j in self.jobs.values())
         return self.cost.step_time(len(self.jobs), ctx / len(self.jobs))
 
+    def _e_of(self, job: _DecodeJob) -> float:
+        """E[tokens committed per step] for one stream (1.0 = plain)."""
+        if not self.spec_decode:
+            return 1.0
+        a = float(getattr(job.request, "spec_accept", 0.0) or self.spec_accept)
+        return expected_accept_tokens(a, self.draft_k)
+
+    def _e_mean(self, jobs) -> float:
+        jobs = list(jobs)
+        if not self.spec_decode or not jobs:
+            return 1.0
+        return sum(self._e_of(j) for j in jobs) / len(jobs)
+
     def _advance(self, now: float) -> None:
         dt = now - self.last_update
         self.last_update = now
@@ -137,7 +162,8 @@ class DecodeSim:
         t_step = self._step_time()
         gained = dt / t_step if t_step > 0 else float("inf")
         for j in self.jobs.values():
-            j.done = min(j.done + gained, float(j.request.output_tokens))
+            j.done = min(j.done + gained * self._e_of(j),
+                         float(j.request.output_tokens))
 
     def _reschedule(self, now: float) -> None:
         self.epoch += 1
@@ -145,6 +171,7 @@ class DecodeSim:
             return
         t_step = self._step_time()
         t_next = min((j.request.output_tokens - j.done) * t_step
+                     / self._e_of(j)
                      for j in self.jobs.values())
         heapq.heappush(self.heap, (now + max(t_next, 0.0), next(self.seq),
                                    DECODE_DONE, (self, self.epoch)))
@@ -163,7 +190,10 @@ class DecodeSim:
         total = len(everyone)
         b_eff = min(self.max_batch, total)
         ctx = sum(j.context for j in everyone.values())
-        t_step = self.step_pred.step_time(b_eff, ctx / total)
+        # per-accepted-token pricing for S-EDF slack (speculation commits
+        # E[tokens/step] tokens per step; /1.0 without it)
+        t_step = self.step_pred.step_time(b_eff, ctx / total) \
+            / self._e_mean(everyone.values())
         entries = [DecodeEntry(key=rid, remaining_tokens=j.remaining,
                                deadline=j.request.decode_deadline,
                                order=j.order)
@@ -199,11 +229,19 @@ class DecodeSim:
         """Migration-planner view of this instance (core/dispatch.py)."""
         ctx = sum(j.context for j in self.jobs.values()) \
             + sum(j.context for j in self.waiting.values())
+        step_time = self.step_pred.step_time
+        if self.spec_decode:
+            # migration gating prices the per-ACCEPTED-token service rate
+            e = self._e_mean(list(self.jobs.values())
+                             + list(self.waiting.values()))
+            if e > 1.0:
+                raw = step_time
+                step_time = lambda b, c, _f=raw, _e=e: _f(b, c) / _e  # noqa: E731
         return DecodeLoad(instance_id=self.instance_id,
                           n_resident=len(self.jobs),
                           n_waiting=len(self.waiting),
                           ctx_tokens=ctx, max_batch=self.max_batch,
-                          step_time=self.step_pred.step_time)
+                          step_time=step_time)
 
     # --------------------------------------------------------------- events
     def join(self, req: Request, now: float) -> None:
@@ -338,9 +376,17 @@ class HybridSim:
                  decode_policy: str = "s-edf",
                  decode_preempt: Optional[bool] = None,
                  predictor: Optional[TTFTPredictor] = None,
-                 round_overhead: float = 100e-6, capacity: float = 1.0):
+                 round_overhead: float = 100e-6, capacity: float = 1.0,
+                 spec_decode: bool = False, draft_k: int = 4,
+                 spec_accept: float = 0.0):
         self.cost = cost
         self.decode_cost = decode_cost
+        # speculative decoding (fluid model) — same accept surface as
+        # DecodeSim: each woven decode step advances E[a, k] tokens and each
+        # admitted stream prices E budget tokens in plan_step
+        self.spec_decode = spec_decode
+        self.draft_k = draft_k
+        self.spec_accept = spec_accept
         self.heap = heap
         self.seq = seq
         self.instance_id = instance_id
@@ -429,20 +475,36 @@ class HybridSim:
                             deadline=j.request.decode_deadline, order=j.order)
                 for rid, j in self.jobs.items()]
 
+    def _e_of(self, job) -> float:
+        """Expected accepted tokens per decode step for one stream."""
+        if not self.spec_decode:
+            return 1.0
+        a = float(getattr(job.request, "spec_accept", 0.0) or self.spec_accept)
+        return expected_accept_tokens(a, self.draft_k)
+
+    def _e_mean(self, jobs) -> float:
+        jobs = list(jobs)
+        if not self.spec_decode or not jobs:
+            return 1.0
+        return sum(self._e_of(j) for j in jobs) / len(jobs)
+
     def _start_step(self, now: float) -> None:
         """Plan one hybrid step and schedule its completion event."""
         entries = self._decode_entries()
+        e_mean = self._e_mean(self.jobs.values())
         t_hint = 0.0
         if entries:
             cap = self.core.decode_max_batch
             b = min(len(entries), cap) if cap > 0 else len(entries)
             ctx = sum(j.context for j in self.jobs.values()) / len(self.jobs)
-            t_hint = self.decode_cost.step_time(b, ctx)
+            # slack hint prices the per-ACCEPTED-token rate, matching the
+            # runtime's `_t_token` (decode_instance.py)
+            t_hint = self.decode_cost.step_time(b, ctx) / e_mean
         plan = self.core.plan_step(
             now, prefill=[p.request for p in self.prefills.values()],
             prefill_done={rid: p.done for rid, p in self.prefills.items()},
             decode_entries=entries, decode_resident=self.resident,
-            t_step=t_hint)
+            t_step=t_hint, decode_cost=e_mean)
         if plan.empty:
             self.busy = False
             return
@@ -491,7 +553,7 @@ class HybridSim:
         done_decode: List[int] = []
         for key in plan.decode_keys:
             j = self.jobs[key]
-            j.done += min(float(k), j.remaining)
+            j.done += min(float(k) * self._e_of(j), j.remaining)
             if j.done >= j.request.output_tokens:
                 r = j.request
                 r.finish_time = now
@@ -695,7 +757,10 @@ class ClusterSim:
                  retry_backoff_cap: float = 2.0,
                  watchdog_s: float = 1.0,
                  shed_policy: str = "off",
-                 shed_budget: float = 2.0):
+                 shed_budget: float = 2.0,
+                 spec_decode: bool = False,
+                 draft_k: int = 4,
+                 spec_accept: float = 0.0):
         if hardware is not None:
             hardware = [resolve_hardware(hw) for hw in hardware]
             num_instances = len(hardware)
@@ -821,6 +886,14 @@ class ClusterSim:
         # predicted TTFT exceeds shed_budget * slo. Off by default.
         self.shed_policy = shed_policy
         self.shed_budget = shed_budget
+        # speculative decoding (fluid model): decode/hybrid engines advance
+        # expected_accept_tokens(a, draft_k) tokens per step, with `a` read
+        # from Request.spec_accept (falling back to the cluster-wide
+        # spec_accept). Off by default — every E factor is exactly 1.0 and
+        # committed fig9..fig26 baselines stay byte-equal.
+        self.spec_decode = spec_decode
+        self.draft_k = draft_k
+        self.spec_accept = spec_accept
 
     def run(self, requests: Sequence[Request]) -> ClusterResult:
         heap: List[Tuple[float, int, int, object]] = []
@@ -838,7 +911,10 @@ class ClusterSim:
                              max_batch=self.decode_max_batch,
                              scheduler=DecodeSchedulerCore(
                                  policy=self.decode_policy,
-                                 preempt=self.decode_preempt))
+                                 preempt=self.decode_preempt),
+                             spec_decode=self.spec_decode,
+                             draft_k=self.draft_k,
+                             spec_accept=self.spec_accept)
                    for i in range(self.num_decode)]
         hybrids = [HybridSim(self.cost, self.hybrid_decode_cost, heap, seq,
                              instance_id=self.num_instances + i,
@@ -850,7 +926,10 @@ class ClusterSim:
                              decode_preempt=self.decode_preempt,
                              predictor=self.predictor,
                              round_overhead=self.cfg.round_overhead,
-                             capacity=self.hybrid_capacity)
+                             capacity=self.hybrid_capacity,
+                             spec_decode=self.spec_decode,
+                             draft_k=self.draft_k,
+                             spec_accept=self.spec_accept)
                    for i in range(self.num_hybrid)]
         n_migrations = 0
         reset_requests(requests)
@@ -1434,6 +1513,9 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      watchdog_s: float = 1.0,
                      shed_policy: str = "off",
                      shed_budget: float = 2.0,
+                     spec_decode: bool = False,
+                     draft_k: int = 4,
+                     spec_accept: float = 0.0,
                      **overrides) -> ClusterResult:
     """Cluster counterpart of `repro.sim.policies.simulate` — same baseline
     presets, same fresh-copy semantics, plus instance count, dispatch,
@@ -1447,7 +1529,10 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
     colocated pools (`hybrid_instances` unified prefill+decode engines —
     pool layouts mix freely: `num_instances=0, hybrid_instances=4` is fully
     colocated, `num_instances=1, decode_instances=1, hybrid_instances=2`
-    is a mixed pool at the same card count as 2P+2D disaggregation)."""
+    is a mixed pool at the same card count as 2P+2D disaggregation), and
+    speculative decoding (`spec_decode` + `draft_k` + `spec_accept`: fluid
+    multi-token advancement off the analytic accept surface the runtime's
+    per-stream EMA converges to)."""
     import copy
 
     from repro.sim.costmodel import A800, MODEL_SPECS, MODEL_TP
@@ -1482,5 +1567,8 @@ def simulate_cluster(system: str, requests: Sequence[Request], *,
                      retry_backoff_cap=retry_backoff_cap,
                      watchdog_s=watchdog_s,
                      shed_policy=shed_policy,
-                     shed_budget=shed_budget)
+                     shed_budget=shed_budget,
+                     spec_decode=spec_decode,
+                     draft_k=draft_k,
+                     spec_accept=spec_accept)
     return sim.run([copy.copy(r) for r in requests])

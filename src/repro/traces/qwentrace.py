@@ -80,6 +80,11 @@ class TraceConfig:
     # loose for search/file agents) — the workload where slack-aware decode
     # admission wins; unlisted tasks fall back to `tbt_slo`
     tbt_slo_by_task: Optional[Dict[str, float]] = None
+    # speculative decoding: per-task draft accept probability stamped onto
+    # Request.spec_accept (drafts hit well on templated/file tasks, poorly
+    # on freeform text). None = legacy trace, spec_accept stays 0.0 —
+    # bit-identical requests; unlisted tasks also get 0.0.
+    spec_accept_by_task: Optional[Dict[str, float]] = None
     # shared-prefix structure (0.0/0.0 = the original trace, prefix_hash
     # left None — bit-identical requests)
     shared_prefix_frac: float = 0.0   # of each class's MEAN length: the
@@ -184,6 +189,7 @@ def generate(cfg: TraceConfig) -> List[Request]:
             output_tokens=out_tokens,
             tbt_slo=tbt if out_tokens else float("inf"),
             prefix_hash=keys,
+            spec_accept=(cfg.spec_accept_by_task or {}).get(task, 0.0),
         ))
     return out
 

@@ -135,6 +135,16 @@ def test_gated_metric_selection():
     assert not is_gated_lower("fig25/llama3-8b/promote_hit_rate")
     assert not is_gated("fig25/llama3-8b/real/promoted_ms")
     assert not is_gated("fig25/llama3-8b/real/cold_ms")
+    # fig27 speculative-decoding families: both accept-regime speedups, the
+    # sim attainments, and the sim TPOT ratio gate higher-is-better;
+    # absolute tokens/s stays ungated (runner-speed dependent)
+    assert is_gated("fig27/llama3-8b/high_accept_vs_plain_speedup")
+    assert is_gated("fig27/llama3-8b/low_accept_vs_plain_speedup")
+    assert is_gated("fig27/llama3-8b/sim_tbt_attainment_spec")
+    assert is_gated("fig27/llama3-8b/sim_tpot_spec_vs_plain_speedup")
+    assert not is_gated_lower("fig27/llama3-8b/low_accept_vs_plain_speedup")
+    assert not is_gated("fig27/llama3-8b/tokens_per_s_high_accept")
+    assert not is_gated("fig27/llama3-8b/tokens_per_s_plain")
 
 
 def test_gate_trips_on_fig21_scaling_regression(dirs):
@@ -352,6 +362,50 @@ def test_gate_trips_on_fig25_tiered_kv_regression(dirs):
     assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
 
 
+def test_gate_trips_on_fig27_spec_decode_regression(dirs):
+    """The speculative-decoding acceptance: the committed accept-regime
+    floors (1.67 * 0.9 ~= the 1.5x high-accept floor, 1.0 * 0.9 = the 0.9x
+    adversarial no-regression floor) must trip when speculation stops paying
+    (verify pass silently serializing) or starts costing (throttle broken,
+    overhead unbounded), and pass when the fresh run holds the line."""
+    base, fresh = dirs
+    fig27_base = {
+        "fig27/llama3-8b/high_accept_vs_plain_speedup": 1.67,
+        "fig27/llama3-8b/low_accept_vs_plain_speedup": 1.0,
+        "fig27/llama3-8b/sim_tbt_attainment_spec": 1.0,
+        "fig27/llama3-8b/sim_tpot_spec_vs_plain_speedup": 6.2,
+        "fig27/llama3-8b/tokens_per_s_plain": 1681.2,    # ungated wall clock
+    }
+    write_bench(base, "fig27", fig27_base)
+    write_bench(fresh, "fig9", BASE)
+    # speculation stops paying: the high-accept speedup collapsing under
+    # the conservative floor trips
+    flat = dict(fig27_base,
+                **{"fig27/llama3-8b/high_accept_vs_plain_speedup": 1.1})
+    write_bench(fresh, "fig27", flat)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # speculation starts costing: adversarial drafts dragging throughput
+    # below the no-regression floor (EMA throttle broken) trips
+    costly = dict(fig27_base,
+                  **{"fig27/llama3-8b/low_accept_vs_plain_speedup": 0.6})
+    write_bench(fresh, "fig27", costly)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # the deterministic sim rows are gated exactly: the spec attainment
+    # dropping (scheduler mispricing multi-token steps) trips too
+    mispriced = dict(fig27_base,
+                     **{"fig27/llama3-8b/sim_tbt_attainment_spec": 0.8})
+    write_bench(fresh, "fig27", mispriced)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 1
+    # a fast runner clearing the floors — and a slower runner's absolute
+    # tokens/s — passes
+    ok = dict(fig27_base, **{
+        "fig27/llama3-8b/high_accept_vs_plain_speedup": 3.6,
+        "fig27/llama3-8b/low_accept_vs_plain_speedup": 1.02,
+        "fig27/llama3-8b/tokens_per_s_plain": 400.0})
+    write_bench(fresh, "fig27", ok)
+    assert compare_main(["--baseline", str(base), "--fresh", str(fresh)]) == 0
+
+
 def test_run_only_rejects_unknown_figure_names(capsys):
     with pytest.raises(SystemExit) as exc:
         bench_run.main(["--only", "fig9,fig99"])
@@ -367,7 +421,7 @@ def test_committed_baselines_are_wellformed():
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     baselines = load_dir(os.path.join(repo, "benchmarks", "baselines"))
     assert {"fig9", "fig18", "fig19", "fig20", "fig21", "fig22", "fig23",
-            "fig24", "fig25"} <= set(baselines)
+            "fig24", "fig25", "fig26", "fig27"} <= set(baselines)
     gated = [m for metrics in baselines.values() for m in metrics
              if is_gated(m)]
     assert len(gated) >= 50
@@ -427,6 +481,19 @@ def test_committed_baselines_are_wellformed():
     assert fig25["fig25/llama3-8b/tiered/cap64/goodput_req_s"] > 0.0
     assert fig25["fig25/llama3-8b/promote_hit_rate"] >= 0.9
     assert fig25["fig25/llama3-8b/real/promote_vs_recompute_speedup"] >= 3.0
+    # the fig27 speculative-decoding acceptances are committed and actually
+    # hold: the conservative accept-regime floors (>= 1.5x high-accept after
+    # tolerance, >= 0.9x adversarial no-regression after tolerance), spec
+    # lifting the loaded sim decode stage's TBT attainment above plain, and
+    # the deterministic sim TPOT ratio showing a real multi-token win
+    fig27 = baselines["fig27"]
+    assert fig27["fig27/llama3-8b/high_accept_vs_plain_speedup"] * 0.9 \
+        >= 1.5
+    assert fig27["fig27/llama3-8b/low_accept_vs_plain_speedup"] * 0.9 \
+        >= 0.9
+    assert fig27["fig27/llama3-8b/sim_tbt_attainment_spec"] \
+        >= fig27["fig27/llama3-8b/sim_tbt_attainment_plain"]
+    assert fig27["fig27/llama3-8b/sim_tpot_spec_vs_plain_speedup"] > 1.0
     # at least one lower-is-better (error) metric is gated too
     lower = [m for metrics in baselines.values() for m in metrics
              if is_gated_lower(m)]

@@ -1,0 +1,417 @@
+"""Speculative decoding inside the batched ragged decode runtime: greedy
+draft-then-verify must be BIT-IDENTICAL to plain decoding (the whole premise
+of fig27's speedup claim), eviction mid-draft must resume cleanly, jit
+recompiles stay bounded with the extra k+1 verify shape family, and
+``spec_decode=False`` leaves every plain-path artifact untouched — counters
+zero, no verify traces, sim outputs byte-equal to a run that never heard of
+the feature."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_tiny_config
+from repro.core.predictor import DecodeStepPredictor, expected_accept_tokens
+from repro.core.request import Request
+from repro.models import init_params
+from repro.models.model import decode_step, prefill
+from repro.serving.decode_instance import DecodeInstance, DecodeJob
+
+CFG = dataclasses.replace(get_tiny_config("llama3_8b"),
+                          num_layers=2, d_model=128, d_ff=256)
+MAX_SEQ = 256
+K = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _handoff(params, n, seed):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, n)), jnp.int32)
+    logits, cache = prefill(params, CFG, {"tokens": toks}, max_seq=MAX_SEQ)
+    return int(jnp.argmax(logits, -1)[0]), \
+        {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+
+
+# Eager `decode_step` re-traces its lax.scan every call, and scan's dispatch
+# cache keys the body jaxpr by identity — so an eager replay loop triggers a
+# full XLA compile per token. Jit once at module scope instead: one compile,
+# then cached calls (also what the dense single-stream worker does).
+_plain_step = jax.jit(lambda p, t, c: decode_step(p, CFG, t, c))
+
+
+def _replay(params, first, cache, n_tokens):
+    """Plain sequential greedy decode: the bit-parity reference."""
+    tok = jnp.asarray([first], jnp.int32)
+    c = dict(cache)
+    out = []
+    for _ in range(n_tokens):
+        logits, c = _plain_step(params, tok, c)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+def _job(first, cache, out_tokens, tbt=100.0):
+    req = Request(num_tokens=int(cache["pos"]), slo=100.0, arrival=0.0,
+                  output_tokens=out_tokens, tbt_slo=tbt)
+    return DecodeJob(request=req, cache=dict(cache), first_token=first)
+
+
+def _corpus(params, streams, n_tokens):
+    """Reference continuations keyed by first token (the drafters' corpus
+    AND the parity oracle). Distinct first tokens are asserted because the
+    drafters dispatch on history[0]."""
+    by_first = {f: _replay(params, f, c, n_tokens) for f, c in streams}
+    assert len(by_first) == len(streams), "first tokens must be distinct"
+    return by_first
+
+
+def _oracle(by_first):
+    def draft(rid, history, k):
+        seq = by_first[history[0]]
+        done = len(history) - 1
+        return seq[done:done + k]
+    return draft
+
+
+def _adversarial(by_first):
+    def draft(rid, history, k):
+        seq = by_first[history[0]]
+        done = len(history) - 1
+        # first draft position always != the true greedy token: accept
+        # rate is exactly 0, the worst case for speculation
+        return [(seq[done] + 1) % CFG.vocab_size] if done < len(seq) else []
+    return draft
+
+
+def _run_spec(params, streams, out_tokens, *, draft_fn, n_slots=None,
+              **kw):
+    inst = DecodeInstance(params, CFG, decode_tokens=out_tokens,
+                          decode_max_batch=n_slots or len(streams),
+                          kv_block_size=64, spec_decode=True, draft_k=K,
+                          draft_fn=draft_fn, **kw)
+    jobs = [_job(f, c, out_tokens) for f, c in streams]
+    try:
+        for j in jobs:
+            inst.submit(j)
+        assert inst.drain(120.0)
+    finally:
+        inst.shutdown()
+    return inst, jobs
+
+
+# --- bit parity --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seeds,prompts", [
+    ((300, 301, 302, 303), (32, 48, 80, 100)),   # full 4-slot bucket
+    ((310, 311), (48, 64)),                      # 2-slot bucket
+    ((320,), (40,)),                             # degenerate single stream
+])
+def test_oracle_spec_trajectory_bitmatches_plain_replay(model, seeds,
+                                                        prompts):
+    """Accept-everything regime: every verify step commits k+1 tokens, and
+    the FULL emitted trajectory (job.history carries every token) is
+    bit-equal to the plain sequential replay — speculation changes the
+    schedule, never the tokens."""
+    params = model
+    out = 12
+    streams = [_handoff(params, n, seed=s) for s, n in zip(seeds, prompts)]
+    by_first = _corpus(params, streams, out + K)
+    inst, jobs = _run_spec(params, streams, out, draft_fn=_oracle(by_first))
+
+    for j, (f, _) in zip(jobs, streams):
+        want = by_first[f]
+        assert j.tokens_done == out
+        assert j.history == [f] + want[:out]      # every token, in order
+        assert j.next_token == want[out - 1]
+    # ...and speculation actually happened: drafts accepted, fewer verify
+    # steps than tokens (each commits up to k+1)
+    assert inst.draft_accepted > 0
+    assert inst.draft_accepted == inst.draft_proposed   # oracle never misses
+    assert inst.spec_steps > 0
+    # per-row tokens/step must exceed 1 (multi-token commits measured by the
+    # satellite accounting: len(tbt_samples) counts accepted tokens,
+    # row_steps counts (stream, step) pairs)
+    assert len(inst.tbt_samples) == len(streams) * out
+    assert len(inst.tbt_samples) / inst.row_steps > 1.5
+
+
+def test_adversarial_spec_bitmatches_and_throttles(model):
+    """Reject-everything regime: output still bit-equal to plain decoding,
+    zero drafts accepted, and the accept-rate EMA throttles drafting so most
+    steps fall back to the plain batched shape."""
+    params = model
+    out = 24
+    streams = [_handoff(params, n, seed=330 + i)
+               for i, n in enumerate((32, 48, 80, 100))]
+    by_first = _corpus(params, streams, out + K)
+    inst, jobs = _run_spec(params, streams, out,
+                           draft_fn=_adversarial(by_first))
+
+    for j, (f, _) in zip(jobs, streams):
+        assert j.history == [f] + by_first[f][:out]
+        assert j.next_token == by_first[f][out - 1]
+    assert inst.draft_accepted == 0
+    assert inst.draft_proposed > 0               # it did probe
+    # EMA throttle: after the first rejections, drafting drops to the
+    # 1-in-spec_probe_period probe cadence — strictly fewer verify-shaped
+    # steps than total steps
+    assert 0 < inst.spec_steps < inst.steps
+    # every accepted token is the verify row's own greedy argmax: exactly
+    # one per row per step
+    assert len(inst.tbt_samples) == len(streams) * out
+    assert len(inst.tbt_samples) / inst.row_steps == pytest.approx(1.0)
+
+
+def test_default_ngram_drafter_bitparity(model):
+    """The self-drafting n-gram drafter (draft_fn=None) on pseudorandom
+    sequences: whatever it proposes — usually nothing, occasionally a bogus
+    suffix match — the greedy verify keeps output bit-identical."""
+    params = model
+    out = 10
+    streams = [_handoff(params, n, seed=340 + i)
+               for i, n in enumerate((32, 48))]
+    by_first = _corpus(params, streams, out)
+    inst, jobs = _run_spec(params, streams, out, draft_fn=None)
+    for j, (f, _) in zip(jobs, streams):
+        assert j.history == [f] + by_first[f][:out]
+        assert j.next_token == by_first[f][out - 1]
+    assert inst.draft_accepted <= inst.draft_proposed
+
+
+def test_mixed_accept_streams_in_one_batch(model):
+    """One batch mixing an oracle-drafted stream with adversarially-drafted
+    ones: per-row acceptance bookkeeping keeps them independent — the lucky
+    stream advances multi-token while the others advance one, all
+    bit-equal."""
+    params = model
+    out = 12
+    streams = [_handoff(params, n, seed=350 + i)
+               for i, n in enumerate((32, 48, 64))]
+    by_first = _corpus(params, streams, out + K)
+    lucky_first = streams[0][0]
+    oracle, adversarial = _oracle(by_first), _adversarial(by_first)
+
+    def mixed(rid, history, k):
+        if history[0] == lucky_first:
+            return oracle(rid, history, k)
+        return adversarial(rid, history, k)
+
+    inst, jobs = _run_spec(params, streams, out, draft_fn=mixed)
+    for j, (f, _) in zip(jobs, streams):
+        assert j.history == [f] + by_first[f][:out]
+    assert inst.draft_accepted > 0               # the lucky stream's commits
+    assert jobs[0].request.finish_time <= jobs[-1].request.finish_time
+
+
+# --- eviction / resume -------------------------------------------------------
+
+
+def test_eviction_mid_draft_resumes_bitexact(model):
+    """Preemption-as-eviction with speculation live: a tight-TBT arrival
+    displaces a resident stream between verify steps; the evicted stream's
+    tokens_done / next_token / history all sit at a mid-draft position (not
+    a k+1 multiple), and on resume it still decodes exactly its replay."""
+    params = model
+    pred = DecodeStepPredictor(prior=lambda b, c: 1e-4, ema_alpha=0.0)
+    loose_s = [_handoff(params, 32, seed=360), _handoff(params, 48, seed=361)]
+    tight_s = _handoff(params, 40, seed=362)
+    by_first = _corpus(params, loose_s + [tight_s], 40 + K)
+    inst = DecodeInstance(params, CFG, decode_tokens=8, decode_max_batch=2,
+                          kv_block_size=64, policy="s-edf",
+                          step_predictor=pred, spec_decode=True, draft_k=K,
+                          draft_fn=_adversarial(by_first))
+    # adversarial drafts keep steps single-token (one token per step, like
+    # the plain preemption test) so the slot contention window stays open
+    # long enough for the tight stream to arrive mid-decode
+    loose = [_job(f, c, 40, tbt=100.0) for f, c in loose_s]
+    tight = _job(*tight_s, 6, tbt=2.0)
+    try:
+        for j in loose:
+            inst.submit(j)
+        deadline = time.monotonic() + 30.0
+        while inst.steps < 2 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        inst.submit(tight)
+        assert inst.drain(120.0)
+    finally:
+        inst.shutdown()
+    assert inst.preemptions >= 1
+    assert sum(j.request.decode_preemptions for j in loose) >= 1
+    assert [j.tokens_done for j in loose] == [40, 40]
+    assert tight.tokens_done == 6
+    for j, (f, _) in zip(loose, loose_s):
+        # eviction preserved the stream bit-exactly THROUGH the spec path:
+        # full trajectory, not just the last token
+        assert j.history == [f] + by_first[f][:40]
+    assert tight.next_token == by_first[tight_s[0]][5]
+
+
+def test_resumed_midstream_job_drafts_from_prior_history(model):
+    """A job migrated in mid-stream (tokens_done > 0, no history yet) must
+    rebuild drafting state from its resume point and stay bit-exact."""
+    params = model
+    f, c = _handoff(params, 48, seed=370)
+    want = _replay(params, f, c, 8 + K)
+    done = _replay(params, f, c, 3)
+    mid = dict(c)
+    # rebuild the migrated-in cache at +3 tokens
+    tok = jnp.asarray([f], jnp.int32)
+    for _ in range(3):
+        logits, mid = _plain_step(params, tok, mid)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    req = Request(num_tokens=48, slo=100.0, arrival=0.0, output_tokens=8,
+                  tbt_slo=100.0)
+    job = DecodeJob(request=req, first_token=f, tokens_done=3,
+                    next_token=done[2],
+                    cache={"k": mid["k"], "v": mid["v"], "pos": mid["pos"]})
+
+    # oracle keyed on next_token: history restarts at the resume point
+    def draft(rid, history, k):
+        d = 3 + (len(history) - 1)               # tokens generated overall
+        return want[d:d + k]
+
+    inst = DecodeInstance(params, CFG, decode_tokens=8, decode_max_batch=2,
+                          kv_block_size=64, spec_decode=True, draft_k=K,
+                          draft_fn=draft)
+    try:
+        inst.submit(job)
+        assert inst.drain(120.0)
+    finally:
+        inst.shutdown()
+    assert job.tokens_done == 8
+    assert job.next_token == want[7]
+    assert inst.draft_accepted > 0               # the resume drafts landed
+
+
+# --- compile discipline ------------------------------------------------------
+
+
+def test_spec_recompiles_bounded_by_two_shape_families(model):
+    """With speculation on, TWO step families exist — the plain S=1 ragged
+    step (throttled fallback) and the S=k+1 verify step. Sweeping resident
+    populations must stay within |batch buckets| x |width buckets| traces
+    PER family."""
+    params = model
+    by_first = {}
+
+    def flaky(rid, history, k):
+        # alternate hit/miss per call so BOTH families get exercised at
+        # several batch buckets without depending on EMA state
+        seq = by_first[history[0]]
+        done = len(history) - 1
+        if done % 2 == 0:
+            return seq[done:done + k]
+        return [(seq[done] + 1) % CFG.vocab_size] if done < len(seq) else []
+
+    # build every round's streams + reference corpus BEFORE the instance
+    # exists: all host-side jax compiles happen with no worker thread alive
+    rounds = []
+    seed = 400
+    for n_streams in (1, 2, 3, 5, 8):
+        streams = []
+        for _ in range(n_streams):
+            f, c = _handoff(params, 32 + 16 * (seed % 2), seed)
+            seed += 1
+            streams.append((f, c))
+        for f, c in streams:
+            by_first[f] = _replay(params, f, c, 4 + K)
+        rounds.append(streams)
+
+    inst = DecodeInstance(params, CFG, decode_tokens=4, decode_max_batch=8,
+                          kv_block_size=64, batch_buckets=(1, 2, 4, 8),
+                          spec_decode=True, draft_k=K, draft_fn=flaky,
+                          spec_throttle=0.0)    # never throttle: keep probing
+    try:
+        for streams in rounds:
+            jobs = [_job(f, c, 4) for f, c in streams]
+            for j in jobs:
+                inst.submit(j)
+            assert inst.drain(120.0)
+        n_widths = 1     # 32/48-token prompts + short targets: one 64 block
+        assert 0 < inst.compile_cache_size() <= 2 * 4 * n_widths
+    finally:
+        inst.shutdown()
+
+
+# --- spec off is byte-identical off ------------------------------------------
+
+
+def test_spec_off_leaves_plain_path_untouched(model):
+    """The default-off contract: a plain instance carries zero speculative
+    state — no verify traces compiled, counters zero, no history built —
+    so every pre-existing baseline (fig9/18-26) is untouched by
+    construction."""
+    params = model
+    f, c = _handoff(params, 48, seed=380)
+    want = _replay(params, f, c, 6)
+    inst = DecodeInstance(params, CFG, decode_tokens=6, decode_max_batch=2,
+                          kv_block_size=64)
+    assert inst.spec_decode is False             # the default
+    job = _job(f, c, 6)
+    try:
+        inst.submit(job)
+        assert inst.drain(60.0)
+    finally:
+        inst.shutdown()
+    assert job.next_token == want[-1]
+    assert (inst.spec_steps, inst.draft_proposed, inst.draft_accepted) \
+        == (0, 0, 0)
+    assert job.history is None                   # plain path skips bookkeeping
+    # only the plain family ever traced: same bound as the pre-spec suite
+    assert 0 < inst.compile_cache_size() <= 4
+    # per-row tokens/step is exactly 1.0 when off
+    assert len(inst.tbt_samples) == inst.row_steps == 6
+
+
+def test_spec_off_sim_is_byte_identical():
+    """The sim-side contract: threading spec kwargs with spec off produces
+    FLOAT-IDENTICAL results to a run that never passes them — the committed
+    fig9/18-26 baselines cannot move."""
+    from repro.sim.cluster import simulate_cluster
+    from repro.traces.qwentrace import TraceConfig, generate
+
+    cfg = TraceConfig(rate=8.0, duration=20.0, seed=3, output_mean=100.0)
+    kw = dict(num_instances=2, decode_instances=2, decode_max_batch=8,
+              decode_policy="s-edf")
+    legacy = simulate_cluster("flowprefill", generate(cfg), **kw)
+    explicit = simulate_cluster("flowprefill", generate(cfg),
+                                spec_decode=False, draft_k=K,
+                                spec_accept=0.9, **kw)
+    for a, b in zip(legacy.requests, explicit.requests):
+        assert a.mean_tpot == b.mean_tpot        # exact, not approx
+        assert a.finish_time == b.finish_time
+    assert legacy.tbt_attainment == explicit.tbt_attainment
+    # the default Request/TraceConfig stamps are inert too
+    assert Request(num_tokens=1, slo=1.0, arrival=0.0).spec_accept == 0.0
+    assert TraceConfig().spec_accept_by_task is None
+    r = generate(TraceConfig(rate=2.0, duration=5.0, seed=0))[0]
+    assert r.spec_accept == 0.0
+
+
+# --- the shared accept surface -----------------------------------------------
+
+
+def test_expected_accept_tokens_surface():
+    """The analytic E[tokens/step] the runtime EMA, scheduler pricing, and
+    sim all share: exact at the endpoints, monotone in accept rate, capped
+    at k+1."""
+    assert expected_accept_tokens(0.0, K) == 1.0
+    assert expected_accept_tokens(1.0, K) == K + 1
+    assert expected_accept_tokens(0.5, 0) == 1.0
+    # geometric-series closed form at a=0.5, k=2: 1 + 1/2 + 1/4
+    assert expected_accept_tokens(0.5, 2) == pytest.approx(1.75)
+    es = [expected_accept_tokens(a / 10, K) for a in range(11)]
+    assert all(lo <= hi for lo, hi in zip(es, es[1:]))
+    assert all(1.0 <= e <= K + 1 for e in es)
+    # out-of-range inputs clamp instead of exploding
+    assert expected_accept_tokens(-0.3, K) == 1.0
+    assert expected_accept_tokens(1.7, K) == K + 1
